@@ -1,0 +1,135 @@
+"""Paper Tables 3/4 (§5): post-training learned-rotation ablation.
+
+Variants on collected K activations of the trained stand-in:
+  random SRFT / SRFT+lambda / SRFT+Cayley+lambda / SRFT+Householder(k=d/2)
+  +lambda / no-SRFT (identity base) learned R+lambda.
+Reports calibration-MSE reduction AND downstream hook DeltaPPL, checking
+the paper's central separation: no-SRFT wins MSE but loses PPL, and the
+Householder variant matches Cayley with half the parameters.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import (eval_tokens, fmt_table, hook_ppl, save_record,
+                               trained_standin)
+from repro.core import calibrate as C
+from repro.core.outliers import inject_kv_outliers
+from repro.core.transforms import Rotation, make_rotation
+from repro.models.lm import Rotations, slice_rotation
+
+
+def _stack_like(rots_stacked, per_layer: list[Rotation]) -> Rotation:
+    return Rotation(
+        matrix=jnp.stack([r.matrix for r in per_layer]),
+        lam=jnp.stack([r.lam for r in per_layer]),
+        signs=jnp.stack([r.signs for r in per_layer]),
+        kind=per_layer[0].kind,
+    )
+
+
+VARIANTS = [
+    ("random_srft", "srft", {}),
+    ("srft_lambda", "srft", dict(learn_lambda=True)),
+    ("srft_cayley_lambda", "srft",
+     dict(learn_lambda=True, learn_cayley=True)),
+    ("srft_householder_lambda", "srft",
+     dict(learn_lambda=True, learn_householder=-1)),  # -1 -> d//2
+    ("nosrft_cayley_lambda", "identity",
+     dict(learn_lambda=True, learn_cayley=True)),
+]
+
+
+def run(*, model_name: str = "smol-d64", steps: int = 120,
+        quick: bool = False) -> dict:
+    if quick:
+        steps = 50
+    cfg, model, params = trained_standin(model_name)
+    params = inject_kv_outliers(params, head_dim=cfg.head_dim, alpha=20.0)
+    d = cfg.head_dim
+    toks = eval_tokens(batch=4 if quick else 8)
+    base = hook_ppl(model, params, toks, None, None)
+
+    k_act, v_act = model.collect_kv(params, toks)  # (L,B,H,S,d)
+    L = k_act.shape[0]
+    acts = {
+        "k": k_act.reshape(L, -1, d),
+        "v": v_act.reshape(L, -1, d),
+    }
+
+    rows = []
+    for name, base_kind, kw in VARIANTS:
+        kw = dict(kw)
+        if kw.get("learn_householder") == -1:
+            kw["learn_householder"] = d // 2
+        per_kv = {}
+        mse_red = []
+        for which in ("k", "v"):
+            fitted = []
+            for i in range(L):
+                rot0 = make_rotation(base_kind, jax.random.PRNGKey(10 + i), d)
+                if kw:  # learned variants: per layer per channel (paper §5.1)
+                    rot_i, diag = C.calibrate(
+                        rot0, acts[which][i], bits=4, steps=steps,
+                        lr=1e-2, **kw,
+                    )
+                    mse_red.append(diag["mse_reduction"])
+                else:
+                    rot_i = rot0
+                fitted.append(rot_i)
+            per_kv[which] = fitted
+        rots = Rotations(
+            k=_stack_like(None, per_kv["k"]), v=_stack_like(None, per_kv["v"])
+        )
+        ppl = hook_ppl(model, params, toks, rots,
+                       dict(bits=4, scheme="per_channel", group=32))
+        n_params = {
+            "random_srft": 0,
+            "srft_lambda": d,
+            "srft_cayley_lambda": d * d + d,
+            "srft_householder_lambda": (d // 2) * d + d,
+            "nosrft_cayley_lambda": d * d + d,
+        }[name]
+        row = {
+            "variant": name, "params_per_ch": n_params,
+            "mse_reduction": round(float(jnp.mean(jnp.asarray(mse_red))), 4)
+            if mse_red else None,
+            "dppl": round(ppl - base, 4),
+        }
+        rows.append(row)
+        print(f"  {name:26s} mse_red={row['mse_reduction']} "
+              f"dPPL={row['dppl']:+.4f}")
+
+    d_ = {r["variant"]: r for r in rows}
+    record = {
+        "table": "table3_table4", "model": model_name, "fp_ppl": base,
+        "adam_steps": steps, "rows": rows,
+        "claims": {
+            "all_learned_beat_random": all(
+                d_[v]["dppl"] < d_["random_srft"]["dppl"]
+                for v in ("srft_lambda", "srft_cayley_lambda",
+                          "srft_householder_lambda")
+            ),
+            "householder_half_params_of_cayley":
+                d_["srft_householder_lambda"]["params_per_ch"]
+                < 0.6 * d_["srft_cayley_lambda"]["params_per_ch"],
+            # the paper's central separation (§5.3)
+            "nosrft_higher_mse_reduction":
+                d_["nosrft_cayley_lambda"]["mse_reduction"]
+                > d_["srft_cayley_lambda"]["mse_reduction"],
+            "nosrft_worse_ppl_than_best_srft":
+                d_["nosrft_cayley_lambda"]["dppl"]
+                > min(d_["srft_cayley_lambda"]["dppl"],
+                      d_["srft_householder_lambda"]["dppl"]),
+        },
+    }
+    save_record("calibration_ablation", record)
+    print(fmt_table(rows, ["variant", "params_per_ch", "mse_reduction",
+                           "dppl"]))
+    print("claims:", record["claims"])
+    return record
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,100 @@
+"""Shared benchmark infrastructure.
+
+Stand-in models: the paper evaluates pretrained SmolLM2/Qwen/Gemma
+checkpoints; none ship offline, so benchmarks train the paper_models
+stand-ins (same head_dim regimes) on the synthetic corpus ONCE and cache
+the trained parameters under artifacts/bench_models/.  Absolute PPLs
+differ from the paper; the orderings and mechanisms are what benchmarks
+validate (DESIGN.md §7).
+
+Outputs: every benchmark writes a JSON record into artifacts/bench/ and
+prints a compact table; benchmarks.run orchestrates them all.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.paper_models import PAPER_MODELS
+from repro.data import DataIterator, SyntheticCorpus
+from repro.launch.steps import init_train_state, make_train_step
+from repro.models import build_model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+BENCH_DIR = os.path.join(ART, "bench")
+MODEL_DIR = os.path.join(ART, "bench_models")
+
+
+def save_record(name: str, record: dict) -> str:
+    os.makedirs(BENCH_DIR, exist_ok=True)
+    path = os.path.join(BENCH_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2, default=float)
+    return path
+
+
+def trained_standin(name: str = "smol-d64", *, steps: int = 250,
+                    lr: float = 3e-3, seed: int = 0):
+    """(cfg, model, params) for a trained stand-in; cached on disk."""
+    cfg = PAPER_MODELS[name]
+    model = build_model(cfg)
+    ckpt = CheckpointManager(os.path.join(MODEL_DIR, name), keep=1)
+    params, opt = init_train_state(model, jax.random.PRNGKey(seed))
+    last = ckpt.latest_step()
+    if last == steps:
+        params, _ = ckpt.restore(steps, params)
+        return cfg, model, params
+    it = DataIterator(SyntheticCorpus(seed), batch_per_shard=8, seq_len=128)
+    step = jax.jit(make_train_step(model, lr=lr))
+    t0 = time.time()
+    for i in range(steps):
+        params, opt, m = step(params, opt, it.next())
+    print(f"[standin {name}] trained {steps} steps, "
+          f"final loss {float(m['loss']):.3f} ({time.time()-t0:.0f}s)")
+    ckpt.save(steps, params, metadata={"loss": float(m["loss"])})
+    return cfg, model, params
+
+
+def eval_tokens(seed: int = 100, *, batch: int = 8, seq_len: int = 256):
+    """Held-out eval token batch (never seen in training shards)."""
+    it = DataIterator(SyntheticCorpus(seed), batch_per_shard=batch,
+                      seq_len=seq_len)
+    return jnp.asarray(it.next()["tokens"])
+
+
+def hook_ppl(model, params, tokens, rots, kv_quant_cfg) -> float:
+    """Teacher-forced PPL with the paper's KV round-trip hook (§3.3)."""
+    logits, _ = model.forward(
+        params, tokens, rots=rots, kv_quant_cfg=kv_quant_cfg, remat=False
+    )
+    lp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), -1)
+    nll = -jnp.take_along_axis(lp, tokens[:, 1:, None], -1)[..., 0]
+    return float(jnp.exp(jnp.mean(nll)))
+
+
+def time_fn(fn, *args, iters: int = 20, warmup: int = 3) -> float:
+    """Median wall-clock seconds per call (CPU-relative numbers only)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def fmt_table(rows: list[dict], cols: list[str]) -> str:
+    widths = {c: max(len(c), *(len(str(r.get(c, ""))) for r in rows))
+              for c in cols}
+    out = ["  ".join(c.ljust(widths[c]) for c in cols)]
+    out.append("  ".join("-" * widths[c] for c in cols))
+    for r in rows:
+        out.append("  ".join(str(r.get(c, "")).ljust(widths[c]) for c in cols))
+    return "\n".join(out)

@@ -1,0 +1,126 @@
+"""Paper Table 8 / Fig 1 (the central claim): int4 KV decode vs fp16.
+
+The paper measures model.generate wall-clock on Apple M1 unified memory.
+This container has no TPU, so the claim is validated the way DESIGN.md §1
+states it: decode is HBM-bandwidth-bound, so per-step time is dominated by
+
+    t_step ~ (param_bytes + kv_bytes(prefix)) / HBM_bw + kernel_overhead
+
+and int4 wins iff kv_bytes shrinks by more than the added kernel cost.
+Both sides are computed from EXACT byte/FLOP counts of our cache layouts
+(the same arithmetic the dry-run validates against compiled HLO), per
+prefix length in {256..4096} (Table 8) and per assigned arch at 32K.
+
+A second, measured, component: CPU wall-clock of one decode_step on the
+trained d=128 stand-in with quant vs bf16 cache -- ONLY as evidence that
+the quant path adds no superlinear work (O(1) updates), not as a latency
+claim.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import (fmt_table, save_record, time_fn,
+                               trained_standin)
+from repro.launch.mesh import HW
+
+
+def decode_step_model(*, n_layers: int, n_kv: int, d: int, batch: int,
+                      prefix: int, group: int, param_bytes: float,
+                      window: int = 16) -> dict:
+    """Roofline time (s) of one decode step, bf16 vs int4 cache."""
+    kv_bf16 = 2 * 2 * n_layers * n_kv * prefix * d * batch
+    kv_int4 = 2 * n_layers * n_kv * batch * (
+        prefix * (d / 2 + 4 * d / group) + window * 4 * d
+    )
+    t_bf16 = (param_bytes + kv_bf16) / HW.HBM_BW
+    # int4 kernel overhead per step: rotate new K/V (2 d^2 matmul) per
+    # layer/head/batch + dequant-in-kernel is part of the attention read
+    # (already counted in kv_int4 bytes); query-fold adds one d^2 matmul.
+    kernel_flops = 3 * 2.0 * d * d * n_layers * n_kv * batch
+    t_int4 = (param_bytes + kv_int4) / HW.HBM_BW \
+        + kernel_flops / HW.PEAK_BF16_FLOPS
+    return {
+        "t_bf16_us": 1e6 * t_bf16, "t_int4_us": 1e6 * t_int4,
+        "delta_pct": 100.0 * (t_int4 - t_bf16) / t_bf16,
+        "kv_ratio": kv_bf16 / kv_int4,
+    }
+
+
+# Table-8 analogue: a 1.5B-class dense model (Qwen2.5-1.5B-like: 28L,
+# d=128, kv=2) and a 1B-class MQA model (Gemma-3-1B-like: 26L, d=256,
+# kv=1), single chip, batch 1 -- the paper's laptop regime mapped to one
+# v5e chip.
+MODELS = [
+    ("qwen2.5-1.5b-like", dict(n_layers=28, n_kv=2, d=128, group=32,
+                               param_bytes=3.1e9)),
+    ("gemma-3-1b-like", dict(n_layers=26, n_kv=1, d=256, group=32,
+                             param_bytes=2.0e9)),
+]
+
+
+def run(*, quick: bool = False) -> dict:
+    rows = []
+    for name, kw in MODELS:
+        for prefix in (256, 1024, 2048, 4096, 32768):
+            r = decode_step_model(batch=1, prefix=prefix, **kw)
+            rows.append({
+                "model": name, "prefix": prefix,
+                "bf16_us": round(r["t_bf16_us"], 1),
+                "int4_us": round(r["t_int4_us"], 1),
+                "delta_pct": round(r["delta_pct"], 2),
+                "kv_ratio": round(r["kv_ratio"], 2),
+            })
+    print(fmt_table(rows, ["model", "prefix", "bf16_us", "int4_us",
+                           "delta_pct", "kv_ratio"]))
+
+    # measured O(1)-update evidence on CPU (relative only)
+    cfg, model, params = trained_standin("smol-d128")
+    rots = model.init_rotations(jax.random.PRNGKey(7))
+    measured = []
+    for s_max, prefill_len in ((128, 96), (512, 480)):
+        tok = jnp.zeros((2, 1), jnp.int32)
+        it = jnp.zeros((2, prefill_len), jnp.int32)
+        cq = model.init_cache(2, s_max, quant=True)
+        cb = model.init_cache(2, s_max, quant=False)
+        _, cq = jax.jit(model.prefill)(params, rots, it, cq)
+        _, cb = jax.jit(lambda p, t, c: model.prefill(p, None, t, c))(
+            params, it, cb)
+        dq = jax.jit(model.decode_step)
+        db = jax.jit(lambda p, t, c: model.decode_step(p, None, t, c))
+        tq = time_fn(lambda: dq(params, rots, tok, cq), iters=5)
+        tb = time_fn(lambda: db(params, tok, cb), iters=5)
+        measured.append({"prefix": prefill_len, "cpu_quant_ms": tq * 1e3,
+                         "cpu_bf16_ms": tb * 1e3})
+        print(f"  CPU decode_step prefix={prefill_len}: quant "
+              f"{tq*1e3:.1f} ms vs bf16 {tb*1e3:.1f} ms")
+
+    # O(1) check: quant-path cost must not grow faster than bf16-path cost
+    growth_q = measured[1]["cpu_quant_ms"] / measured[0]["cpu_quant_ms"]
+    growth_b = measured[1]["cpu_bf16_ms"] / measured[0]["cpu_bf16_ms"]
+
+    short = [r for r in rows if r["prefix"] <= 4096]
+    record = {
+        "table": "table8_fig1", "rows": rows, "cpu_measured": measured,
+        "claims": {
+            # the paper's inversion: negative delta at every tested prefix
+            "int4_faster_at_all_prefixes_tpu_model": all(
+                r["delta_pct"] < 0 for r in rows),
+            "advantage_grows_with_prefix": rows[4]["delta_pct"]
+            < rows[0]["delta_pct"],
+            "o1_updates": growth_q < growth_b * 1.5 + 0.5,
+        },
+        "notes": (
+            "TPU columns are roofline-derived (bandwidth model), the "
+            "mechanism the paper itself attributes its win to; CPU "
+            "columns are wall-clock scaling evidence only."
+        ),
+    }
+    save_record("e2e_decode", record)
+    print("claims:", record["claims"])
+    return record
+
+
+if __name__ == "__main__":
+    run()

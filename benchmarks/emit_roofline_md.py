@@ -1,0 +1,71 @@
+"""Inject the fitted roofline table into EXPERIMENTS.md (the
+<!-- ROOFLINE_TABLE --> marker).  Run after roofline_fit --all."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "roofline")
+EXP = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def main():
+    rows = []
+    skipped = []
+    for path in sorted(glob.glob(os.path.join(ART, "*__single.json"))):
+        c = json.load(open(path))
+        if c.get("status") == "skipped":
+            skipped.append((c["arch"], c["shape"]))
+            continue
+        if c.get("status") != "ok":
+            rows.append((0, c["arch"], c["shape"], "ERROR", "", "", "", ""))
+            continue
+        r = c["roofline"]
+        mf = c["model_flops"]
+        tmax = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        frac = (mf["model_flops"] / c["chips"] / 197e12) / tmax if tmax else 0
+        rows.append((
+            frac, c["arch"], c["shape"],
+            r["bottleneck"].replace("_s", ""),
+            fmt_s(r["compute_s"]), fmt_s(r["memory_s"]),
+            fmt_s(r["collective_s"]),
+            f"{mf.get('useful_ratio') or 0:.3f}",
+        ))
+    rows.sort(key=lambda t: (t[1], t[2]))
+    lines = [
+        "| arch | shape | bottleneck | compute | memory | collective |"
+        " useful | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for frac, arch, shape, b, cs, ms, xs, ur in rows:
+        lines.append(
+            f"| {arch} | {shape} | {b} | {cs} | {ms} | {xs} | {ur} "
+            f"| {frac:.4f} |"
+        )
+    lines.append("")
+    lines.append(
+        f"(+{len(skipped)} long_500k cells recorded skipped for pure "
+        "full-attention archs per DESIGN.md §3: "
+        + ", ".join(a for a, _ in skipped) + ")"
+    )
+    table = "\n".join(lines)
+
+    text = open(EXP).read()
+    marker = "<!-- ROOFLINE_TABLE -->"
+    assert marker in text, "marker missing"
+    text = text.replace(marker, marker + "\n\n" + table, 1)
+    open(EXP, "w").write(text)
+    print(f"injected {len(rows)} rows + {len(skipped)} skips")
+
+
+if __name__ == "__main__":
+    main()

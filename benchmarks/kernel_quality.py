@@ -1,0 +1,139 @@
+"""Paper Table 7 + §4.4 Correctness: fused kernel vs Python reference.
+
+Bit-exactness of the Pallas kernel (interpret mode on CPU; compiled on
+TPU) against the pure-jnp oracle at every (d, bits, scheme) the paper
+ships: d in {64,128,256} x int4/int8 x unscaled / scaled-lambda /
+scaled_g32.  The paper reports 99.997-100% agreement with off-by-one
+rounding ties; our kernel and oracle share jnp.rint round-half-even, so
+we require EXACT agreement (DESIGN.md §1 'assumption changes').
+
+Also reproduces Table 7's quality ladder through the *kernel* path on the
+d=128 stand-in: per_token >> g32(no lambda) >> scaled_g32 == Python ref.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (eval_tokens, fmt_table, hook_ppl, save_record,
+                               trained_standin)
+from repro.core import calibrate as C
+from repro.core.outliers import inject_kv_outliers
+from repro.core.transforms import Rotation, make_rotation
+from repro.kernels.srft_quant import ops, ref
+from repro.models.lm import Rotations, slice_rotation
+
+try:  # benchmarks.ppl_scaling_schemes defines the calibrated-rots helper
+    from benchmarks.ppl_scaling_schemes import _calibrated_rots
+except ImportError:  # pragma: no cover
+    _calibrated_rots = None
+
+
+def bit_exactness(*, n: int = 2048) -> list[dict]:
+    rows = []
+    for d in (64, 128, 256):
+        for bits in (4, 8):
+            for scaled in (False, True):
+                key = jax.random.PRNGKey(d + bits)
+                rot = make_rotation("srft", key, d)
+                if scaled:
+                    lam = jnp.exp(
+                        0.3 * jax.random.normal(jax.random.PRNGKey(7), (d,))
+                    )
+                    rot = Rotation(rot.matrix, lam, rot.signs, rot.kind)
+                x = 3.0 * jax.random.normal(jax.random.PRNGKey(1), (n, d))
+                m = ref.fold_matrix(rot)
+                minv = ref.fold_inverse_matrix(rot)
+                pk, sk = ops.rotate_quantize(x, rot, group=32, bits=bits)
+                pr, sr = ref.srft_quant_ref(x, m, group=32, bits=bits)
+                agree = float(np.mean(np.asarray(pk) == np.asarray(pr)))
+                scale_rel = float(
+                    np.max(np.abs(np.asarray(sk) - np.asarray(sr))
+                           / np.maximum(np.abs(np.asarray(sr)), 1e-12))
+                )
+                # round-trip error through the kernel inverse
+                xk = ops.dequantize_rotate(pk, sk, rot, group=32, bits=bits)
+                rt_err = float(jnp.abs(
+                    xk - ref.srft_dequant_ref(pr, sr, minv, group=32,
+                                              bits=bits)
+                ).max())
+                rows.append({
+                    "d": d, "bits": bits,
+                    "variant": "scaled_g32" if scaled else "g32",
+                    "int_agreement": agree, "scale_rel_err": scale_rel,
+                    "kernel_vs_ref_rt": rt_err,
+                })
+                print(f"  d={d} b={bits} {'scaled' if scaled else 'plain'}: "
+                      f"agree={agree:.6f} scale_rel={scale_rel:.2e}")
+    return rows
+
+
+def table7_ladder(*, quick: bool = False) -> dict:
+    cfg, model, params = trained_standin("smol-d128")
+    # alpha=100: a single K coordinate 100x the rest, the strong version
+    # of the paper's Qwen layer-0 probe finding (argmax-entropy 0.17)
+    params = inject_kv_outliers(params, head_dim=cfg.head_dim, alpha=100.0,
+                                inject_v=False)
+    toks = eval_tokens(batch=4 if quick else 8)
+    base = hook_ppl(model, params, toks, None, None)
+    rots_plain = model.init_rotations(jax.random.PRNGKey(1))
+    rots_cal = _calibrated_rots(model, params, toks, rots_plain)
+
+    ladder = [
+        ("per_token", rots_plain, dict(bits=4, scheme="per_token", group=32)),
+        ("g32_no_lambda", rots_plain, dict(bits=4, scheme="per_group",
+                                           group=32)),
+        ("scaled_g32", rots_cal, dict(bits=4, scheme="per_channel_group",
+                                      group=32)),
+    ]
+    rows = []
+    for name, rots, kw in ladder:
+        ppl = hook_ppl(model, params, toks, rots, kw)
+        rows.append({"kernel_variant": name, "dppl": round(ppl - base, 4)})
+        print(f"  {name:16s} dPPL={ppl - base:+.4f}")
+    d = {r["kernel_variant"]: r["dppl"] for r in rows}
+    return {
+        "rows": rows,
+        "claims": {
+            "scaled_g32_best": d["scaled_g32"] < d["g32_no_lambda"]
+            and d["scaled_g32"] < d["per_token"],
+            # the paper's 12.5x is checkpoint-specific (28-layer Qwen with
+            # structured multi-channel outliers); what must reproduce is
+            # the fused recipe strictly winning with a clear margin
+            "reduction_over_per_token_large":
+                d["per_token"] > 1.5 * max(d["scaled_g32"], 1e-3),
+        },
+    }
+
+
+def run(*, quick: bool = False) -> dict:
+    exact = bit_exactness(n=512 if quick else 2048)
+    ladder = table7_ladder(quick=quick)
+    record = {
+        "table": "table7_and_correctness",
+        "bit_exactness": exact,
+        "quality_ladder": ladder,
+        "claims": {
+            # int4 must be exactly bit-identical; int8 admits rare
+            # off-by-one rounding ties where the kernel's fp32 dot
+            # accumulation order differs from the oracle einsum (the
+            # paper observes the same tie class, §4.4: 99.997-100%).
+            "int4_bit_exact": all(
+                r["int_agreement"] == 1.0 for r in exact if r["bits"] == 4),
+            "int8_agreement_floor": all(
+                r["int_agreement"] >= 0.99999 for r in exact
+                if r["bits"] == 8),
+            "scales_match": all(r["scale_rel_err"] < 1e-5 for r in exact),
+            **ladder["claims"],
+        },
+    }
+    save_record("kernel_quality", record)
+    print(fmt_table(exact, ["d", "bits", "variant", "int_agreement",
+                            "scale_rel_err"]))
+    print("claims:", record["claims"])
+    return record
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,99 @@
+"""Paper Table 5 (§5.6): the d=128 per-token catastrophe and its fix.
+
+On the d=128 stand-in with an injected dominant K coordinate (the paper's
+layer-0 Qwen probe finding), 4-bit per-token scaling collapses; the
+recovery ladder is:
+    per_token  >>  per_group(g32)  >  per_channel  >  per_channel+group(g16)
+Per-channel is realized as the static lambda (one forward pass over a
+calibration window, §7.1); per_channel_group is lambda + per-group --
+the deployment recipe the fused kernel implements.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import (eval_tokens, fmt_table, hook_ppl, save_record,
+                               trained_standin)
+from repro.core import calibrate as C
+from repro.core.outliers import inject_kv_outliers
+from repro.core.transforms import Rotation
+from repro.models import build_model
+from repro.models.lm import Rotations, slice_rotation
+
+
+def _calibrated_rots(model, params, toks, rots):
+    """Static per-channel lambda from one forward pass (paper §7.1)."""
+    acts = model.collect_kv(params, toks)  # {layer: (k, v)} stacked
+    k_act, v_act = acts  # (L, N, d) each
+
+    def calib_one(rot_stacked, act):
+        n_layers = act.shape[0]
+        lams = []
+        for i in range(n_layers):
+            rot_i = slice_rotation(rot_stacked, i)
+            lams.append(C.static_lambda(rot_i, act[i]))
+        import jax.numpy as jnp
+        lam = jnp.stack(lams)
+        return Rotation(rot_stacked.matrix, lam, rot_stacked.signs,
+                        rot_stacked.kind)
+
+    return Rotations(k=calib_one(rots.k, k_act), v=calib_one(rots.v, v_act))
+
+
+SCHEMES = [
+    ("per_token", dict(scheme="per_token", group=32), False),
+    ("per_group_g32", dict(scheme="per_group", group=32), False),
+    ("per_channel", dict(scheme="per_channel", group=32), True),
+    ("per_channel_group_g16", dict(scheme="per_channel_group", group=16), True),
+    ("per_token_8bit_ref", dict(scheme="per_token", group=32, bits=8), False),
+]
+
+
+def run(*, model_name: str = "smol-d128", quick: bool = False) -> dict:
+    cfg, model, params = trained_standin(model_name)
+    # the catastrophe mechanism: one dominant K coordinate (paper probe)
+    params = inject_kv_outliers(params, head_dim=cfg.head_dim, alpha=30.0,
+                                inject_v=False)
+    toks = eval_tokens(batch=4 if quick else 8)
+    base = hook_ppl(model, params, toks, None, None)
+
+    rots_plain = model.init_rotations(jax.random.PRNGKey(1))
+    rots_cal = _calibrated_rots(model, params, toks, rots_plain)
+
+    rows = []
+    for name, kw, needs_lambda in SCHEMES:
+        kw = dict(kw)
+        bits = kw.pop("bits", 4)
+        rots = rots_cal if needs_lambda else rots_plain
+        ppl = hook_ppl(model, params, toks, rots,
+                       dict(bits=bits, **kw))
+        rows.append({"scheme": name, "bits": bits,
+                     "dppl": round(ppl - base, 4)})
+        print(f"  {name:24s} b={bits}: dPPL = {ppl - base:+.4f}")
+
+    d = {r["scheme"]: r["dppl"] for r in rows}
+    record = {
+        "table": "table5", "model": model_name, "fp_ppl": base, "rows": rows,
+        "claims": {
+            # Table 5's robust content: per-token collapses at 4-bit; each
+            # single scheme recovers part; the COMBINED per-channel +
+            # per-group recipe recovers most.  The relative order of the
+            # two middle rungs is activation-structure-dependent (the
+            # paper's Qwen has many structured outliers; our stand-in
+            # injects one channel), so it is reported but not asserted.
+            "per_token_catastrophic_vs_8bit":
+                d["per_token"] > 10 * max(abs(d["per_token_8bit_ref"]), 1e-3),
+            "group_helps": d["per_group_g32"] < d["per_token"],
+            "channel_helps": d["per_channel"] < d["per_token"],
+            "combined_best": d["per_channel_group_g16"] < min(
+                d["per_channel"], d["per_group_g32"], d["per_token"]),
+        },
+    }
+    save_record("ppl_scaling_schemes", record)
+    print(fmt_table(rows, ["scheme", "bits", "dppl"]))
+    print("claims:", record["claims"])
+    return record
+
+
+if __name__ == "__main__":
+    run()

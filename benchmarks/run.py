@@ -1,0 +1,74 @@
+"""Benchmark harness: one module per paper table/figure (DESIGN.md §6).
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+
+Each module trains/loads its stand-in models (cached in
+artifacts/bench_models/), reproduces the paper table's ordering, writes a
+JSON record with machine-checked claims to artifacts/bench/, and prints a
+table.  Exit code is non-zero if any claim fails.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+BENCHES = [
+    ("memory_footprint", "Table 2 / §4.5 memory"),
+    ("kernel_throughput", "Fig 4 kernel throughput"),
+    ("kernel_quality", "Table 7 + §4.4 kernel correctness"),
+    ("residual_window", "§8 residual window sweep"),
+    ("e2e_decode", "Table 8 / Fig 1 decode latency model"),
+    ("ppl_rotations", "Fig 2 / Table 1 rotation quality"),
+    ("ppl_scaling_schemes", "Table 5 scaling schemes"),
+    ("calibration_ablation", "Tables 3/4 learned rotations"),
+    ("roofline", "§Roofline dry-run table"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced seeds/steps/batches")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names")
+    args = ap.parse_args()
+
+    only = set(args.only.split(",")) if args.only else None
+    failures = []
+    all_claims = {}
+    for name, desc in BENCHES:
+        if only and name not in only:
+            continue
+        print(f"\n=== {name}: {desc} ===")
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            record = mod.run(quick=args.quick)
+            claims = record.get("claims", {})
+            all_claims[name] = claims
+            bad = [k for k, v in claims.items() if v is False]
+            if bad:
+                failures.append((name, bad))
+                print(f"[CLAIM-FAIL] {name}: {bad}")
+            print(f"[done] {name} in {time.time()-t0:.0f}s")
+        except Exception as e:  # keep running the rest
+            failures.append((name, [f"{type(e).__name__}: {e}"]))
+            traceback.print_exc()
+
+    print("\n================ SUMMARY ================")
+    for name, claims in all_claims.items():
+        status = "ok" if all(v is not False for v in claims.values()) \
+            else "FAIL"
+        print(f"  {name:24s} {status}  "
+              f"({sum(bool(v) for v in claims.values())}/{len(claims)} "
+              f"claims hold)")
+    if failures:
+        print("FAILURES:", failures)
+        sys.exit(1)
+    print("all benchmark claims hold")
+
+
+if __name__ == "__main__":
+    main()

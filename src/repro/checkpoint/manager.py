@@ -1,0 +1,140 @@
+"""Checkpoint manager: atomic step checkpoints, keep-k GC, exact resume,
+and elastic resharding (restore onto a different mesh).
+
+Format: one directory per step, `<dir>/step_%08d/`, containing
+  * arrays.npz      — flattened pytree leaves (host numpy)
+  * meta.json       — treedef + leaf dtypes/shapes + user metadata
+                      (data-iterator state, step, mesh shape, ...)
+Writes go to `step_XXX.tmp` then os.rename -> atomic visibility; a crash
+mid-write never corrupts the latest checkpoint (fault-tolerance 101 for
+preemptible fleets).
+
+Elastic resharding: arrays are saved as full (unsharded) host values;
+`restore(..., sharding_fn)` re-places each leaf with the *new* mesh's
+NamedSharding — so a job checkpointed on (16,16) restarts cleanly on
+(8,16) or (2,16,16).  At 1000+-node scale you would write per-shard
+files (one npz per host) — the single-file layout here keeps the same
+API surface with the container's single host.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+
+import jax
+import ml_dtypes
+import numpy as np
+
+__all__ = ["CheckpointManager"]
+
+# npz cannot store ml_dtypes (bfloat16, fp8, int4); store a same-width
+# integer view and re-view on restore using the recorded dtype string.
+_VIEW_DTYPES = {
+    "bfloat16": np.uint16,
+    "float8_e4m3fn": np.uint8,
+    "float8_e5m2": np.uint8,
+}
+
+
+def _to_storable(a: np.ndarray) -> np.ndarray:
+    view = _VIEW_DTYPES.get(str(a.dtype))
+    return a.view(view) if view is not None else a
+
+
+def _from_storable(a: np.ndarray, dtype_str: str) -> np.ndarray:
+    if dtype_str in _VIEW_DTYPES:
+        return a.view(getattr(ml_dtypes, dtype_str))
+    return a
+
+
+def _flatten_with_paths(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, tree, *, metadata: dict | None = None) -> str:
+        final = os.path.join(self.directory, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+
+        leaves, treedef = _flatten_with_paths(tree)
+        host_leaves = [np.asarray(jax.device_get(x)) for x in leaves]
+        np.savez(
+            os.path.join(tmp, "arrays.npz"),
+            **{f"leaf_{i}": _to_storable(a)
+               for i, a in enumerate(host_leaves)},
+        )
+        meta = {
+            "step": step,
+            "n_leaves": len(host_leaves),
+            "treedef": str(treedef),
+            "dtypes": [str(a.dtype) for a in host_leaves],
+            "shapes": [list(a.shape) for a in host_leaves],
+            "metadata": metadata or {},
+        }
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomic visibility
+        self._gc()
+        return final
+
+    # --------------------------------------------------------------- restore
+    def latest_step(self) -> int | None:
+        steps = [
+            int(d.split("_")[1])
+            for d in os.listdir(self.directory)
+            if d.startswith("step_") and not d.endswith(".tmp")
+        ]
+        return max(steps) if steps else None
+
+    def restore(self, step: int, example_tree, *, sharding_fn=None):
+        """Restore into the structure of ``example_tree``.
+
+        sharding_fn(leaf_index, example_leaf) -> jax.sharding.Sharding or
+        None; when given, each leaf is device_put with the new sharding
+        (elastic re-mesh).  Returns (tree, metadata).
+        """
+        path = os.path.join(self.directory, f"step_{step:08d}")
+        with open(os.path.join(path, "meta.json")) as f:
+            meta = json.load(f)
+        data = np.load(os.path.join(path, "arrays.npz"))
+        leaves = [
+            _from_storable(data[f"leaf_{i}"], meta["dtypes"][i])
+            for i in range(meta["n_leaves"])
+        ]
+        ex_leaves, treedef = jax.tree.flatten(example_tree)
+        assert len(leaves) == len(ex_leaves), (
+            f"checkpoint has {len(leaves)} leaves, example {len(ex_leaves)}"
+        )
+        out = []
+        for i, (saved, ex) in enumerate(zip(leaves, ex_leaves)):
+            arr = saved.astype(ex.dtype) if hasattr(ex, "dtype") else saved
+            if sharding_fn is not None:
+                sh = sharding_fn(i, ex)
+                arr = jax.device_put(arr, sh) if sh is not None else (
+                    jax.device_put(arr)
+                )
+            out.append(arr)
+        return jax.tree.unflatten(treedef, out), meta["metadata"]
+
+    # ------------------------------------------------------------------- gc
+    def _gc(self):
+        steps = sorted(
+            int(d.split("_")[1])
+            for d in os.listdir(self.directory)
+            if d.startswith("step_") and not d.endswith(".tmp")
+        )
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"))

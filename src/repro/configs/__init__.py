@@ -1,0 +1,77 @@
+"""Config registry: ``get_config(arch_id)`` + reduced smoke variants."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import SHAPES, ModelConfig, MoEConfig, ShapeConfig
+
+_ARCH_MODULES = {
+    "zamba2-7b": "zamba2_7b",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "dbrx-132b": "dbrx_132b",
+    "qwen3-14b": "qwen3_14b",
+    "qwen1.5-110b": "qwen1_5_110b",
+    "gemma-7b": "gemma_7b",
+    "internlm2-1.8b": "internlm2_1_8b",
+    "llava-next-34b": "llava_next_34b",
+    "whisper-large-v3": "whisper_large_v3",
+    "xlstm-1.3b": "xlstm_1_3b",
+}
+
+ARCH_IDS = list(_ARCH_MODULES)
+
+# archs with sub-quadratic backbones: the only ones running long_500k
+LONG_CONTEXT_ARCHS = ("zamba2-7b", "xlstm-1.3b")
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    import importlib
+
+    if arch_id in _ARCH_MODULES:
+        mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch_id]}")
+        return mod.CONFIG
+    from repro.configs.paper_models import PAPER_MODELS
+
+    if arch_id in PAPER_MODELS:
+        return PAPER_MODELS[arch_id]
+    raise KeyError(f"unknown arch: {arch_id}; known: {ARCH_IDS}")
+
+
+def reduced(cfg: ModelConfig) -> ModelConfig:
+    """CPU-smoke variant of the same family: small layers/width/experts."""
+    kw = dict(
+        name=cfg.name + "-reduced",
+        n_layers=2,
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 2) if cfg.n_kv_heads < cfg.n_heads else 4,
+        head_dim=32 if cfg.head_dim % 32 == 0 else 28,  # keep mixed-radix case
+        d_ff=256 if cfg.d_ff else 0,
+        vocab_size=128,
+    )
+    if cfg.moe is not None:
+        kw["moe"] = MoEConfig(
+            n_experts=4, top_k=2, d_expert=64, group_size=32,
+            capacity_factor=cfg.moe.capacity_factor,
+        )
+        kw["d_ff"] = 64
+    if cfg.xlstm is not None:
+        kw["n_layers"] = cfg.xlstm.slstm_period  # one sLSTM + mLSTMs
+        kw["head_dim"] = 32
+    if cfg.shared_attn_period:
+        kw["n_layers"] = cfg.shared_attn_period + 1  # one shared-attn firing
+    if cfg.encoder_layers:
+        kw["encoder_layers"] = 2
+    out = dataclasses.replace(cfg, **kw)
+    return out.validated()
+
+
+__all__ = [
+    "ARCH_IDS",
+    "LONG_CONTEXT_ARCHS",
+    "SHAPES",
+    "ShapeConfig",
+    "ModelConfig",
+    "get_config",
+    "reduced",
+]

@@ -1,0 +1,21 @@
+"""gemma-7b [dense]: 28L d_model=3072 16H (kv=16, MHA) d_ff=24576
+vocab=256000, GeGLU, head_dim=256 [arXiv:2403.08295].  d=256 is the
+paper's Householder-lossless regime (its Table 4)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma-7b",
+    family="dense",
+    n_layers=28,
+    d_model=3072,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=256,
+    d_ff=24576,
+    vocab_size=256000,
+    ffn_activation="geglu",
+    rms_unit_offset=True,
+    embed_scale=True,
+    tie_embeddings=True,
+    rope_theta=10000.0,
+).validated()

@@ -1,0 +1,21 @@
+"""llava-next-34b [vlm]: 60L d_model=7168 56H (GQA kv=8) d_ff=20480
+vocab=64000 [hf:llava-hf/llava-v1.6 family].  The anyres-tiling vision
+frontend is a STUB per assignment: ``input_specs()`` provides precomputed
+patch embeddings (B, n_patches, d_model) that the backbone consumes
+alongside token embeddings."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-34b",
+    family="vlm",
+    n_layers=60,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=20480,
+    vocab_size=64000,
+    rope_theta=5e6,
+    frontend="vision",
+    n_patches=1152,
+).validated()

@@ -1,0 +1,56 @@
+"""The paper's own evaluation models, at in-repo-trainable scale.
+
+The paper evaluates SmolLM2-{135M,360M,1.7B} (d_head=64), Qwen2.5-1.5B
+(d_head=128) and Gemma-3 1B (d_head=256).  No pretrained checkpoints are
+available offline, so these configs define *small trainable stand-ins*
+with the same head_dim regimes; benchmarks train them on the synthetic
+corpus and measure real ΔPPL (DESIGN.md §7 / EXPERIMENTS.md).
+"""
+from repro.configs.base import ModelConfig
+
+# head_dim=64 regime (paper's SmolLM2 testbed; GQA like 135M/360M)
+SMOL_D64 = ModelConfig(
+    name="smol-d64",
+    family="dense",
+    n_layers=4,
+    d_model=256,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=64,
+    d_ff=1024,
+    vocab_size=256,
+    tie_embeddings=True,
+).validated()
+
+# head_dim=128 regime (paper's Qwen2.5-1.5B testbed)
+SMOL_D128 = ModelConfig(
+    name="smol-d128",
+    family="dense",
+    n_layers=4,
+    d_model=512,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=128,
+    d_ff=1536,
+    vocab_size=256,
+    tie_embeddings=True,
+).validated()
+
+# head_dim=256 regime (paper's Gemma-3 1B testbed; MQA)
+SMOL_D256 = ModelConfig(
+    name="smol-d256",
+    family="dense",
+    n_layers=4,
+    d_model=512,
+    n_heads=4,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=1536,
+    vocab_size=256,
+    ffn_activation="geglu",
+    rms_unit_offset=True,
+    embed_scale=True,
+    tie_embeddings=True,
+).validated()
+
+PAPER_MODELS = {m.name: m for m in [SMOL_D64, SMOL_D128, SMOL_D256]}

@@ -1,0 +1,26 @@
+"""whisper-large-v3 [audio]: enc-dec, 32L (each side) d_model=1280 20H
+(MHA kv=20) d_ff=5120 vocab=51866 [arXiv:2212.04356].  The conv frontend
+is a STUB per assignment: ``input_specs()`` provides precomputed frame
+embeddings for the encoder.  Decoder self-attn KV and (read-many)
+cross-attn KV are both int4-quantized.  Shape interpretation (DESIGN.md):
+train/prefill seq_len applies to both encoder frames and decoder tokens;
+decode shapes grow the decoder self-KV to seq_len with a fixed 1500-frame
+encoder context."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-large-v3",
+    family="audio",
+    n_layers=32,
+    d_model=1280,
+    n_heads=20,
+    n_kv_heads=20,
+    head_dim=64,
+    d_ff=5120,
+    vocab_size=51866,
+    ffn_activation="gelu",
+    encoder_layers=32,
+    cross_attention=True,
+    frontend="audio",
+    rope_theta=0.0,  # absolute positions, no RoPE
+).validated()

@@ -1,0 +1,20 @@
+"""xlstm-1.3b [ssm]: 48L d_model=2048 4H vocab=50304, sLSTM + mLSTM blocks
+[arXiv:2405.04517].  No attention KV cache exists -- the paper's technique
+is inapplicable (DESIGN.md §3); beyond-paper, the mLSTM matrix memory can
+be int8 per-group quantized with the same abs-max machinery
+(kv_quant flag reused for that state path)."""
+from repro.configs.base import ModelConfig, XLSTMConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-1.3b",
+    family="ssm",
+    n_layers=48,
+    d_model=2048,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=512,  # d_model / n_heads (recurrent head width, not attn)
+    d_ff=0,  # blocks carry their own up/down projections
+    vocab_size=50304,
+    xlstm=XLSTMConfig(slstm_period=8, expand=2, qk_dim_factor=0.5),
+    kv_quant=False,
+).validated()

@@ -1,0 +1,24 @@
+"""zamba2-7b [hybrid]: Mamba2 backbone + shared attention blocks.
+
+81L d_model=3584 32H (GQA kv=32) d_ff=14336 vocab=32000 ssm_state=64
+[arXiv:2411.15242].  head_dim = 3584/32 = 112 -- non-power-of-two, the
+paper's mixed-radix SRFT case (kv_group falls back to 16).
+Shared attention block applied every 6 Mamba2 blocks (weights shared
+across applications, per the Zamba design).
+"""
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-7b",
+    family="hybrid",
+    n_layers=81,
+    d_model=3584,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=112,
+    d_ff=14336,
+    vocab_size=32000,
+    ssm=SSMConfig(d_state=64, d_conv=4, expand=2, chunk=256),
+    shared_attn_period=6,
+    rope_theta=10000.0,
+).validated()

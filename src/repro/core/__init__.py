@@ -1,0 +1,30 @@
+"""Core: the paper's contribution — SRFT rotation, quantizers, int4 KV cache.
+
+Public API:
+    transforms:  srft_forward/inverse, srht_forward/inverse, Rotation,
+                 make_rotation, transform_matrix
+    quant:       quantize_per_token/group/tensor + dequant, Quantized
+    packing:     pack_int4 / unpack_int4
+    kvcache:     QuantKVCache, BF16KVCache, init_cache, prefill,
+                 decode_update
+    calibrate:   static_lambda, calibrate (learned lambda/Cayley/Householder)
+    quant_attention_ref: rotated-space decode attention oracle
+"""
+from repro.core import calibrate, kvcache, packing, quant, transforms
+from repro.core.quant_attention_ref import (
+    decode_attention_bf16,
+    decode_attention_quant,
+)
+from repro.core.transforms import Rotation, make_rotation
+
+__all__ = [
+    "calibrate",
+    "kvcache",
+    "packing",
+    "quant",
+    "transforms",
+    "Rotation",
+    "make_rotation",
+    "decode_attention_quant",
+    "decode_attention_bf16",
+]

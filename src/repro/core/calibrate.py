@@ -1,0 +1,245 @@
+"""Post-training rotation calibration (paper §5).
+
+Learnable components layered on the fixed SRFT base:
+  * per-coordinate scale lambda (d params/channel)         -- §5.1 (1)
+  * Cayley/exp-map orthogonal R = expm(U - U^T)            -- §5.1 (2)
+  * Householder product of k reflectors (k=d/2 default)    -- Table 3/4
+  * "no-SRFT" ablation: learn R + lambda from identity base -- §5.3
+
+Training: 200-300 Adam steps minimizing reconstruction MSE
+|| inverse(quantize(forward(x))) - x ||^2 over a batch of collected K/V
+activations, with a straight-through estimator through the rounding.
+Per layer per channel (K and V fit separately).
+
+Also includes the deployment-path *static* lambda (one forward pass:
+lambda_d = 1 / per_channel_max(SRFT-output)_d, §7.1) with the paper's
+window-uniform strategy (§7.3 "calibration alternatives").
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.core.transforms import Rotation, make_rotation
+from repro.optim.adam import AdamState, adam_init, adam_update
+
+__all__ = [
+    "static_lambda",
+    "apply_static_lambda",
+    "CalibParams",
+    "init_calib_params",
+    "compose_rotation",
+    "calibrate",
+    "reconstruction_mse",
+]
+
+
+# ---------------------------------------------------------------------------
+# Static (train-free) per-channel lambda -- the deployment default (§7.1)
+# ---------------------------------------------------------------------------
+
+def static_lambda(rot: Rotation, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """lambda_d = 1 / per_channel_max(|SRFT(x)|_d) over all vectors in x.
+
+    Window-uniform strategy: the max is over the full calibration window
+    (§7.3: wider window -> larger observed outliers -> smaller lambda ->
+    smaller per-group LSB after rescaling).
+    """
+    base = Rotation(rot.matrix, jnp.ones_like(rot.lam), rot.signs, rot.kind)
+    y = base.forward(x.reshape(-1, x.shape[-1]))
+    ch_max = jnp.max(jnp.abs(y), axis=0)
+    return 1.0 / jnp.maximum(ch_max, eps)
+
+
+def apply_static_lambda(rot: Rotation, lam: jax.Array) -> Rotation:
+    return Rotation(rot.matrix, lam.astype(jnp.float32), rot.signs, rot.kind)
+
+
+# ---------------------------------------------------------------------------
+# Learned variants
+# ---------------------------------------------------------------------------
+
+class CalibParams(NamedTuple):
+    """Trainable calibration parameters (subset active per variant)."""
+
+    log_lam: jax.Array | None  # (d,) lambda = exp(log_lam) > 0
+    cayley_u: jax.Array | None  # (d, d) R = expm(U - U^T)
+    householder_v: jax.Array | None  # (k, d) reflectors
+
+
+def init_calib_params(
+    d: int,
+    *,
+    learn_lambda: bool = True,
+    learn_cayley: bool = False,
+    learn_householder: int = 0,  # k reflectors; 0 = off
+    key: jax.Array | None = None,
+) -> CalibParams:
+    """Near-identity init (paper: 'near-identity initialization')."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    log_lam = jnp.zeros((d,), jnp.float32) if learn_lambda else None
+    cayley_u = (
+        1e-3 * jax.random.normal(k1, (d, d), jnp.float32) if learn_cayley else None
+    )
+    householder_v = None
+    if learn_householder:
+        # v ~ e_i + small noise => reflector ~ near a coordinate flip;
+        # product of near-axis-aligned reflectors is near +/- identity and
+        # orthogonal throughout training by construction.
+        base = jnp.eye(d, dtype=jnp.float32)[:learn_householder]
+        householder_v = base + 1e-3 * jax.random.normal(
+            k2, (learn_householder, d), jnp.float32
+        )
+    return CalibParams(log_lam, cayley_u, householder_v)
+
+
+def _cayley_matrix(u: jax.Array) -> jax.Array:
+    """R = (I - A/2)^{-1} (I + A/2), A = U - U^T.  Exactly orthogonal,
+    differentiable via solve (numerically tamer than expm under autodiff
+    on CPU; the paper computes expm on CPU for the same reason)."""
+    a = u - u.T
+    d = u.shape[0]
+    eye = jnp.eye(d, dtype=u.dtype)
+    return jax.scipy.linalg.solve(eye - 0.5 * a, eye + 0.5 * a)
+
+
+def _householder_matrix(v: jax.Array) -> jax.Array:
+    """R = prod_i (I - 2 v_i v_i^T / ||v_i||^2), k reflectors, (k, d)."""
+    d = v.shape[-1]
+
+    def body(acc, vi):
+        w = vi / jnp.maximum(jnp.linalg.norm(vi), 1e-12)
+        acc = acc - 2.0 * jnp.outer(w, w @ acc)
+        return acc, None
+
+    r, _ = jax.lax.scan(body, jnp.eye(d, dtype=v.dtype), v)
+    return r
+
+
+def compose_rotation(base: Rotation, p: CalibParams) -> Rotation:
+    """Fold learned R and lambda into the base: matrix = R @ B, lam = exp(log_lam)."""
+    mat = base.matrix
+    if p.cayley_u is not None:
+        mat = _cayley_matrix(p.cayley_u) @ mat
+    if p.householder_v is not None:
+        mat = _householder_matrix(p.householder_v) @ mat
+    lam = base.lam
+    if p.log_lam is not None:
+        lam = jnp.exp(p.log_lam)
+    return Rotation(mat, lam, base.signs, base.kind)
+
+
+# ---------------------------------------------------------------------------
+# Reconstruction objective with straight-through rounding
+# ---------------------------------------------------------------------------
+
+def _ste_roundtrip(y: jax.Array, bits: int, group: int) -> jax.Array:
+    """Differentiable quantization round-trip, STE on round() ONLY.
+
+    The naive ``y + stop_grad(deq - y)`` form kills the learning signal:
+    with an orthonormal R the reconstruction error norm ||c/lam|| is then
+    *independent* of R under autodiff (c fully stop-gradiented) and the
+    lambda gradient degenerates to "grow every lambda".  Keeping the
+    abs-max scale differentiable (LSQ/SpinQuant-style) lets gradients see
+    how the rotation re-shapes the per-group dynamic range.
+    """
+    d = y.shape[-1]
+    yg = y.reshape(y.shape[:-1] + (d // group, group))
+    m = float(quant.qmax(bits))
+    absmax = jnp.max(jnp.abs(yg), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-12) / m
+    u = yg / scale
+    u_q = jnp.clip(jnp.rint(u), -m, m)
+    u_ste = u + jax.lax.stop_gradient(u_q - u)  # STE through rint+clip only
+    return (u_ste * scale).reshape(y.shape)
+
+
+def reconstruction_mse(
+    rot: Rotation, x: jax.Array, *, bits: int = 4, group: int | None = None
+) -> jax.Array:
+    """|| inverse(Q(forward(x))) - x ||^2 averaged over vectors."""
+    d = x.shape[-1]
+    g = group or d  # per-token = single group spanning d
+    y = rot.forward(x)
+    y_hat = _ste_roundtrip(y, bits, g)
+    x_hat = rot.inverse(y_hat)
+    return jnp.mean(jnp.square(x_hat - x.astype(jnp.float32)))
+
+
+def calibrate(
+    base: Rotation,
+    activations: jax.Array,  # (N, d) collected K or V vectors
+    *,
+    bits: int = 4,
+    group: int | None = None,
+    steps: int = 300,
+    lr: float = 3e-3,
+    batch: int = 1024,
+    learn_lambda: bool = True,
+    learn_cayley: bool = False,
+    learn_householder: int = 0,
+    key: jax.Array | None = None,
+):
+    """Adam on reconstruction MSE (paper: 200-300 steps, 1-5 min/model).
+
+    Returns (rotation, diagnostics) where diagnostics carries the
+    initial/final MSE for Table-3-style 'MSE reduction' reporting.
+    """
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    params = init_calib_params(
+        base.d,
+        learn_lambda=learn_lambda,
+        learn_cayley=learn_cayley,
+        learn_householder=learn_householder,
+        key=key,
+    )
+    # drop inactive leaves so Adam doesn't trace None
+    active = {
+        name: getattr(params, name)
+        for name in params._fields
+        if getattr(params, name) is not None
+    }
+
+    def to_params(act: dict) -> CalibParams:
+        return CalibParams(
+            act.get("log_lam"), act.get("cayley_u"), act.get("householder_v")
+        )
+
+    def loss_fn(act, xb):
+        rot = compose_rotation(base, to_params(act))
+        return reconstruction_mse(rot, xb, bits=bits, group=group)
+
+    opt = adam_init(active)
+    n = activations.shape[0]
+
+    @jax.jit
+    def step_fn(act, opt: AdamState, k):
+        idx = jax.random.randint(k, (min(batch, n),), 0, n)
+        xb = activations[idx]
+        loss, grads = jax.value_and_grad(loss_fn)(act, xb)
+        act, opt = adam_update(grads, opt, act, lr=lr)
+        return act, opt, loss
+
+    mse0 = float(reconstruction_mse(
+        compose_rotation(base, to_params(active)), activations[: min(4096, n)],
+        bits=bits, group=group,
+    ))
+    keys = jax.random.split(key, steps)
+    for i in range(steps):
+        active, opt, _ = step_fn(active, opt, keys[i])
+    rot = compose_rotation(base, to_params(active))
+    mse1 = float(reconstruction_mse(
+        rot, activations[: min(4096, n)], bits=bits, group=group
+    ))
+    diag = {
+        "mse_initial": mse0,
+        "mse_final": mse1,
+        "mse_reduction": 0.0 if mse0 == 0 else 1.0 - mse1 / mse0,
+    }
+    return rot, diag

@@ -1,0 +1,64 @@
+"""KV quantization round-trip hooks (the paper's §3.3 'KV-cache simulation
+forward-hook'): route K/V through rotate -> quantize -> dequantize ->
+inverse-rotate before attention, so a full forward pass measures hook ΔPPL
+exactly as the paper does on k_proj/v_proj outputs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.core.transforms import Rotation
+
+__all__ = ["kv_roundtrip", "make_roundtrip"]
+
+
+def _roundtrip_one(
+    x: jax.Array, rot: Rotation, *, bits: int, scheme: str, group: int
+) -> jax.Array:
+    """(B,H,S,d) -> same, with quantization error injected."""
+    d = x.shape[-1]
+    y = rot.forward(x)  # lambda applied here (per-channel scaling)
+    if scheme == "per_token":
+        q = quant.quantize_per_token(y, bits)
+        yq = quant.dequantize_per_token(q)
+    elif scheme == "per_tensor":
+        q = quant.quantize_per_tensor(y, bits)
+        yq = quant.dequantize_per_tensor(q)
+    elif scheme in ("per_group", "per_channel_group"):
+        # per-channel part is rot.lam; group part here
+        q = quant.quantize_per_group(y, bits, group)
+        yq = quant.dequantize_per_group(q, group)
+    elif scheme == "per_channel":
+        # lambda rescale + single per-token scale over the rescaled vector
+        q = quant.quantize_per_token(y, bits)
+        yq = quant.dequantize_per_token(q)
+    else:
+        raise ValueError(f"unknown scheme {scheme}")
+    return rot.inverse(yq).astype(x.dtype)
+
+
+def kv_roundtrip(
+    k: jax.Array,
+    v: jax.Array,
+    rot_k: Rotation,
+    rot_v: Rotation,
+    *,
+    bits: int = 4,
+    scheme: str = "per_group",
+    group: int = 32,
+):
+    return (
+        _roundtrip_one(k, rot_k, bits=bits, scheme=scheme, group=group),
+        _roundtrip_one(v, rot_v, bits=bits, scheme=scheme, group=group),
+    )
+
+
+def make_roundtrip(rot_k: Rotation, rot_v: Rotation, *, bits=4,
+                   scheme="per_group", group=32):
+    def fn(k, v):
+        return kv_roundtrip(
+            k, v, rot_k, rot_v, bits=bits, scheme=scheme, group=group
+        )
+    return fn

@@ -1,0 +1,288 @@
+"""Quantized KV cache with residual window (paper §7.2, `SRFTInt4Cache`).
+
+Functional JAX analogue of the paper's HuggingFace ``Cache`` subclass:
+
+  (i)   K/V stored between decode steps as int4 codes (nibble-packed uint8)
+        + per-group fp32 scales -- 3.2x theoretical compression at d=128/g=32;
+  (ii)  a per-layer rotation (SRFT base, optional learned R, per-channel
+        lambda) applied before quantization;
+  (iii) a fp32 *residual window* of the W most recent tokens, re-quantized
+        and flushed into packed storage when full (W=16 default, §8);
+  (iv)  decode updates are O(1) in prefix length.  Where the paper adds a
+        dequant-prefix cache to get O(1), we instead never dequant-rotate
+        the prefix: attention runs in rotated space (DESIGN.md §5.1) --
+        scores use q_eff = diag(1/lam) @ B @ q against the stored
+        lam*B*k values, and only the single output vector is
+        inverse-rotated.  This removes the paper's fp16-prefix memory
+        doubling (its Table 8 dagger failure mode).
+
+All state is a pytree of arrays with static shapes, so the cache threads
+through jax.jit / scan-over-layers (leading layer axis) unchanged.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing, quant
+from repro.core.transforms import Rotation
+
+__all__ = ["QuantKVCache", "BF16KVCache", "init_cache", "init_bf16_cache"]
+
+
+class QuantKVCache(NamedTuple):
+    """Per-layer quantized KV state (stack a leading L axis for the model).
+
+    Packed storage holds rotated-and-lambda-rescaled values; the residual
+    window holds the same representation unquantized (fp32), so attention
+    treats both parts uniformly in rotated space.
+    """
+
+    k_packed: jax.Array  # (B, Hkv, S_max, d//2) uint8
+    k_scales: jax.Array  # (B, Hkv, S_max, d//g) f32
+    v_packed: jax.Array  # (B, Hkv, S_max, d//2) uint8
+    v_scales: jax.Array  # (B, Hkv, S_max, d//g) f32
+    k_residual: jax.Array  # (B, Hkv, W, d) f32, rotated space
+    v_residual: jax.Array  # (B, Hkv, W, d) f32, rotated space
+    length: jax.Array  # () int32, total tokens stored
+
+    @property
+    def window(self) -> int:
+        return self.k_residual.shape[-2]
+
+    @property
+    def s_max(self) -> int:
+        return self.k_packed.shape[-2]
+
+    @property
+    def head_dim(self) -> int:
+        return self.k_residual.shape[-1]
+
+    @property
+    def group(self) -> int:
+        return self.head_dim // self.k_scales.shape[-1]
+
+
+class BF16KVCache(NamedTuple):
+    """Uncompressed baseline (DynamicCache analogue, static-shape)."""
+
+    k: jax.Array  # (B, Hkv, S_max, d) bf16
+    v: jax.Array  # (B, Hkv, S_max, d) bf16
+    length: jax.Array  # () int32
+
+
+def init_cache(
+    batch: int,
+    n_kv_heads: int,
+    s_max: int,
+    head_dim: int,
+    *,
+    group: int = 32,
+    window: int = 16,
+    dtype_scales=jnp.float32,
+) -> QuantKVCache:
+    if head_dim % 2 or head_dim % group:
+        raise ValueError(f"head_dim={head_dim} must divide 2 and group={group}")
+    shape_p = (batch, n_kv_heads, s_max, head_dim // 2)
+    shape_s = (batch, n_kv_heads, s_max, head_dim // group)
+    shape_r = (batch, n_kv_heads, window, head_dim)
+    return QuantKVCache(
+        k_packed=jnp.zeros(shape_p, jnp.uint8),
+        k_scales=jnp.zeros(shape_s, dtype_scales),
+        v_packed=jnp.zeros(shape_p, jnp.uint8),
+        v_scales=jnp.zeros(shape_s, dtype_scales),
+        k_residual=jnp.zeros(shape_r, jnp.float32),
+        v_residual=jnp.zeros(shape_r, jnp.float32),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def init_bf16_cache(
+    batch: int, n_kv_heads: int, s_max: int, head_dim: int
+) -> BF16KVCache:
+    shape = (batch, n_kv_heads, s_max, head_dim)
+    return BF16KVCache(
+        k=jnp.zeros(shape, jnp.bfloat16),
+        v=jnp.zeros(shape, jnp.bfloat16),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Quantize / dequantize helpers (rotated space; per-group abs-max)
+# ---------------------------------------------------------------------------
+
+def _quantize_rotated(y: jax.Array, group: int, bits: int = 4):
+    """Rotated values (..., d) -> (codes_packed (..., d//2), scales (..., d//g))."""
+    q = quant.quantize_per_group(y, bits, group)
+    return packing.pack_int4(q.codes), q.scales
+
+
+def _dequantize_rotated(
+    packed: jax.Array, scales: jax.Array, group: int
+) -> jax.Array:
+    codes = packing.unpack_int4(packed)
+    q = quant.Quantized(codes, scales, 4)
+    return quant.dequantize_per_group(q, group)
+
+
+# ---------------------------------------------------------------------------
+# Update paths
+# ---------------------------------------------------------------------------
+
+def prefill(
+    cache: QuantKVCache,
+    rot_k: Rotation,
+    rot_v: Rotation,
+    k: jax.Array,  # (B, Hkv, S, d) raw (post-RoPE)
+    v: jax.Array,  # (B, Hkv, S, d)
+) -> QuantKVCache:
+    """Bulk-insert S prompt tokens: quantize all but the last S mod W.
+
+    The flushed portion is the fused-kernel path (rotate + lambda +
+    per-group abs-max + pack in one pass over the bulk of the prompt).
+    """
+    B, H, S, d = k.shape
+    W = cache.window
+    g = cache.group
+    packed_len = (S // W) * W
+
+    kr = rot_k.forward(k)  # (B,H,S,d) fp32, rotated + lambda
+    vr = rot_v.forward(v)
+
+    kp, ks = _quantize_rotated(kr[..., :packed_len, :], g)
+    vp, vs = _quantize_rotated(vr[..., :packed_len, :], g)
+
+    k_packed = jax.lax.dynamic_update_slice(cache.k_packed, kp, (0, 0, 0, 0))
+    k_scales = jax.lax.dynamic_update_slice(cache.k_scales, ks, (0, 0, 0, 0))
+    v_packed = jax.lax.dynamic_update_slice(cache.v_packed, vp, (0, 0, 0, 0))
+    v_scales = jax.lax.dynamic_update_slice(cache.v_scales, vs, (0, 0, 0, 0))
+
+    n_res = S - packed_len
+    k_res = cache.k_residual
+    v_res = cache.v_residual
+    if n_res:  # static python int
+        k_res = jax.lax.dynamic_update_slice(
+            k_res, kr[..., packed_len:, :], (0, 0, 0, 0)
+        )
+        v_res = jax.lax.dynamic_update_slice(
+            v_res, vr[..., packed_len:, :], (0, 0, 0, 0)
+        )
+    return QuantKVCache(
+        k_packed, k_scales, v_packed, v_scales, k_res, v_res,
+        jnp.asarray(S, jnp.int32),
+    )
+
+
+def decode_update(
+    cache: QuantKVCache,
+    rot_k: Rotation,
+    rot_v: Rotation,
+    k: jax.Array,  # (B, Hkv, 1, d)
+    v: jax.Array,  # (B, Hkv, 1, d)
+) -> QuantKVCache:
+    """Append one token; flush the residual window into int4 when it fills.
+
+    O(1) in prefix length: one d x d rotation matmul for the new token, a
+    write into the W-slot ring, and -- every W-th step -- one W-token
+    quantize+pack.
+    """
+    W = cache.window
+    g = cache.group
+    kr = rot_k.forward(k)  # (B,H,1,d)
+    vr = rot_v.forward(v)
+
+    idx = cache.length % W  # slot for this token
+    k_res = jax.lax.dynamic_update_slice(cache.k_residual, kr, (0, 0, idx, 0))
+    v_res = jax.lax.dynamic_update_slice(cache.v_residual, vr, (0, 0, idx, 0))
+    new_len = cache.length + 1
+
+    def flush(args):
+        k_res, v_res, kp0, ks0, vp0, vs0 = args
+        kp, ks = _quantize_rotated(k_res, g)
+        vp, vs = _quantize_rotated(v_res, g)
+        off = new_len - W  # first token index of the window
+        # Write the W-token slab as a masked gather, NOT a dynamic-
+        # update-slice: DUS at a dynamic offset along the (possibly
+        # 'model'-sharded) seq axis makes GSPMD all-gather the whole
+        # packed cache (measured: dominant decode_32k collective, §Perf
+        # cell 3).  take() from the replicated W-slab with a sharded
+        # position iota partitions cleanly with zero collectives.
+        s_max = kp0.shape[-2]
+        pos = jnp.arange(s_max)
+        in_slab = (pos >= off) & (pos < off + W)  # (S,)
+        slab_idx = jnp.clip(pos - off, 0, W - 1)
+
+        def put(buf, slab):
+            gathered = jnp.take(slab, slab_idx, axis=2)  # (B,H,S,.)
+            return jnp.where(in_slab[None, None, :, None], gathered, buf)
+
+        return put(kp0, kp), put(ks0, ks), put(vp0, vp), put(vs0, vs)
+
+    def no_flush(args):
+        _, _, kp0, ks0, vp0, vs0 = args
+        return kp0, ks0, vp0, vs0
+
+    k_packed, k_scales, v_packed, v_scales = jax.lax.cond(
+        idx == W - 1,
+        flush,
+        no_flush,
+        (k_res, v_res, cache.k_packed, cache.k_scales,
+         cache.v_packed, cache.v_scales),
+    )
+    return QuantKVCache(
+        k_packed, k_scales, v_packed, v_scales, k_res, v_res, new_len
+    )
+
+
+# ---------------------------------------------------------------------------
+# Read path (reference; the Pallas flash-decode kernel mirrors this)
+# ---------------------------------------------------------------------------
+
+def packed_len(cache: QuantKVCache) -> jax.Array:
+    """Number of tokens currently attended from int4 storage.
+
+    Invariant: tokens [0, packed_len) are read from packed storage and
+    tokens [packed_len, length) from the residual window (slot t mod W).
+    The window flushes exactly when length becomes a multiple of W, so
+    n_residual = length mod W -- including 0 right after a flush or an
+    exact-multiple prefill (the flushed tokens are then read from packed
+    storage; the residual copies are masked out).
+    """
+    return cache.length - cache.length % cache.window
+
+
+def gather_rotated(cache: QuantKVCache):
+    """Dequantize to rotated space: ((B,H,S_max,d) k, v, packed_len).
+
+    Reference path only -- the kernel dequantizes tile-by-tile in VMEM.
+    Values beyond `packed_len` are garbage and must be masked by caller.
+    """
+    g = cache.group
+    k = _dequantize_rotated(cache.k_packed, cache.k_scales, g)
+    v = _dequantize_rotated(cache.v_packed, cache.v_scales, g)
+    return k, v, packed_len(cache)
+
+
+def bf16_prefill(cache: BF16KVCache, k: jax.Array, v: jax.Array) -> BF16KVCache:
+    S = k.shape[-2]
+    return BF16KVCache(
+        jax.lax.dynamic_update_slice(cache.k, k.astype(jnp.bfloat16), (0, 0, 0, 0)),
+        jax.lax.dynamic_update_slice(cache.v, v.astype(jnp.bfloat16), (0, 0, 0, 0)),
+        jnp.asarray(S, jnp.int32),
+    )
+
+
+def bf16_decode_update(cache: BF16KVCache, k: jax.Array, v: jax.Array) -> BF16KVCache:
+    off = cache.length
+    return BF16KVCache(
+        jax.lax.dynamic_update_slice(
+            cache.k, k.astype(jnp.bfloat16), (0, 0, off, 0)
+        ),
+        jax.lax.dynamic_update_slice(
+            cache.v, v.astype(jnp.bfloat16), (0, 0, off, 0)
+        ),
+        cache.length + 1,
+    )

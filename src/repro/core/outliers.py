@@ -1,0 +1,93 @@
+"""Controlled outlier-channel injection (paper §5.6 mechanism).
+
+The paper localizes Qwen2.5's 4-bit per-token catastrophe to "a single
+dominant coordinate" in layer-0 K projections: the per-token abs-max is
+set by that coordinate, collapsing quantization resolution for the other
+127.  Our in-repo stand-in models are too small / too briefly trained to
+develop such outlier channels organically, so benchmarks and tests inject
+one with an *exactly invariance-preserving* reparameterization:
+
+  K outlier: scale the RoPE channel pair (c, c + d/2) of ``wk`` by alpha
+             and the same pair of ``wq`` by 1/alpha.  RoPE rotates the
+             pair (split-half convention), and a scalar commutes with the
+             2x2 rotation, so every attention score q.k is bit-identical
+             in exact arithmetic -- but the *stored* K cache now has a
+             dominant coordinate pair.
+  V outlier: scale channel c of ``wv`` by alpha and divide the matching
+             input rows of ``wo`` by alpha (V has no RoPE; single channel).
+
+The fp16/bf16 model is therefore functionally unchanged (up to float
+rounding), while per-token quantization of the K/V cache sees the paper's
+catastrophe mechanism.  Requires qk_norm=False (a post-projection norm
+would break the invariance).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["inject_kv_outliers"]
+
+
+def inject_kv_outliers(
+    params: dict,
+    *,
+    head_dim: int,
+    channel: int = 2,
+    alpha: float = 20.0,
+    inject_k: bool = True,
+    inject_v: bool = True,
+) -> dict:
+    """Return params with an outlier channel injected into every attention
+    block, exactly preserving the full-precision function.
+
+    ``params`` is the LM param pytree; attention blocks live at
+    ``blocks/attn`` (stacked leading layer axis) or ``shared_attn/attn``.
+    """
+    assert 0 <= channel < head_dim // 2, (channel, head_dim)
+    c2 = channel + head_dim // 2
+
+    def patch_attn(attn: dict) -> dict:
+        # jnp-ify: leaves may be host numpy (e.g. restored checkpoints)
+        attn = jax.tree.map(jnp.asarray, attn)
+        if inject_k:
+            wk = attn["wk"]["w"]  # (..., d_in, Hkv, hd)
+            wq = attn["wq"]["w"]  # (..., d_in, Hq, hd)
+            for ch in (channel, c2):
+                wk = wk.at[..., ch].mul(alpha)
+                wq = wq.at[..., ch].mul(1.0 / alpha)
+            attn["wk"] = dict(attn["wk"], w=wk)
+            attn["wq"] = dict(attn["wq"], w=wq)
+            if "b" in attn["wk"]:
+                b = attn["wk"]["b"]
+                for ch in (channel, c2):
+                    b = b.at[..., ch].mul(alpha)
+                attn["wk"]["b"] = b
+            if "b" in attn["wq"]:
+                b = attn["wq"]["b"]
+                for ch in (channel, c2):
+                    b = b.at[..., ch].mul(1.0 / alpha)
+                attn["wq"]["b"] = b
+        if inject_v:
+            wv = attn["wv"]["w"]
+            attn["wv"] = dict(attn["wv"], w=wv.at[..., channel].mul(alpha))
+            if "b" in attn["wv"]:
+                attn["wv"]["b"] = attn["wv"]["b"].at[..., channel].mul(alpha)
+            wo = attn["wo"]["w"]  # (..., Hq*hd, d_model)
+            lead = wo.shape[:-2]
+            n_heads_hd, d_model = wo.shape[-2:]
+            wo_r = wo.reshape(lead + (n_heads_hd // head_dim, head_dim, d_model))
+            wo_r = wo_r.at[..., channel, :].mul(1.0 / alpha)
+            attn["wo"] = dict(attn["wo"], w=wo_r.reshape(wo.shape))
+        return attn
+
+    out = dict(params)
+    if "blocks" in out:
+        blocks = dict(out["blocks"])
+        blocks["attn"] = patch_attn(blocks["attn"])
+        out["blocks"] = blocks
+    if "shared_attn" in out:
+        sa = dict(out["shared_attn"])
+        sa["attn"] = patch_attn(sa["attn"])
+        out["shared_attn"] = sa
+    return out

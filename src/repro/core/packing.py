@@ -1,0 +1,53 @@
+"""int4 nibble packing (paper §3.2 step 4).
+
+byte = (q[2i+1] << 4) | (q[2i] & 0xF)   -- two signed int4 per uint8.
+
+The Metal kernel co-locates odd/even lanes with simd_shuffle_xor; on TPU the
+layout is columnar in VMEM so the pack is a plain strided slice + shift/or
+on int32 lanes (TPU VPU has no int8 ALU lanes; we compute in int32 and
+store uint8).  These jnp versions are both the oracle and the interpret-mode
+implementation used inside the Pallas kernels.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["pack_int4", "unpack_int4", "packed_nbytes"]
+
+
+def pack_int4(codes: jax.Array) -> jax.Array:
+    """Pack int codes in [-8, 7] along the last axis: (..., d) -> (..., d//2).
+
+    Returns uint8 with low nibble = even index, high nibble = odd index.
+    """
+    d = codes.shape[-1]
+    if d % 2:
+        raise ValueError(f"last dim must be even, got {d}")
+    c = codes.astype(jnp.int32) & 0xF
+    even = c[..., 0::2]
+    odd = c[..., 1::2]
+    return ((odd << 4) | even).astype(jnp.uint8)
+
+
+def unpack_int4(packed: jax.Array) -> jax.Array:
+    """Inverse of :func:`pack_int4`: (..., d//2) uint8 -> (..., d) int8."""
+    p = packed.astype(jnp.int32)
+    low = p & 0xF
+    high = (p >> 4) & 0xF
+    # sign-extend 4-bit two's complement
+    low = jnp.where(low >= 8, low - 16, low)
+    high = jnp.where(high >= 8, high - 16, high)
+    stacked = jnp.stack([low, high], axis=-1)  # (..., d//2, 2)
+    return stacked.reshape(packed.shape[:-1] + (packed.shape[-1] * 2,)).astype(
+        jnp.int8
+    )
+
+
+def packed_nbytes(d: int, bits: int) -> int:
+    """Bytes per d-vector of codes at the given bit width."""
+    if bits == 4:
+        return d // 2
+    if bits == 8:
+        return d
+    raise ValueError(f"only 4/8-bit packing supported, got {bits}")

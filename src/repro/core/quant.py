@@ -1,0 +1,124 @@
+"""Symmetric uniform quantization schemes for KV vectors (paper §4.1, §5.6).
+
+Schemes (Table 5 vocabulary):
+    per_token           one scale per head-dim vector (production default)
+    per_tensor          one scale per tensor (appendix baseline; fails at 4b)
+    per_group(g)        d/g scales per vector, groups of g coordinates
+    per_channel         one scale per coordinate, shared across tokens
+                        (realized as a lambda rescale; see Rotation.lam)
+    per_channel_group   lambda rescale then per-group abs-max -- the paper's
+                        deployment recipe (fused scaled_g32 kernel, §7.1)
+
+All quantizers are symmetric: q = clip(rint(x / scale), -Qmax-?, Qmax) with
+scale = absmax / Qmax, Qmax = 2^(b-1) - 1.  Round-half-even (jnp.rint)
+matches both our Pallas kernel and the oracle, collapsing the paper's
+±1-LSB tie noise (§3.3) to bit-exactness.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "qmax",
+    "quantize_per_token",
+    "dequantize_per_token",
+    "quantize_per_tensor",
+    "dequantize_per_tensor",
+    "quantize_per_group",
+    "dequantize_per_group",
+    "Quantized",
+]
+
+_EPS = 1e-12
+
+
+def qmax(bits: int) -> int:
+    return 2 ** (bits - 1) - 1
+
+
+class Quantized(NamedTuple):
+    """Quantized payload: integer codes + scales (+ how to undo)."""
+
+    codes: jax.Array  # int8-held codes in [-qmax, qmax]
+    scales: jax.Array  # fp32 scales, broadcastable against codes
+    bits: int
+
+
+def _quantize(x: jax.Array, scale: jax.Array, bits: int) -> jax.Array:
+    q = jnp.rint(x.astype(jnp.float32) / scale)
+    m = qmax(bits)
+    return jnp.clip(q, -m, m).astype(jnp.int8)
+
+
+def quantize_per_token(x: jax.Array, bits: int) -> Quantized:
+    """One scale per trailing-dim vector: scale shape (..., 1)."""
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, _EPS) / qmax(bits)
+    return Quantized(_quantize(x, scale, bits), scale, bits)
+
+
+def dequantize_per_token(q: Quantized) -> jax.Array:
+    return q.codes.astype(jnp.float32) * q.scales
+
+
+def quantize_per_tensor(x: jax.Array, bits: int) -> Quantized:
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.maximum(absmax, _EPS) / qmax(bits)
+    return Quantized(_quantize(x, scale, bits), scale, bits)
+
+
+def dequantize_per_tensor(q: Quantized) -> jax.Array:
+    return q.codes.astype(jnp.float32) * q.scales
+
+
+def quantize_per_group(x: jax.Array, bits: int, group: int) -> Quantized:
+    """d/group scales per vector: scale shape (..., d//group, 1) folded.
+
+    codes keep shape (..., d); scales have shape (..., d//group).
+    """
+    d = x.shape[-1]
+    if d % group:
+        raise ValueError(f"d={d} not divisible by group={group}")
+    xg = x.astype(jnp.float32).reshape(x.shape[:-1] + (d // group, group))
+    absmax = jnp.max(jnp.abs(xg), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, _EPS) / qmax(bits)
+    codes = _quantize(xg, scale, bits).reshape(x.shape)
+    return Quantized(codes, scale[..., 0], bits)
+
+
+def dequantize_per_group(q: Quantized, group: int) -> jax.Array:
+    d = q.codes.shape[-1]
+    cg = q.codes.astype(jnp.float32).reshape(
+        q.codes.shape[:-1] + (d // group, group)
+    )
+    return (cg * q.scales[..., None]).reshape(q.codes.shape)
+
+
+# ---------------------------------------------------------------------------
+# Scheme registry used by benchmarks / the cache.  `lam` (per-channel) is
+# applied by the Rotation before these run; per_channel == per_token on the
+# lambda-rescaled values with group=d (single group), per_channel_group is
+# lambda + per_group.
+# ---------------------------------------------------------------------------
+
+def quantize(x: jax.Array, bits: int, scheme: str, group: int = 32) -> Quantized:
+    if scheme == "per_token":
+        return quantize_per_token(x, bits)
+    if scheme == "per_tensor":
+        return quantize_per_tensor(x, bits)
+    if scheme == "per_group":
+        return quantize_per_group(x, bits, group)
+    raise ValueError(f"unknown scheme: {scheme}")
+
+
+def dequantize(q: Quantized, scheme: str, group: int = 32) -> jax.Array:
+    if scheme == "per_token":
+        return dequantize_per_token(q)
+    if scheme == "per_tensor":
+        return dequantize_per_tensor(q)
+    if scheme == "per_group":
+        return dequantize_per_group(q, group)
+    raise ValueError(f"unknown scheme: {scheme}")

@@ -1,0 +1,228 @@
+"""Reference (pure-jnp) attention over the quantized KV cache.
+
+This is the oracle the Pallas flash-decode kernel is validated against,
+and the path models use on CPU.  It realizes the rotated-space trick
+(DESIGN.md §5.1):
+
+    scores  = q_eff · y_k          with q_eff = diag(1/lam_k) B q
+    out_rot = softmax(scores) · y_v
+    out     = rot_v.inverse(out_rot)   (divide lam_v, multiply B^T)
+
+where y_k, y_v are the *stored* rotated+rescaled (and int4-dequantized)
+K/V.  Exactness: for the fp32 residual window the scores equal q·k to
+float precision because B is orthonormal; for the packed part the only
+error is quantization, identical to the paper's dequant path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kvcache
+from repro.core.kvcache import BF16KVCache, QuantKVCache
+from repro.core.transforms import Rotation
+
+__all__ = ["decode_attention_quant", "decode_attention_bf16"]
+
+
+def _gqa_repeat(x: jax.Array, n_q_heads: int) -> jax.Array:
+    """(B, Hkv, S, d) -> (B, Hq, S, d) by repeating KV heads."""
+    h_kv = x.shape[1]
+    if h_kv == n_q_heads:
+        return x
+    rep = n_q_heads // h_kv
+    return jnp.repeat(x, rep, axis=1)
+
+
+def decode_attention_quant(
+    q: jax.Array,  # (B, Hq, 1, d) raw query (post-RoPE)
+    cache: QuantKVCache,
+    rot_k: Rotation,
+    rot_v: Rotation,
+    *,
+    scale: float | None = None,
+    sliding_window: int | None = None,
+) -> jax.Array:
+    """One decode step of attention against the quantized cache.
+
+    Returns (B, Hq, 1, d) in the original (unrotated) basis.  GQA is
+    handled by grouping query heads (no KV repeat is materialized), which
+    also keeps the sharded (model-axis on Hkv or S) einsum forms clean
+    under GSPMD.
+    """
+    B, Hq, _, d = q.shape
+    Hkv = cache.k_packed.shape[1]
+    G = Hq // Hkv
+    sm_scale = scale if scale is not None else d ** -0.5
+
+    # fold rotation + 1/lam_k into the query: q_eff = diag(1/lam) B q
+    q_eff = jnp.einsum(
+        "...d,ed->...e", q.astype(jnp.float32), rot_k.folded_query_matrix()
+    )
+    qg = q_eff.reshape(B, Hkv, G, d)
+
+    yk, yv, plen = kvcache.gather_rotated(cache)  # rotated+lam space
+    s_max = yk.shape[-2]
+    W = cache.window
+
+    # Two-part online-softmax combine.  The packed cache's seq axis may be
+    # sharded over 'model' (split-K flash decode, cache_specs); the fp32
+    # residual window is replicated.  NEVER concatenate the two along the
+    # seq axis: GSPMD cannot keep a concat of a sharded and a replicated
+    # operand sharded, and all-gathers the whole dequantized prefix
+    # (measured: ~70% of decode_32k collective bytes, §Perf cell 3).
+    # Separate partial softmax stats keep every collective (B,Hkv,G)-sized.
+    NEG = -1e30
+
+    # ---- packed part (seq possibly sharded) ----
+    logits_p = jnp.einsum("bhgd,bhsd->bhgs", qg, yk) * sm_scale
+    pos_p = jnp.arange(s_max)[None, None, None, :]
+    mask_p = pos_p < plen
+    if sliding_window is not None:
+        mask_p &= pos_p >= (cache.length - sliding_window)
+    logits_p = jnp.where(mask_p, logits_p, NEG)
+    m_p = jnp.max(logits_p, axis=-1)  # (B,Hkv,G): tiny cross-shard reduce
+    e_p = jnp.exp(logits_p - m_p[..., None])
+    l_p = jnp.sum(e_p, axis=-1)
+    acc_p = jnp.einsum("bhgs,bhsd->bhgd", e_p, yv)
+
+    # ---- residual part (replicated; token i = absolute plen + i) ----
+    logits_r = jnp.einsum(
+        "bhgd,bhsd->bhgs", qg, cache.k_residual
+    ) * sm_scale
+    pos_r = plen + jnp.arange(W)[None, None, None, :]
+    mask_r = pos_r < cache.length
+    if sliding_window is not None:
+        mask_r &= pos_r >= (cache.length - sliding_window)
+    logits_r = jnp.where(mask_r, logits_r, NEG)
+    m_r = jnp.max(logits_r, axis=-1)
+    e_r = jnp.exp(logits_r - m_r[..., None])
+    l_r = jnp.sum(e_r, axis=-1)
+    acc_r = jnp.einsum("bhgs,bhsd->bhgd", e_r, cache.v_residual)
+
+    # ---- combine ----
+    m = jnp.maximum(m_p, m_r)
+    w_p = jnp.exp(m_p - m)
+    w_r = jnp.exp(m_r - m)
+    denom = jnp.maximum(w_p * l_p + w_r * l_r, 1e-30)
+    out_rot = (w_p[..., None] * acc_p + w_r[..., None] * acc_r) \
+        / denom[..., None]
+    out_rot = out_rot.reshape(B, Hq, 1, d)
+    return rot_v.inverse(out_rot).astype(q.dtype)
+
+
+def decode_attention_quant_blockwise(
+    q: jax.Array,  # (B, Hq, 1, d) raw query (post-RoPE)
+    cache: QuantKVCache,
+    rot_k: Rotation,
+    rot_v: Rotation,
+    *,
+    scale: float | None = None,
+    sliding_window: int | None = None,
+    kv_block: int = 512,
+) -> jax.Array:
+    """Flash-decode over the packed cache: dequantize tile-by-tile.
+
+    Memory-sane analogue of :func:`decode_attention_quant` (never
+    materializes the dequantized prefix); this is the jnp mirror of the
+    Pallas kernel and the path serve_step uses at scale.
+    """
+    from repro.core import packing as _packing  # local to avoid cycle
+    from repro.core import quant as _quant
+
+    B, Hq, _, d = q.shape
+    Hkv = cache.k_packed.shape[1]
+    G = Hq // Hkv
+    g = cache.group
+    sm = scale if scale is not None else d ** -0.5
+    plen = kvcache.packed_len(cache)
+    W = cache.window
+    s_max = cache.s_max
+
+    q_eff = jnp.einsum(
+        "...d,ed->...e", q.astype(jnp.float32), rot_k.folded_query_matrix()
+    )
+    qg = q_eff.reshape(B, Hkv, G, 1, d) * sm
+
+    blk = min(kv_block, s_max)
+    n_blk = -(-s_max // blk)
+
+    def deq(packed, scales):
+        codes = _packing.unpack_int4(packed)
+        return _quant.dequantize_per_group(_quant.Quantized(codes, scales, 4), g)
+
+    def body(carry, j):
+        m, l, acc = carry
+        sl = (0, 0, j * blk, 0)
+        kp = jax.lax.dynamic_slice(
+            cache.k_packed, sl, (B, Hkv, blk, d // 2))
+        ks = jax.lax.dynamic_slice(
+            cache.k_scales, sl, (B, Hkv, blk, d // g))
+        vp = jax.lax.dynamic_slice(
+            cache.v_packed, sl, (B, Hkv, blk, d // 2))
+        vs = jax.lax.dynamic_slice(
+            cache.v_scales, sl, (B, Hkv, blk, d // g))
+        kj = deq(kp, ks)
+        vj = deq(vp, vs)
+        kv_pos = j * blk + jnp.arange(blk)
+        logits = jnp.einsum("bhgqd,bhsd->bhgqs", qg, kj)
+        mask = kv_pos[None, :] < plen
+        if sliding_window is not None:
+            mask = mask & (kv_pos[None, :] > cache.length - 1 - sliding_window)
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum("bhgqs,bhsd->bhgqd", p, vj)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, G, 1), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, 1), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, 1, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), jnp.arange(n_blk))
+
+    # residual window (fp32, rotated space) -- one extra block
+    rk = cache.k_residual.reshape(B, Hkv, 1, W, d)
+    rv = cache.v_residual.reshape(B, Hkv, 1, W, d)
+    pos_r = plen + jnp.arange(W)
+    logits = jnp.einsum("bhgqd,bhgsd->bhgqs", qg, rk)
+    mask = pos_r < cache.length
+    if sliding_window is not None:
+        mask = mask & (pos_r > cache.length - 1 - sliding_window)
+    logits = jnp.where(mask[None, None, None, None], logits, -1e30)
+    m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+    p = jnp.exp(logits - m_new[..., None])
+    corr = jnp.exp(m - m_new)
+    l = l * corr + jnp.sum(p, axis=-1)
+    acc = acc * corr[..., None] + jnp.einsum("bhgqs,bhgsd->bhgqd", p, rv)
+
+    out_rot = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = rot_v.inverse(out_rot.reshape(B, Hq, 1, d))
+    return out.astype(q.dtype)
+
+
+def decode_attention_bf16(
+    q: jax.Array,  # (B, Hq, 1, d)
+    cache: BF16KVCache,
+    *,
+    scale: float | None = None,
+    sliding_window: int | None = None,
+) -> jax.Array:
+    """fp16/bf16 DynamicCache baseline decode attention (grouped GQA)."""
+    B, Hq, _, d = q.shape
+    Hkv = cache.k.shape[1]
+    G = Hq // Hkv
+    sm_scale = scale if scale is not None else d ** -0.5
+    k = cache.k.astype(jnp.float32)
+    v = cache.v.astype(jnp.float32)
+    qg = q.astype(jnp.float32).reshape(B, Hkv, G, d)
+    logits = jnp.einsum("bhgd,bhsd->bhgs", qg, k) * sm_scale
+    pos = jnp.arange(k.shape[-2])[None, None, None, :]
+    mask = pos < cache.length
+    if sliding_window is not None:
+        mask &= pos >= (cache.length - sliding_window)
+    logits = jnp.where(mask, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgs,bhsd->bhgd", p, v).reshape(B, Hq, 1, d)
+    return out.astype(q.dtype)

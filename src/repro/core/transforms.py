@@ -1,0 +1,225 @@
+"""Orthonormal rotations for KV-cache quantization (paper §3.1).
+
+SRFT(x) = pack(F · diag(s) · x)   -- sign-randomized real FFT, Eq. (1)-(2)
+SRHT(x) = (1/sqrt(d)) H · diag(s) · x -- sign-randomized Hadamard baseline
+
+Both are exact real orthonormal maps on R^d (Parseval-preserving), so
+<SRFT(x), SRFT(y)> = <x, y>: attention scores are invariant under rotating
+both q and k.  That invariance is what the rotated-space attention path
+(DESIGN.md §5.1) exploits.
+
+All transforms expose:
+    forward(x)           : (..., d) -> (..., d)
+    inverse(y)           : (..., d) -> (..., d)
+    matrix()             : (d, d) orthonormal B with forward(x) == x @ B.T
+The matrix form is the TPU-native realization (MXU matmul, DESIGN.md §1);
+the functional form is the butterfly/FFT oracle they are verified against.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "hermitian_pack",
+    "hermitian_unpack",
+    "srft_forward",
+    "srft_inverse",
+    "srht_forward",
+    "srht_inverse",
+    "fwht",
+    "random_signs",
+    "transform_matrix",
+    "Rotation",
+    "make_rotation",
+]
+
+_SQRT2 = np.sqrt(2.0).astype(np.float32)
+
+
+def random_signs(key: jax.Array, d: int) -> jax.Array:
+    """Fixed random sign vector s in {-1,+1}^d (drawn once at init)."""
+    return jnp.where(jax.random.bernoulli(key, 0.5, (d,)), 1.0, -1.0).astype(
+        jnp.float32
+    )
+
+
+# ---------------------------------------------------------------------------
+# Hermitian packing (paper Eq. 2): C^{d/2+1} rfft output -> R^d, Parseval-exact
+# ---------------------------------------------------------------------------
+
+def hermitian_pack(y: jax.Array, d: int) -> jax.Array:
+    """Pack rfft output (..., d/2+1) complex into (..., d) real, Eq. (2)."""
+    re = jnp.real(y)
+    im = jnp.imag(y)
+    # k = 0 -> Y_0^re ; k = d/2 -> Y_{d/2}^re ; 1<=k<d/2 -> sqrt2*re ;
+    # d/2<k<d -> sqrt2*im of bin k-d/2.
+    head = re[..., :1]
+    mid_re = _SQRT2 * re[..., 1 : d // 2]
+    nyq = re[..., d // 2 : d // 2 + 1]
+    mid_im = _SQRT2 * im[..., 1 : d // 2]
+    return jnp.concatenate([head, mid_re, nyq, mid_im], axis=-1)
+
+
+def hermitian_unpack(p: jax.Array, d: int) -> jax.Array:
+    """Inverse of :func:`hermitian_pack`: (..., d) real -> (..., d/2+1) complex."""
+    head = p[..., :1]
+    mid_re = p[..., 1 : d // 2] / _SQRT2
+    nyq = p[..., d // 2 : d // 2 + 1]
+    mid_im = p[..., d // 2 + 1 :] / _SQRT2
+    re = jnp.concatenate([head, mid_re, nyq], axis=-1)
+    im = jnp.concatenate(
+        [jnp.zeros_like(head), mid_im, jnp.zeros_like(nyq)], axis=-1
+    )
+    return jax.lax.complex(re, im)
+
+
+# ---------------------------------------------------------------------------
+# SRFT
+# ---------------------------------------------------------------------------
+
+def srft_forward(x: jax.Array, signs: jax.Array) -> jax.Array:
+    """SRFT(x) = pack(rfft_ortho(s * x)).  Exact orthonormal map on R^d."""
+    d = x.shape[-1]
+    xf = x.astype(jnp.float32) * signs
+    y = jnp.fft.rfft(xf, axis=-1, norm="ortho")
+    return hermitian_pack(y, d)
+
+
+def srft_inverse(p: jax.Array, signs: jax.Array) -> jax.Array:
+    """Inverse SRFT: unpack, irfft, undo signs (paper: 'symmetric')."""
+    d = p.shape[-1]
+    y = hermitian_unpack(p.astype(jnp.float32), d)
+    x = jnp.fft.irfft(y, n=d, axis=-1, norm="ortho")
+    return x * signs
+
+
+# ---------------------------------------------------------------------------
+# SRHT (baseline; paper §4.2 shows SRFT == SRHT within seed variance)
+# ---------------------------------------------------------------------------
+
+def fwht(x: jax.Array) -> jax.Array:
+    """Fast Walsh-Hadamard transform along the last axis (unnormalized).
+
+    d must be a power of two; log2(d) add/sub passes.
+    """
+    d = x.shape[-1]
+    if d & (d - 1):
+        raise ValueError(f"FWHT requires power-of-two d, got {d}")
+    shape = x.shape
+    h = 1
+    y = x
+    while h < d:
+        y = y.reshape(shape[:-1] + (d // (2 * h), 2, h))
+        a = y[..., 0, :]
+        b = y[..., 1, :]
+        y = jnp.concatenate([a + b, a - b], axis=-1)
+        y = y.reshape(shape)
+        h *= 2
+    return y
+
+
+def srht_forward(x: jax.Array, signs: jax.Array) -> jax.Array:
+    d = x.shape[-1]
+    return fwht(x.astype(jnp.float32) * signs) / jnp.sqrt(jnp.float32(d))
+
+
+def srht_inverse(p: jax.Array, signs: jax.Array) -> jax.Array:
+    # H is symmetric and H @ H = d * I, so inverse = H/sqrt(d) then signs.
+    d = p.shape[-1]
+    return (fwht(p.astype(jnp.float32)) / jnp.sqrt(jnp.float32(d))) * signs
+
+
+# ---------------------------------------------------------------------------
+# Matrix forms (the MXU path): B such that forward(x) == x @ B.T
+# ---------------------------------------------------------------------------
+
+def transform_matrix(kind: str, signs: jax.Array) -> jax.Array:
+    """Materialize the d×d orthonormal matrix of a transform.
+
+    On TPU the fused kernel applies the rotation as one MXU matmul with
+    this matrix instead of running butterfly passes (DESIGN.md §1).
+    """
+    d = signs.shape[0]
+    eye = jnp.eye(d, dtype=jnp.float32)
+    if kind == "srft":
+        cols = srft_forward(eye, signs)  # rows are forward(e_i)
+    elif kind == "srht":
+        cols = srht_forward(eye, signs)
+    elif kind == "identity":
+        cols = eye
+    else:
+        raise ValueError(f"unknown transform kind: {kind}")
+    # forward(e_i) = B @ e_i = i-th column of B; rows of `cols` are those.
+    return cols.T  # (d, d), x @ B.T == forward(x)
+
+
+# ---------------------------------------------------------------------------
+# Rotation: the user-facing composite (SRFT base ∘ learned R ∘ learned λ)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Rotation:
+    """Composite rotation y = lam * (R @ (Base @ x)) (paper §5.1).
+
+    ``matrix`` is the folded (R @ Base) orthonormal matrix -- SRFT/SRHT base
+    times an optional learned rotation -- stored explicitly so the kernel
+    path is always a single matmul.  ``lam`` is the learned per-coordinate
+    scale (ones if unlearned).  ``signs``/``kind`` kept for the oracle path.
+    """
+
+    matrix: jax.Array  # (d, d) orthonormal, includes base and learned R
+    lam: jax.Array  # (d,) > 0 per-coordinate scale
+    signs: jax.Array  # (d,) base sign diagonal (oracle path)
+    kind: str = "srft"  # static: srft | srht | identity
+
+    # -- pytree plumbing ----------------------------------------------------
+    def tree_flatten(self):
+        return (self.matrix, self.lam, self.signs), (self.kind,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        matrix, lam, signs = children
+        return cls(matrix=matrix, lam=lam, signs=signs, kind=aux[0])
+
+    # -- API ----------------------------------------------------------------
+    @property
+    def d(self) -> int:
+        return self.matrix.shape[-1]
+
+    def forward(self, x: jax.Array) -> jax.Array:
+        """x (..., d) -> rotated-and-rescaled (..., d), fp32."""
+        y = jnp.einsum(
+            "...d,ed->...e", x.astype(jnp.float32), self.matrix
+        )
+        return y * self.lam
+
+    def inverse(self, y: jax.Array) -> jax.Array:
+        lam = jnp.maximum(self.lam, 1e-6)  # paper: clamp at 1e-6
+        x = y.astype(jnp.float32) / lam
+        return jnp.einsum("...e,ed->...d", x, self.matrix)
+
+    def folded_query_matrix(self) -> jax.Array:
+        """Matrix Q with (x @ Q.T) == forward(x)/lam^2 ... not used; see ops.
+
+        For rotated-space attention we need q_eff = (B q) / lam so that
+        q_eff · (lam ⊙ B k) = q·k.  Returns M = diag(1/lam) @ B.
+        """
+        lam = jnp.maximum(self.lam, 1e-6)
+        return self.matrix / lam[:, None]
+
+
+def make_rotation(kind: str, key: jax.Array, d: int) -> Rotation:
+    """Fresh unlearned rotation of the given kind (lam = 1)."""
+    signs = random_signs(key, d)
+    if kind == "identity":
+        signs = jnp.ones((d,), jnp.float32)
+    mat = transform_matrix(kind, signs)
+    return Rotation(
+        matrix=mat, lam=jnp.ones((d,), jnp.float32), signs=signs, kind=kind
+    )

@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataIterator, SyntheticCorpus
+
+__all__ = ["DataIterator", "SyntheticCorpus"]

@@ -1,0 +1,3 @@
+from repro.distributed import compression, fault_tolerance, pipeline
+
+__all__ = ["compression", "fault_tolerance", "pipeline"]

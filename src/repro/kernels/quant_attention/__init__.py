@@ -1,0 +1,3 @@
+from repro.kernels.quant_attention.ops import decode_attention_kernel
+
+__all__ = ["decode_attention_kernel"]

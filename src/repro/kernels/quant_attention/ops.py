@@ -1,0 +1,52 @@
+"""Public wrapper: decode attention on a QuantKVCache via the Pallas
+kernel.  Folds rotation + 1/lam_k + softmax scale into the query, calls
+the kernel, inverse-rotates the single output vector."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kvcache as kvc
+from repro.core.kvcache import QuantKVCache
+from repro.core.transforms import Rotation
+from repro.kernels.quant_attention.quant_attention import (
+    quant_decode_attention_fwd,
+)
+
+__all__ = ["decode_attention_kernel"]
+
+
+def decode_attention_kernel(
+    q: jax.Array,  # (B, Hq, 1, d) raw query (post-RoPE)
+    cache: QuantKVCache,
+    rot_k: Rotation,
+    rot_v: Rotation,
+    *,
+    scale: float | None = None,
+    blk: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """(B, Hq, 1, d) decode attention output in the original basis."""
+    B, Hq, _, d = q.shape
+    Hkv = cache.k_packed.shape[1]
+    G = Hq // Hkv
+    sm = scale if scale is not None else d ** -0.5
+
+    q_eff = jnp.einsum(
+        "...d,ed->...e", q.astype(jnp.float32), rot_k.folded_query_matrix()
+    ) * sm  # (B, Hq, 1, d)
+    q_eff = q_eff.reshape(B, Hkv, G, d).reshape(B * Hkv, G, d)
+
+    def flat(x):
+        return x.reshape((B * Hkv,) + x.shape[2:])
+
+    out_rot = quant_decode_attention_fwd(
+        q_eff,
+        flat(cache.k_packed), flat(cache.k_scales),
+        flat(cache.v_packed), flat(cache.v_scales),
+        flat(cache.k_residual), flat(cache.v_residual),
+        kvc.packed_len(cache), cache.length,
+        group=cache.group, blk=blk, interpret=interpret,
+    )  # (B*Hkv, G, d)
+    out_rot = out_rot.reshape(B, Hq, 1, d)
+    return rot_v.inverse(out_rot).astype(q.dtype)

@@ -1,0 +1,168 @@
+"""Flash-decode attention over nibble-packed int4 KV — Pallas TPU.
+
+The deployment hot loop (paper §7): every decode step streams the stored
+prefix.  With int4+scales the stream is ~3.2-3.7x smaller than bf16; this
+kernel keeps the whole rotate/dequant pipeline in VMEM so the only HBM
+traffic is the packed bytes (the bandwidth win is the paper's entire
+mechanism, DESIGN.md §1).
+
+Rotated-space trick (beyond-paper): K/V are stored as Q4(lam * B k), the
+wrapper folds diag(1/lam_k) @ B and the softmax scale into the query, so
+NO inverse rotation happens per cached token — scores are exact inner
+products in rotated space.  Only the final (1-token) output vector is
+inverse-rotated, outside the kernel.
+
+Grid: (BH, S/blk) — TPU executes the minor axis sequentially per BH, so
+the online-softmax state lives in VMEM scratch across KV tiles; the fp32
+residual window is folded in at the last tile, then the accumulator is
+normalized and written once.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["quant_decode_attention_fwd"]
+
+_NEG_INF = -1e30
+
+
+def _unpack_dequant(p, scales, group):
+    """(blk, d//2) uint8 + (blk, d//group) -> (blk, d) f32."""
+    pi = p.astype(jnp.int32)
+    low = pi & 0xF
+    high = (pi >> 4) & 0xF
+    low = jnp.where(low >= 8, low - 16, low)
+    high = jnp.where(high >= 8, high - 16, high)
+    blk = p.shape[0]
+    d = p.shape[1] * 2
+    codes = jnp.stack([low, high], axis=-1).reshape(blk, d)
+    y = codes.astype(jnp.float32).reshape(blk, d // group, group)
+    return (y * scales[..., None]).reshape(blk, d)
+
+
+def _kernel(
+    scalars_ref,  # SMEM (2,): [packed_len, total_len]
+    q_ref,  # (1, G, d) f32 — q_eff, rotation/lam/scale folded
+    kp_ref,  # (1, blk, d//2) uint8
+    ks_ref,  # (1, blk, d//group) f32
+    vp_ref,
+    vs_ref,
+    kr_ref,  # (1, W, d) f32 residual K (rotated space)
+    vr_ref,
+    out_ref,  # (1, G, d) f32
+    m_scr,  # (G, 1) f32
+    l_scr,  # (G, 1) f32
+    acc_scr,  # (G, d) f32
+    *,
+    blk: int,
+    group: int,
+    n_blocks: int,
+):
+    s = pl.program_id(1)
+    plen = scalars_ref[0]
+    length = scalars_ref[1]
+
+    @pl.when(s == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]  # (G, d)
+
+    def online_update(kd, vd, mask):
+        """kd/vd (n, d) f32, mask (n,) bool."""
+        logits = jax.lax.dot_general(
+            q, kd, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (G, n)
+        logits = jnp.where(mask[None, :], logits, _NEG_INF)
+        m_prev = m_scr[...]  # (G,1)
+        m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1, keepdims=True))
+        p = jnp.exp(logits - m_new)
+        corr = jnp.exp(m_prev - m_new)  # (G,1)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, vd, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scr[...] = m_new
+
+    # skip fully-invalid tiles (everything past packed_len)
+    @pl.when(s * blk < plen)
+    def _packed_tile():
+        kd = _unpack_dequant(kp_ref[0], ks_ref[0], group)
+        vd = _unpack_dequant(vp_ref[0], vs_ref[0], group)
+        pos = s * blk + jax.lax.broadcasted_iota(jnp.int32, (blk,), 0)
+        online_update(kd, vd, pos < plen)
+
+    @pl.when(s == n_blocks - 1)
+    def _finalize():
+        w = kr_ref.shape[1]
+        pos_r = plen + jax.lax.broadcasted_iota(jnp.int32, (w,), 0)
+        online_update(kr_ref[0], vr_ref[0], pos_r < length)
+        out_ref[0] = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("group", "blk", "interpret")
+)
+def quant_decode_attention_fwd(
+    q_eff: jax.Array,  # (BH, G, d) f32 — folded query (see module doc)
+    k_packed: jax.Array,  # (BH, S, d//2) uint8
+    k_scales: jax.Array,  # (BH, S, d//group) f32
+    v_packed: jax.Array,
+    v_scales: jax.Array,
+    k_residual: jax.Array,  # (BH, W, d) f32
+    v_residual: jax.Array,
+    packed_len: jax.Array,  # () int32
+    total_len: jax.Array,  # () int32
+    *,
+    group: int = 32,
+    blk: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Returns out_rot (BH, G, d) f32 in rotated space."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    BH, S, dh = k_packed.shape[0], k_packed.shape[1], q_eff.shape[-1]
+    G = q_eff.shape[1]
+    W = k_residual.shape[1]
+    blk = min(blk, S)
+    assert S % blk == 0, f"S={S} % blk={blk}"
+    n_blocks = S // blk
+    scalars = jnp.stack(
+        [packed_len.astype(jnp.int32), total_len.astype(jnp.int32)]
+    )
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(BH, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, G, dh), lambda bh, s, _: (bh, 0, 0)),
+            pl.BlockSpec((1, blk, dh // 2), lambda bh, s, _: (bh, s, 0)),
+            pl.BlockSpec((1, blk, dh // group), lambda bh, s, _: (bh, s, 0)),
+            pl.BlockSpec((1, blk, dh // 2), lambda bh, s, _: (bh, s, 0)),
+            pl.BlockSpec((1, blk, dh // group), lambda bh, s, _: (bh, s, 0)),
+            pl.BlockSpec((1, W, dh), lambda bh, s, _: (bh, 0, 0)),
+            pl.BlockSpec((1, W, dh), lambda bh, s, _: (bh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, dh), lambda bh, s, _: (bh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, dh), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, blk=blk, group=group, n_blocks=n_blocks),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((BH, G, dh), jnp.float32),
+        interpret=interpret,
+    )(scalars, q_eff, k_packed, k_scales, v_packed, v_scales,
+      k_residual, v_residual)

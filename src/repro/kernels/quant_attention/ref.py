@@ -1,0 +1,13 @@
+"""Oracle for the int4-KV flash-decode kernel: the exact (gather-
+everything) rotated-space attention from core.quant_attention_ref.
+
+The kernel computes, for one decode step:
+    out_rot = softmax(q_eff . [K_packed | K_residual]) . [V_packed | V_res]
+with q_eff = diag(1/lam_k) B q * sm_scale folded by the wrapper, tile-wise
+int4 dequantization in VMEM, and an online-softmax accumulator across KV
+tiles.  The caller applies rot_v.inverse to the single output vector.
+"""
+from repro.core.quant_attention_ref import (  # noqa: F401
+    decode_attention_quant as decode_attention_oracle,
+    decode_attention_quant_blockwise as decode_attention_blockwise_jnp,
+)

@@ -1,0 +1,3 @@
+from repro.kernels.srft_quant.ops import dequantize_rotate, rotate_quantize
+
+__all__ = ["rotate_quantize", "dequantize_rotate"]

@@ -1,0 +1,61 @@
+"""jit'd public wrappers for the fused SRFT-quant kernel.
+
+``rotate_quantize`` / ``dequantize_rotate`` accept a core ``Rotation``
+and arbitrary leading batch dims; they fold lambda into the matmul
+(zero-cost on TPU, see srft_quant.py) and flatten/reshape around the
+2-D kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.transforms import Rotation
+from repro.kernels.srft_quant.ref import fold_inverse_matrix, fold_matrix
+from repro.kernels.srft_quant.srft_quant import srft_dequant_fwd, srft_quant_fwd
+
+__all__ = ["rotate_quantize", "dequantize_rotate"]
+
+
+def _row_tile(n: int, pref: int = 256) -> int:
+    t = min(pref, n)
+    while n % t:
+        t -= 1
+    return t
+
+
+def rotate_quantize(
+    x: jax.Array, rot: Rotation, *, group: int = 32, bits: int = 4,
+    interpret: bool | None = None,
+):
+    """x (..., d) -> (packed (..., d//2|d), scales (..., d//group))."""
+    d = x.shape[-1]
+    lead = x.shape[:-1]
+    n = 1
+    for s in lead:
+        n *= s
+    m = fold_matrix(rot)
+    packed, scales = srft_quant_fwd(
+        x.reshape(n, d), m, group=group, bits=bits,
+        row_tile=_row_tile(n), interpret=interpret,
+    )
+    out_cols = d // 2 if bits == 4 else d
+    return packed.reshape(*lead, out_cols), scales.reshape(*lead, d // group)
+
+
+def dequantize_rotate(
+    packed: jax.Array, scales: jax.Array, rot: Rotation, *, group: int = 32,
+    bits: int = 4, interpret: bool | None = None,
+):
+    """Inverse of :func:`rotate_quantize`.  Returns (..., d) fp32."""
+    lead = packed.shape[:-1]
+    n = 1
+    for s in lead:
+        n *= s
+    d = packed.shape[-1] * 2 if bits == 4 else packed.shape[-1]
+    minv = fold_inverse_matrix(rot)
+    x = srft_dequant_fwd(
+        packed.reshape(n, -1), scales.reshape(n, -1), minv,
+        group=group, bits=bits, row_tile=_row_tile(n), interpret=interpret,
+    )
+    return x.reshape(*lead, d)

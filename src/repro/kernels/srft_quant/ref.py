@@ -1,0 +1,55 @@
+"""Pure-jnp oracle for the fused SRFT-quantize kernel.
+
+Semantics (paper §3.2 + §7.1, TPU-adapted per DESIGN.md §1):
+    y      = x @ M.T                  # M = diag(lam) @ (R @ B_srft), one matmul
+    scale  = absmax_per_group(y) / (2^(b-1) - 1)
+    codes  = clip(rint(y / scale))
+    packed = nibble-pack (int4) or int8 bytes
+Inverse:
+    y      = unpack(codes) * scale
+    x      = y @ Minv.T               # Minv = B.T @ diag(1/lam) folded
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing, quant
+
+__all__ = ["srft_quant_ref", "srft_dequant_ref", "fold_matrix", "fold_inverse_matrix"]
+
+
+def fold_matrix(rotation) -> jax.Array:
+    """(d, d) forward matrix with lambda folded: y = x @ M.T == rot.forward(x)."""
+    return rotation.matrix * rotation.lam[:, None]
+
+
+def fold_inverse_matrix(rotation) -> jax.Array:
+    """(d, d) matrix Minv with srft_dequant_ref(y) == rot.inverse(y).
+
+    rot.inverse(y) = einsum('...e,ed->...d', y/lam, B); the dequant ref
+    computes einsum('ne,de->nd', y, Minv), so Minv[d,e] = B[e,d]/lam[e].
+    """
+    lam = jnp.maximum(rotation.lam, 1e-6)
+    return (rotation.matrix / lam[:, None]).T
+
+
+def srft_quant_ref(x: jax.Array, m: jax.Array, *, group: int, bits: int = 4):
+    """x (N, d), m (d, d) folded matrix -> (packed, scales).
+
+    packed: (N, d//2) uint8 for int4, (N, d) int8 for int8.
+    scales: (N, d//group) fp32.
+    """
+    y = jnp.einsum("nd,ed->ne", x.astype(jnp.float32), m.astype(jnp.float32))
+    q = quant.quantize_per_group(y, bits, group)
+    if bits == 4:
+        return packing.pack_int4(q.codes), q.scales
+    return q.codes, q.scales
+
+
+def srft_dequant_ref(packed: jax.Array, scales: jax.Array, minv: jax.Array,
+                     *, group: int, bits: int = 4):
+    """Inverse: (packed, scales) -> x (N, d) fp32."""
+    codes = packing.unpack_int4(packed) if bits == 4 else packed
+    y = quant.dequantize_per_group(quant.Quantized(codes, scales, bits), group)
+    return jnp.einsum("ne,de->nd", y, minv.astype(jnp.float32))

@@ -1,0 +1,162 @@
+"""Fused SRFT + lambda + per-group abs-max + int4/int8 pack — Pallas TPU.
+
+TPU adaptation of the paper's single-dispatch Metal kernel (§3.2, §7.1):
+one HBM read of the fp32/bf16 vectors, rotation as a d x d MXU matmul
+(the radix-8-DFT-is-a-matmul observation, taken to its TPU conclusion),
+per-group abs-max on the VPU, round-half-even quantize, nibble pack, and
+a quarter-sized HBM write.  Everything between read and write lives in
+VMEM — the TPU analogue of "one Metal dispatch instead of four".
+
+Grid: 1-D over row tiles (TN rows of d-vectors per program).
+BlockSpecs: x (TN, d) VMEM; M (d, d) VMEM broadcast; outputs (TN, d//2)
+uint8 (int4) or (TN, d) int8, scales (TN, d//group) fp32.
+
+The matrix M is the *folded* rotation diag(lam) @ R @ B (ref.fold_matrix):
+learned per-channel lambda costs ZERO extra kernel work on TPU, vs the
+paper's +3-8% in-register multiply tax on Metal.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["srft_quant_fwd", "srft_dequant_fwd", "DEFAULT_ROW_TILE"]
+
+DEFAULT_ROW_TILE = 256
+
+
+def _quant_kernel(x_ref, m_ref, packed_ref, scales_ref, *, group: int,
+                  bits: int):
+    x = x_ref[...].astype(jnp.float32)  # (TN, d)
+    m = m_ref[...].astype(jnp.float32)  # (d, d)
+    # rotation on the MXU: y[n, e] = sum_d x[n, d] * m[e, d]
+    y = jax.lax.dot_general(
+        x, m, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    tn, d = y.shape
+    qmax = float(2 ** (bits - 1) - 1)
+    yg = y.reshape(tn, d // group, group)
+    absmax = jnp.max(jnp.abs(yg), axis=-1)  # (TN, d//group)
+    scale = jnp.maximum(absmax, 1e-12) / qmax
+    scales_ref[...] = scale
+    q = jnp.rint(yg / scale[..., None])
+    q = jnp.clip(q, -qmax, qmax).astype(jnp.int32).reshape(tn, d)
+    if bits == 4:
+        # nibble pack: byte = (q[2i+1] << 4) | (q[2i] & 0xF)
+        even = q[:, 0::2] & 0xF
+        odd = q[:, 1::2] & 0xF
+        packed_ref[...] = ((odd << 4) | even).astype(jnp.uint8)
+    else:
+        packed_ref[...] = q.astype(jnp.int8)
+
+
+def _dequant_kernel(packed_ref, scales_ref, minv_ref, x_ref, *, group: int,
+                    bits: int):
+    p = packed_ref[...]
+    tn = p.shape[0]
+    if bits == 4:
+        pi = p.astype(jnp.int32)
+        low = pi & 0xF
+        high = (pi >> 4) & 0xF
+        low = jnp.where(low >= 8, low - 16, low)
+        high = jnp.where(high >= 8, high - 16, high)
+        d = p.shape[1] * 2
+        codes = jnp.stack([low, high], axis=-1).reshape(tn, d)
+    else:
+        codes = p.astype(jnp.int32)
+        d = p.shape[1]
+    scale = scales_ref[...]  # (TN, d//group)
+    y = (
+        codes.astype(jnp.float32).reshape(tn, d // group, group)
+        * scale[..., None]
+    ).reshape(tn, d)
+    minv = minv_ref[...].astype(jnp.float32)  # (d, d): x = y @ minv.T? no:
+    # ref: x[n, dd] = sum_e y[n, e] * minv[dd, e]
+    x = jax.lax.dot_general(
+        y, minv, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    x_ref[...] = x
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("group", "bits", "row_tile", "interpret")
+)
+def srft_quant_fwd(
+    x: jax.Array,  # (N, d)
+    m: jax.Array,  # (d, d) folded rotation (lambda included)
+    *,
+    group: int = 32,
+    bits: int = 4,
+    row_tile: int = DEFAULT_ROW_TILE,
+    interpret: bool | None = None,
+):
+    """Fused rotate+quantize+pack.  Returns (packed, scales)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    n, d = x.shape
+    assert d % group == 0 and d % 2 == 0
+    tn = min(row_tile, n)
+    assert n % tn == 0, f"N={n} must divide row_tile={tn}"
+    grid = (n // tn,)
+    out_cols = d // 2 if bits == 4 else d
+    out_dtype = jnp.uint8 if bits == 4 else jnp.int8
+    return pl.pallas_call(
+        functools.partial(_quant_kernel, group=group, bits=bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tn, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, d), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tn, out_cols), lambda i: (i, 0)),
+            pl.BlockSpec((tn, d // group), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, out_cols), out_dtype),
+            jax.ShapeDtypeStruct((n, d // group), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, m)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("group", "bits", "row_tile", "interpret")
+)
+def srft_dequant_fwd(
+    packed: jax.Array,  # (N, d//2) uint8 or (N, d) int8
+    scales: jax.Array,  # (N, d//group)
+    minv: jax.Array,  # (d, d) folded inverse
+    *,
+    group: int = 32,
+    bits: int = 4,
+    row_tile: int = DEFAULT_ROW_TILE,
+    interpret: bool | None = None,
+):
+    """Fused unpack+dequantize+inverse-rotate.  Returns x (N, d) fp32."""
+    if interpret is None:
+        interpret = _interpret_default()
+    n = packed.shape[0]
+    d = packed.shape[1] * 2 if bits == 4 else packed.shape[1]
+    tn = min(row_tile, n)
+    assert n % tn == 0
+    grid = (n // tn,)
+    in_cols = packed.shape[1]
+    return pl.pallas_call(
+        functools.partial(_dequant_kernel, group=group, bits=bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tn, in_cols), lambda i: (i, 0)),
+            pl.BlockSpec((tn, d // group), lambda i: (i, 0)),
+            pl.BlockSpec((d, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tn, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        interpret=interpret,
+    )(packed, scales, minv)

@@ -1,0 +1,170 @@
+"""Activation-sharding policy: sequence parallelism + FSDP (§Perf).
+
+The BASELINE sharding (auto_spec: batch-sharded activations, weights
+model-sharded on their largest dim) compiles everywhere but pays two
+structural taxes the roofline fit exposes:
+
+  1. attention/projection weights end up sharded on their CONTRACTING
+     dim, so every projection all-reduces a full fp32 activation
+     (~1.4e10 B x 4 per layer on qwen3-14b train_4k);
+  2. flash-attention S x block fp32 logits are replicated over 'model'
+     (S^2-class HBM traffic x 1 instead of x 1/16).
+
+The SP_FSDP policy (MaxText-style) fixes both uniformly:
+  * params     : FSDP -- every weight sharded on its largest divisible
+                 dim over the FLATTENED ('data','model') axes; GSPMD
+                 inserts per-layer all-gathers (bf16 weight bytes) and
+                 reduce-scatters gradients back.
+  * activations: batch over ('pod','data'), SEQUENCE over 'model' --
+                 hinted at embed/block/logits boundaries via
+                 with_sharding_constraint.
+  * attention  : K/V hinted fully-replicated over 'model' (one small
+                 all-gather), Q stays sequence-sharded, so blockwise
+                 flash logits shrink 16x per device; softmax stats stay
+                 local to the q-shard.
+  * CE         : logits (B, S/16, V) stay sequence-sharded; log-softmax
+                 and the label gather are shard-local (no full-vocab
+                 all-reduce, no fp32 full-logits residency).
+
+Activated by env REPRO_SHARDING=sp_fsdp (the dry-run/roofline tools pass
+it per-experiment) or programmatically via ``use_policy``.  Without an
+active policy every hint is identity, so tests and the paper-faithful
+baseline are untouched.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import os
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["use_policy", "policy_from_env", "hint", "fsdp_param_specs"]
+
+_ACTIVE: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_act_sharding", default=None
+)
+
+
+class _Policy:
+    def __init__(self, mesh, name: str = "sp_fsdp"):
+        self.mesh = mesh
+        self.name = name
+        self.daxes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+        self.dsize = int(np.prod([mesh.shape[a] for a in self.daxes]))
+        self.msize = mesh.shape["model"] if "model" in mesh.axis_names else 1
+
+    def spec_for(self, kind: str, shape) -> P | None:
+        d = self.daxes if len(self.daxes) > 1 else self.daxes[0]
+        if kind == "residual":  # (B, S, d)
+            if len(shape) != 3:
+                return None
+            b = d if shape[0] % self.dsize == 0 else None
+            s = "model" if shape[1] % self.msize == 0 and shape[1] > 1 \
+                else None
+            return P(b, s, None)
+        if kind == "kv_full":  # (B, Hkv, S, hd): replicate over 'model'
+            b = d if shape[0] % self.dsize == 0 else None
+            return P(b, *([None] * (len(shape) - 1)))
+        if kind == "logits":  # (B, S, V)
+            b = d if shape[0] % self.dsize == 0 else None
+            s = "model" if shape[1] % self.msize == 0 and shape[1] > 1 \
+                else None
+            return P(b, s, None)
+        # Expert parallelism (EP): experts over 'model'; GSPMD lowers the
+        # dispatch/combine einsums to all-to-all between the token-sharded
+        # and expert-sharded layouts.
+        if kind == "moe_gsec":  # (G, S, E, C) dispatch/combine masks
+            g = d if shape[0] % self.dsize == 0 else None
+            e = "model" if shape[2] % self.msize == 0 else None
+            return P(g, None, e, None)
+        if kind == "moe_gecd":  # (G, E, C, d) expert inputs/outputs
+            g = d if shape[0] % self.dsize == 0 else None
+            e = "model" if shape[1] % self.msize == 0 else None
+            return P(g, e, None, None)
+        return None
+
+
+@contextlib.contextmanager
+def use_policy(mesh, name: str = "sp_fsdp"):
+    tok = _ACTIVE.set(_Policy(mesh, name) if name != "baseline" else None)
+    try:
+        yield
+    finally:
+        _ACTIVE.reset(tok)
+
+
+def policy_from_env(mesh):
+    """Context manager honoring REPRO_SHARDING (baseline | sp_fsdp)."""
+    return use_policy(mesh, os.environ.get("REPRO_SHARDING", "baseline"))
+
+
+def hint(x: jax.Array, kind: str) -> jax.Array:
+    """with_sharding_constraint under the active policy; identity if none."""
+    pol = _ACTIVE.get()
+    if pol is None:
+        return x
+    spec = pol.spec_for(kind, x.shape)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(pol.mesh, spec)
+    )
+
+
+def fsdp_param_specs(params_shapes, mesh):
+    """FSDP: largest divisible dim of every leaf over flat ('data','model').
+
+    Layer-stack leading dims (scan) are skipped, same as auto_spec.
+    """
+    from repro.launch.partitioning import STACKED_PREFIXES
+
+    axes = [a for a in ("data", "model") if a in mesh.axis_names]
+    flat = tuple(axes)
+    fsize = int(np.prod([mesh.shape[a] for a in axes]))
+
+    msize = mesh.shape.get("model", 1)
+
+    def spec_for(path, leaf):
+        top = path[0].key if hasattr(path[0], "key") else str(path[0])
+        names = [str(getattr(p, "key", getattr(p, "name", p))) for p in path]
+        skip = STACKED_PREFIXES.get(top, 0)
+        shape = leaf.shape
+        assign = [None] * len(shape)
+        # expert weights (E, d_in, d_out): EP -- experts over 'model',
+        # FSDP the largest remaining dim over 'data'
+        if any("moe" in n for n in names) and len(shape) - skip == 3 \
+                and shape[skip] % msize == 0:
+            assign[skip] = "model"
+            dsize = mesh.shape.get("data", 1)
+            rest = [i for i in range(skip + 1, len(shape))
+                    if shape[i] % dsize == 0]
+            if rest:
+                assign[max(rest, key=lambda i: shape[i])] = "data"
+            return P(*assign)
+        cands = [
+            i for i in range(skip, len(shape))
+            if shape[i] % fsize == 0 and shape[i] >= fsize
+        ]
+        if cands:
+            assign[max(cands, key=lambda i: shape[i])] = flat
+        else:
+            # fall back to 'model'-only then 'data'-only FSDP
+            for ax in ("model", "data"):
+                if ax not in mesh.axis_names:
+                    continue
+                size = mesh.shape[ax]
+                c2 = [
+                    i for i in range(skip, len(shape))
+                    if shape[i] % size == 0 and shape[i] >= size
+                    and assign[i] is None
+                ]
+                if c2:
+                    assign[max(c2, key=lambda i: shape[i])] = ax
+                    break
+        return P(*assign)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_shapes)

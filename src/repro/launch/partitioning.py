@@ -1,0 +1,188 @@
+"""Sharding rules: map every pytree leaf to a PartitionSpec on the
+production mesh.
+
+Strategy (DESIGN.md §4):
+  * params: 2-D weight sharding — 'model' (TP/EP) on the largest divisible
+    non-stacked dim, 'data' (FSDP-style) on the next; layer-stack dims are
+    never sharded (scan slices them).  Params are replicated across 'pod'
+    (pure DP over DCN; only the gradient all-reduce crosses pods).
+  * batch/activations: batch dim over ('pod','data').
+  * KV caches / recurrent state: batch over ('pod','data') when divisible;
+    KV heads over 'model' when divisible, else the sequence axis takes
+    'model' (flash-decode split-K); batch=1 long-context cells shard the
+    sequence over the data axes too.
+
+Everything degrades to replication when divisibility fails — compile
+success is never hostage to a rule.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import data_axes
+
+__all__ = [
+    "auto_spec",
+    "param_specs",
+    "batch_specs",
+    "cache_specs",
+    "make_shardings",
+    "STACKED_PREFIXES",
+]
+
+# param-tree keys whose leaves carry leading layer-stack axes
+STACKED_PREFIXES = {
+    "blocks": 1,
+    "mamba_rem": 1,
+    "slstm": 1,
+    "enc_layers": 1,
+    "dec_layers": 1,
+    "mamba_super": 2,
+    "mlstm_super": 2,
+}
+
+
+def _axis_size(mesh, name: str) -> int:
+    return mesh.shape[name]
+
+
+def auto_spec(shape, mesh, *, skip_dims: int = 0, batch_dim: int | None = None):
+    """Generic assignment: 'model' -> largest divisible dim, then 'data'.
+
+    skip_dims: leading stack dims left unsharded.  batch_dim gets the
+    composed data axes (('pod','data')) instead.
+    """
+    n = len(shape)
+    assign: list = [None] * n
+    used = set(range(skip_dims))
+    used_axes: set = set()
+    if batch_dim is not None:
+        daxes = data_axes(mesh)
+        dsize = int(np.prod([_axis_size(mesh, a) for a in daxes]))
+        if shape[batch_dim] % dsize == 0 and shape[batch_dim] > 0:
+            assign[batch_dim] = daxes if len(daxes) > 1 else daxes[0]
+            used_axes.update(daxes)
+        used.add(batch_dim)
+    for ax in ("model", "data"):
+        if ax not in mesh.axis_names or ax in used_axes:
+            continue
+        size = _axis_size(mesh, ax)
+        cands = [
+            i for i in range(n)
+            if i not in used and shape[i] % size == 0 and shape[i] >= size
+        ]
+        if cands:
+            i = max(cands, key=lambda i: shape[i])
+            assign[i] = ax
+            used.add(i)
+    return P(*assign)
+
+
+def param_specs(params_shapes, mesh):
+    """PartitionSpec pytree matching the params pytree (by eval_shape).
+
+    REPRO_SHARDING=sp_fsdp switches to the FSDP layout (see
+    launch.act_sharding): weights sharded over flat ('data','model'),
+    gathered per use, with sequence-parallel activations.
+    """
+    import os
+
+    if os.environ.get("REPRO_SHARDING") == "sp_fsdp":
+        from repro.launch.act_sharding import fsdp_param_specs
+
+        return fsdp_param_specs(params_shapes, mesh)
+
+    def spec_for(path, leaf):
+        top = path[0].key if hasattr(path[0], "key") else str(path[0])
+        skip = STACKED_PREFIXES.get(top, 0)
+        return auto_spec(leaf.shape, mesh, skip_dims=skip)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_shapes)
+
+
+def batch_specs(batch_shapes, mesh):
+    """Batch dict: dim 0 is always the (global) batch dimension."""
+
+    def spec_for(leaf):
+        if not leaf.shape:
+            return P()
+        return auto_spec(leaf.shape, mesh, batch_dim=0)
+
+    return jax.tree.map(spec_for, batch_shapes)
+
+
+def cache_specs(cache_shapes, mesh):
+    """KV caches & recurrent state.
+
+    Leaf layouts (leading L = layer-stack axis, never sharded):
+      k_packed/v_packed  (L, B, Hkv, S, d//2)
+      k_scales/v_scales  (L, B, Hkv, S, d//g)
+      residuals          (L, B, Hkv, W, d)
+      bf16 k/v           (L, B, Hkv, S, d)
+      ssm / xlstm state  (L[, P], B, H, ...)
+    Rule: batch -> data axes if divisible; then Hkv -> 'model' if
+    divisible, else S -> 'model'; batch=1 -> S gets the data axes too.
+    """
+    daxes = data_axes(mesh)
+    dsize = int(np.prod([_axis_size(mesh, a) for a in daxes]))
+    msize = _axis_size(mesh, "model")
+
+    def spec_for(path, leaf):
+        shape = leaf.shape
+        names = [getattr(p, "name", getattr(p, "key", "")) for p in path]
+        field = names[-1] if names else ""
+        if not shape:
+            return P()
+        # find the batch dim: first dim after stack dims; stack depth from
+        # the cache dict key (attn caches are vmapped once; hybrid ssm_super
+        # twice).  Heuristic: cache arrays are (L, B, ...) or (L, P, B, ...)
+        top = names[0] if names else ""
+        skip = 2 if top in ("ssm_super", "mlstm") else 1
+        if top == "pos" or len(shape) <= skip:
+            return P()
+        assign: list = [None] * len(shape)
+        b_dim = skip
+        seq_dim = None
+        head_dim_idx = None
+        if field in ("k_packed", "k_scales", "v_packed", "v_scales", "k", "v"):
+            head_dim_idx = skip + 1
+            seq_dim = skip + 2
+        elif field in ("k_residual", "v_residual"):
+            head_dim_idx = skip + 1
+        if shape[b_dim] % dsize == 0:
+            assign[b_dim] = daxes if len(daxes) > 1 else daxes[0]
+        model_placed = False
+        if head_dim_idx is not None and shape[head_dim_idx] % msize == 0:
+            assign[head_dim_idx] = "model"
+            model_placed = True
+        if not model_placed and seq_dim is not None and shape[seq_dim] % msize == 0:
+            assign[seq_dim] = "model"
+            model_placed = True
+        if assign[b_dim] is None and seq_dim is not None:
+            # batch=1 long-context: spread the sequence over the data axes
+            if shape[seq_dim] % (dsize * (msize if not model_placed else 1)) == 0:
+                if assign[seq_dim] == "model":
+                    pass
+                elif model_placed:
+                    assign[seq_dim] = daxes if len(daxes) > 1 else daxes[0]
+        if not model_placed:
+            # recurrent states etc.: largest remaining divisible dim
+            cands = [
+                i for i in range(skip, len(shape))
+                if assign[i] is None and shape[i] % msize == 0
+            ]
+            if cands:
+                assign[max(cands, key=lambda i: shape[i])] = "model"
+        return P(*assign)
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_shapes)
+
+
+def make_shardings(spec_tree, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,144 @@
+"""Roofline extraction from compiled dry-run artifacts (EXPERIMENTS.md
+§Roofline).
+
+Three terms, all in seconds, from the PER-DEVICE partitioned module:
+    compute    = HLO_FLOPs_per_device / peak_bf16
+    memory     = HLO_bytes_per_device / HBM_bw
+    collective = collective_bytes_per_device / ICI_link_bw
+
+cost_analysis() provides flops / bytes accessed; collective bytes are NOT
+there, so we parse the optimized HLO text and sum the output-shape bytes
+of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (shapes in the partitioned module are already
+per-device shards, so the sum is per-device traffic).
+"""
+from __future__ import annotations
+
+import re
+
+import numpy as np
+
+from repro.launch.mesh import HW
+
+__all__ = ["parse_collective_bytes", "roofline_terms", "model_flops_estimate"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_ARRAY_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _array_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Sum output bytes per collective kind from optimized HLO text."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"^(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*)$", stripped)
+        if not m:
+            continue
+        rhs = m.group(1)
+        for kind in _COLLECTIVES:
+            # match the op name right after the type signature
+            if re.search(rf"\b{kind}(?:-start|-done)?\(", rhs):
+                if f"{kind}-done(" in rhs:
+                    continue  # bytes counted at -start / sync form
+                # output shapes: everything before the op name
+                sig = rhs.split(f"{kind}", 1)[0]
+                nbytes = sum(
+                    _array_bytes(dt, dims) for dt, dims in _ARRAY_RE.findall(sig)
+                )
+                out[kind] += nbytes
+                counts[kind] += 1
+                break
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["counts"] = counts
+    return out
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   coll_bytes_per_dev: float) -> dict:
+    compute = flops_per_dev / HW.PEAK_BF16_FLOPS
+    memory = bytes_per_dev / HW.HBM_BW
+    collective = coll_bytes_per_dev / HW.ICI_BW
+    terms = {"compute_s": compute, "memory_s": memory,
+             "collective_s": collective}
+    terms["bottleneck"] = max(terms, key=lambda k: terms[k] if k.endswith("_s") else -1)
+    return terms
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS (the "useful compute" yardstick)
+# ---------------------------------------------------------------------------
+
+def count_params(params_shapes, *, moe_scale: float = 1.0) -> tuple:
+    """(total, active) param counts from an eval_shape pytree.
+
+    Expert leaves (paths containing 'moe') count toward `active` scaled by
+    top_k/n_experts.
+    """
+    import jax
+
+    total = 0
+    active = 0
+    for path, leaf in jax.tree_util.tree_leaves_with_path(params_shapes):
+        n = int(np.prod(leaf.shape))
+        total += n
+        names = [str(getattr(p, "key", getattr(p, "name", p))) for p in path]
+        if any("w_gate" in s or "w_up" in s or "w_down" in s for s in names) \
+                and any("moe" in s for s in names):
+            active += int(n * moe_scale)
+        else:
+            active += n
+    return total, active
+
+
+def model_flops_estimate(cfg, shape, params_shapes) -> dict:
+    """MODEL_FLOPS per §Roofline: 6*N*D train (dense), 6*N_active*D MoE;
+    forward-only (2*N*D) for serving cells, plus the attention term."""
+    moe_scale = (
+        cfg.moe.top_k / cfg.moe.n_experts if cfg.moe is not None else 1.0
+    )
+    n_total, n_active = count_params(params_shapes, moe_scale=moe_scale)
+    B, S = shape.global_batch, shape.seq_len
+    n_attn = (
+        cfg.n_layers if cfg.family in ("dense", "moe", "vlm")
+        else (cfg.n_layers // cfg.shared_attn_period if cfg.family == "hybrid"
+              else 0)
+    )
+    if cfg.family == "audio":
+        n_attn = cfg.n_layers + cfg.encoder_layers
+    hq_hd = cfg.n_heads * cfg.head_dim
+    if shape.kind == "train":
+        D = B * S
+        flops = 6.0 * n_active * D
+        flops += 3 * 2.0 * B * S * S * hq_hd * n_attn  # causal ~x0.5, fwd+bwd x3 -> net 3x
+    elif shape.kind == "prefill":
+        D = B * S
+        flops = 2.0 * n_active * D
+        flops += 2.0 * B * S * S * hq_hd * n_attn * 0.5 * 2  # qk + pv, causal
+    else:  # decode: one token, full-context attention reads
+        D = B
+        flops = 2.0 * n_active * D
+        flops += 4.0 * B * S * hq_hd * n_attn
+    return {
+        "params_total": n_total,
+        "params_active": n_active,
+        "model_flops": flops,
+    }

@@ -1,0 +1,64 @@
+"""ShapeDtypeStruct stand-ins for every model input (no allocation), per
+(arch x shape) cell, plus the matching PartitionSpecs.
+
+``input_specs(cfg, shape_cfg)`` -> dict of ShapeDtypeStructs:
+  train  : {tokens (B,S)} (+frames (B,S,d) audio; +patches (B,P,d) vlm,
+           tokens shortened so total positions == S)
+  prefill: same as train inputs
+  decode : {token (B,1)} -- the KV cache of length seq_len is built by
+           ``cache_specs_for``.
+
+Modality frontends are STUBS per assignment: frames/patches are
+precomputed embeddings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.common import COMPUTE_DTYPE
+
+__all__ = ["input_specs", "serve_cache_shapes", "WHISPER_DECODE_ENC_LEN"]
+
+WHISPER_DECODE_ENC_LEN = 1504  # 1500 rounded up to the residual window
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        return {"token": _sds((B, 1), jnp.int32)}
+    out = {}
+    if cfg.family == "audio":
+        # encoder frames + decoder transcript, both seq_len (DESIGN.md §3)
+        out["frames"] = _sds((B, S, cfg.d_model), COMPUTE_DTYPE)
+        out["tokens"] = _sds((B, S), jnp.int32)
+    elif cfg.family == "vlm":
+        n_p = min(cfg.n_patches, S // 2)
+        out["patches"] = _sds((B, n_p, cfg.d_model), COMPUTE_DTYPE)
+        out["tokens"] = _sds((B, S - n_p), jnp.int32)
+    else:
+        out["tokens"] = _sds((B, S), jnp.int32)
+    return out
+
+
+def serve_cache_shapes(model, cfg: ModelConfig, shape: ShapeConfig):
+    """abstract cache pytree for the serving cells (no allocation).
+
+    REPRO_KV_CACHE=bf16 lowers the uncompressed-baseline cache instead
+    (the paper's fp16 DynamicCache analogue) so the dry-run can compare
+    the int4 and bf16 decode memory terms structurally (§Perf).
+    """
+    import os
+
+    quant = os.environ.get("REPRO_KV_CACHE", "int4") != "bf16"
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "audio":
+        enc_len = S if shape.kind == "prefill" else WHISPER_DECODE_ENC_LEN
+        return jax.eval_shape(
+            lambda: model.init_cache(B, S, enc_len, quant=quant))
+    return jax.eval_shape(lambda: model.init_cache(B, S, quant=quant))

@@ -1,0 +1,68 @@
+"""Step functions: train_step (fwd+bwd+AdamW) and serve steps
+(prefill / decode with the SRFT int4 cache), family-dispatched.
+
+These are THE functions the multi-pod dry-run lowers and the examples
+run; one definition serves both.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adam import adam_init, adam_update, clip_by_global_norm
+
+__all__ = ["make_train_step", "make_prefill_step", "make_decode_step",
+           "init_train_state"]
+
+
+def init_train_state(model, key):
+    params = model.init(key)
+    return params, adam_init(params)
+
+
+def make_train_step(model, *, lr=3e-4, clip: float = 1.0):
+    """lr may be a float or a schedule fn(step)->lr (trace-safe)."""
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            return model.loss(p, batch)
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params
+        )
+        grads, gnorm = clip_by_global_norm(grads, clip)
+        step_lr = lr_fn(opt_state.step)
+        params, opt_state = adam_update(grads, opt_state, params, lr=step_lr)
+        out_metrics = {"loss": loss, "grad_norm": gnorm, "lr": step_lr,
+                       **metrics}
+        return params, opt_state, out_metrics
+
+    return train_step
+
+
+def make_prefill_step(model):
+    cfg = model.cfg
+
+    def prefill_step(params, rots, batch, cache):
+        if cfg.family == "audio":
+            return model.prefill(
+                params, rots, batch["frames"], batch["tokens"], cache
+            )
+        if cfg.family == "vlm":
+            return model.prefill(
+                params, rots, batch["tokens"], cache,
+                patches=batch.get("patches"),
+            )
+        return model.prefill(params, rots, batch["tokens"], cache)
+
+    return prefill_step
+
+
+def make_decode_step(model):
+    def decode_step(params, rots, token, cache):
+        return model.decode_step(params, rots, token, cache)
+
+    return decode_step

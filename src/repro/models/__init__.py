@@ -1,0 +1,13 @@
+"""Model zoo: unified LM (dense/moe/vlm/hybrid/ssm) + whisper enc-dec."""
+from repro.models.lm import LM, Rotations
+from repro.models.encdec import EncDec, EncDecRotations
+
+
+def build_model(cfg):
+    """Factory: config -> model object with init/loss/prefill/decode_step."""
+    if cfg.family == "audio":
+        return EncDec(cfg)
+    return LM(cfg)
+
+
+__all__ = ["LM", "EncDec", "Rotations", "EncDecRotations", "build_model"]

@@ -1,0 +1,175 @@
+"""Attention layer: GQA/MQA/MHA + RoPE + qk_norm + optional QKV bias,
+with three read paths:
+
+  * train/prefill  : blockwise flash attention on raw (bf16) K/V; an
+                     optional ``kv_roundtrip`` hook quantize-dequantizes
+                     K/V first (the paper's "hook ΔPPL" measurement mode).
+  * decode (quant) : rotated-space attention over the int4 cache
+                     (the paper's SRFTInt4Cache deployment path).
+  * decode (bf16)  : DynamicCache baseline.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kvcache
+from repro.core.kvcache import BF16KVCache, QuantKVCache
+from repro.core.quant_attention_ref import (
+    decode_attention_bf16,
+    decode_attention_quant,
+    decode_attention_quant_blockwise,
+)
+from repro.core.transforms import Rotation
+from repro.models import common
+from repro.models.flash import flash_attention
+
+__all__ = ["attention_init", "attention_forward", "attention_decode"]
+
+
+def attention_init(key, cfg, *, d_model: int | None = None):
+    d = d_model or cfg.d_model
+    hd = cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": common.dense_init(ks[0], d, (cfg.n_heads, hd), bias=cfg.qkv_bias),
+        "wk": common.dense_init(ks[1], d, (cfg.n_kv_heads, hd), bias=cfg.qkv_bias),
+        "wv": common.dense_init(ks[2], d, (cfg.n_kv_heads, hd), bias=cfg.qkv_bias),
+        "wo": common.dense_init(ks[3], cfg.n_heads * hd, d),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = common.rmsnorm_init(hd)
+        p["k_norm"] = common.rmsnorm_init(hd)
+    return p
+
+
+def _project_qkv(p, x, cfg, positions):
+    """x (B,S,d) -> q (B,Hq,S,hd), k/v (B,Hkv,S,hd), post qk_norm + RoPE."""
+    q = common.dense(p["wq"], x).transpose(0, 2, 1, 3)  # (B,H,S,hd)
+    k = common.dense(p["wk"], x).transpose(0, 2, 1, 3)
+    v = common.dense(p["wv"], x).transpose(0, 2, 1, 3)
+    if cfg.qk_norm:
+        q = common.rmsnorm(p["q_norm"], q, eps=cfg.norm_eps)
+        k = common.rmsnorm(p["k_norm"], k, eps=cfg.norm_eps)
+    if cfg.rope_theta:
+        q = common.apply_rope(q, positions, cfg.rope_theta)
+        k = common.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _merge_heads(p, o):
+    """(B,H,S,hd) -> (B,S,d) via output projection."""
+    B, H, S, hd = o.shape
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, H * hd)
+    return common.dense(p["wo"], o)
+
+
+def attention_forward(
+    p,
+    x: jax.Array,  # (B, S, d)
+    cfg,
+    *,
+    positions: jax.Array | None = None,
+    q_offset: int | jax.Array = 0,
+    causal: bool = True,
+    kv_block: int = 1024,
+    kv_roundtrip: Optional[Callable] = None,
+    cache: QuantKVCache | BF16KVCache | None = None,
+    rot_k: Rotation | None = None,
+    rot_v: Rotation | None = None,
+    cross_kv: jax.Array | None = None,  # encoder states for cross-attn
+    return_kv: bool = False,
+):
+    """Full-sequence attention (train or prefill).
+
+    Returns (y, new_cache) -- or (y, new_cache, (k, v)) with
+    ``return_kv`` (activation collection for lambda calibration).  If
+    ``cache`` is given (prefill), K/V are written into it (quantized for
+    QuantKVCache).  ``kv_roundtrip``, if given, maps (k, v) -> (k~, v~)
+    before attention -- the paper's hook measurement (quantization error
+    applied to ALL reads).
+    """
+    B, S, _ = x.shape
+    if positions is None:
+        positions = q_offset + jnp.arange(S)
+    if cross_kv is not None:
+        # cross-attention: queries from x, K/V from encoder states
+        q = common.dense(p["wq"], x).transpose(0, 2, 1, 3)
+        k = common.dense(p["wk"], cross_kv).transpose(0, 2, 1, 3)
+        v = common.dense(p["wv"], cross_kv).transpose(0, 2, 1, 3)
+        causal = False
+    else:
+        q, k, v = _project_qkv(p, x, cfg, positions)
+
+    if kv_roundtrip is not None:
+        k, v = kv_roundtrip(k, v)
+
+    new_cache = None
+    if isinstance(cache, QuantKVCache):
+        new_cache = kvcache.prefill(cache, rot_k, rot_v, k, v)
+    elif isinstance(cache, BF16KVCache):
+        new_cache = kvcache.bf16_prefill(cache, k, v)
+
+    o = flash_attention(
+        q, k, v, causal=causal, q_offset=q_offset, kv_block=kv_block,
+        scale=cfg.head_dim ** -0.5,
+    )
+    if return_kv:
+        return _merge_heads(p, o), new_cache, (k, v)
+    return _merge_heads(p, o), new_cache
+
+
+def attention_decode(
+    p,
+    x: jax.Array,  # (B, 1, d)
+    cfg,
+    cache: QuantKVCache | BF16KVCache,
+    *,
+    position: jax.Array,  # () absolute position of this token
+    rot_k: Rotation | None = None,
+    rot_v: Rotation | None = None,
+    cross: bool = False,
+    kv_block: int = 512,
+    impl: str = "gather",  # gather (GSPMD-friendly) | blockwise | kernel
+):
+    """One-token decode against the cache.  Returns (y, new_cache).
+
+    impl="gather" dequantizes the local cache shard in one shot (no
+    dynamic_slice across sharded seq — the multi-chip serve path);
+    "blockwise" is the flash-decode jnp mirror; "kernel" calls the Pallas
+    kernel (single-device / shard_map inner).
+    """
+    if cross:
+        # cross-attention decode: read-only cache (filled at prefill)
+        q = common.dense(p["wq"], x).transpose(0, 2, 1, 3)
+        new_cache = cache
+    else:
+        pos = position[None] if position.ndim == 0 else position
+        q, k, v = _project_qkv(p, x, cfg, pos)
+        if isinstance(cache, QuantKVCache):
+            new_cache = kvcache.decode_update(cache, rot_k, rot_v, k, v)
+        else:
+            new_cache = kvcache.bf16_decode_update(cache, k, v)
+
+    if isinstance(cache, QuantKVCache):
+        if impl == "blockwise":
+            o = decode_attention_quant_blockwise(
+                q, new_cache, rot_k, rot_v,
+                scale=cfg.head_dim ** -0.5, kv_block=kv_block,
+            )
+        elif impl == "kernel":
+            from repro.kernels.quant_attention import decode_attention_kernel
+
+            o = decode_attention_kernel(
+                q, new_cache, rot_k, rot_v, scale=cfg.head_dim ** -0.5,
+                blk=kv_block,
+            )
+        else:
+            o = decode_attention_quant(
+                q, new_cache, rot_k, rot_v, scale=cfg.head_dim ** -0.5
+            )
+    else:
+        o = decode_attention_bf16(q, new_cache, scale=cfg.head_dim ** -0.5)
+    return _merge_heads(p, o), new_cache

@@ -1,0 +1,297 @@
+"""Whisper-style encoder-decoder (audio family).
+
+The conv frontend is a STUB per assignment: ``encode`` consumes precomputed
+frame embeddings (B, S_enc, d_model).  Decoder layers: causal self-attn
+(int4-quantized KV cache) + cross-attn into encoder states (KV computed
+once at prefill and int4-quantized -- read-many, pure bandwidth win) +
+GELU FFN.  LayerNorm, sinusoidal encoder positions, learned decoder
+positions.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import kvcache
+from repro.core.hooks import make_roundtrip
+from repro.core.quant_attention_ref import decode_attention_quant_blockwise
+from repro.core.transforms import Rotation, make_rotation
+from repro.models import attention, common, ffn
+from repro.models.lm import Rotations, _stack_init
+
+__all__ = ["EncDec", "EncDecRotations"]
+
+MAX_DECODER_POSITIONS = 1 << 16  # learned decoder positions table size
+
+
+class EncDecRotations(NamedTuple):
+    self_kv: Rotations  # decoder self-attention caches
+    cross_kv: Rotations  # cross-attention caches
+
+
+class EncDec:
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.family == "audio"
+        self.cfg = cfg
+
+    # ------------------------------------------------------------------ init
+    def _enc_layer_init(self, key):
+        cfg = self.cfg
+        k1, k2 = jax.random.split(key)
+        return {
+            "ln_attn": common.layernorm_init(cfg.d_model),
+            "attn": attention.attention_init(k1, cfg),
+            "ln_ffn": common.layernorm_init(cfg.d_model),
+            "ffn": ffn.ffn_init(k2, cfg.d_model, cfg.d_ff, "gelu"),
+        }
+
+    def _dec_layer_init(self, key):
+        cfg = self.cfg
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "ln_self": common.layernorm_init(cfg.d_model),
+            "self_attn": attention.attention_init(k1, cfg),
+            "ln_cross": common.layernorm_init(cfg.d_model),
+            "cross_attn": attention.attention_init(k2, cfg),
+            "ln_ffn": common.layernorm_init(cfg.d_model),
+            "ffn": ffn.ffn_init(k3, cfg.d_model, cfg.d_ff, "gelu"),
+        }
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        ks = jax.random.split(key, 5)
+        return {
+            "embed": common.embed_init(ks[0], cfg.vocab_size, cfg.d_model),
+            "dec_pos": (
+                jax.random.normal(
+                    ks[1], (MAX_DECODER_POSITIONS, cfg.d_model), jnp.float32
+                ) * 0.01
+            ).astype(common.PARAM_DTYPE),
+            "enc_layers": _stack_init(
+                self._enc_layer_init, ks[2], cfg.encoder_layers
+            ),
+            "dec_layers": _stack_init(self._dec_layer_init, ks[3], cfg.n_layers),
+            "ln_enc_final": common.layernorm_init(cfg.d_model),
+            "ln_dec_final": common.layernorm_init(cfg.d_model),
+            "unembed": common.dense_init(ks[4], cfg.d_model, cfg.vocab_size),
+        }
+
+    def init_rotations(self, key) -> EncDecRotations:
+        cfg = self.cfg
+        n = cfg.n_layers
+        ks = jax.random.split(key, 4)
+
+        def mk(k):
+            return make_rotation(cfg.rotation, k, cfg.head_dim)
+
+        def stack(k):
+            return jax.vmap(mk)(jax.random.split(k, n))
+
+        return EncDecRotations(
+            self_kv=Rotations(k=stack(ks[0]), v=stack(ks[1])),
+            cross_kv=Rotations(k=stack(ks[2]), v=stack(ks[3])),
+        )
+
+    def init_cache(self, batch: int, s_max_dec: int, s_enc: int, *,
+                   quant: bool = True):
+        cfg = self.cfg
+
+        def mk(s):
+            def one(_):
+                if quant and cfg.kv_quant:
+                    return kvcache.init_cache(
+                        batch, cfg.n_kv_heads, s, cfg.head_dim,
+                        group=cfg.kv_group, window=cfg.kv_window,
+                    )
+                return kvcache.init_bf16_cache(
+                    batch, cfg.n_kv_heads, s, cfg.head_dim
+                )
+            return jax.vmap(one)(jnp.arange(cfg.n_layers))
+
+        return {
+            "self": mk(s_max_dec),
+            # cross KV has no residual-window dynamics: fill at prefill
+            "cross": mk(((s_enc + cfg.kv_window - 1) // cfg.kv_window)
+                        * cfg.kv_window + cfg.kv_window),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+
+    # ----------------------------------------------------------------- encode
+    def encode(self, params, frames: jax.Array, *, kv_block: int = 1024):
+        """frames (B, S_enc, d_model) -- precomputed stub embeddings."""
+        cfg = self.cfg
+        S = frames.shape[1]
+        x = frames.astype(common.COMPUTE_DTYPE) + common.sinusoidal_positions(
+            S, cfg.d_model
+        ).astype(common.COMPUTE_DTYPE)
+
+        def body(x, p):
+            h, _ = attention.attention_forward(
+                p["attn"], common.layernorm(p["ln_attn"], x), cfg,
+                causal=False, kv_block=kv_block,
+            )
+            x = x + h
+            h = ffn.ffn_apply(p["ffn"], common.layernorm(p["ln_ffn"], x),
+                              "gelu")
+            return x + h, None
+
+        x, _ = common.scan(body, x, params["enc_layers"])
+        return common.layernorm(params["ln_enc_final"], x)
+
+    # ---------------------------------------------------------------- decode
+    def _dec_layer_fwd(self, p, x, enc, *, q_offset=0, kv_roundtrip=None,
+                       kv_block=1024):
+        cfg = self.cfg
+        h, _ = attention.attention_forward(
+            p["self_attn"], common.layernorm(p["ln_self"], x), cfg,
+            q_offset=q_offset, kv_roundtrip=kv_roundtrip, kv_block=kv_block,
+        )
+        x = x + h
+        h, _ = attention.attention_forward(
+            p["cross_attn"], common.layernorm(p["ln_cross"], x), cfg,
+            cross_kv=enc, kv_roundtrip=kv_roundtrip, kv_block=kv_block,
+        )
+        x = x + h
+        h = ffn.ffn_apply(p["ffn"], common.layernorm(p["ln_ffn"], x), "gelu")
+        return x + h
+
+    def forward(self, params, frames, tokens, *, rots=None,
+                kv_quant_cfg=None, remat: bool = True, kv_block: int = 1024):
+        """Teacher-forced decoder logits (B, S_dec, vocab)."""
+        cfg = self.cfg
+        enc = self.encode(params, frames, kv_block=kv_block)
+        S = tokens.shape[1]
+        x = params["embed"]["embedding"][tokens].astype(common.COMPUTE_DTYPE)
+        x = x + params["dec_pos"][:S].astype(common.COMPUTE_DTYPE)
+
+        def body(x, inp):
+            if kv_quant_cfg is not None and rots is not None:
+                p, rk, rv = inp
+                rt = make_roundtrip(rk, rv, **kv_quant_cfg)
+            else:
+                p, rt = inp, None
+
+            def inner(x_):
+                return self._dec_layer_fwd(
+                    p, x_, enc, kv_roundtrip=rt, kv_block=kv_block
+                )
+
+            return (jax.checkpoint(inner)(x) if remat else inner(x)), None
+
+        xs = (
+            (params["dec_layers"], rots.self_kv.k, rots.self_kv.v)
+            if (kv_quant_cfg is not None and rots is not None)
+            else params["dec_layers"]
+        )
+        x, _ = common.scan(body, x, xs)
+        x = common.layernorm(params["ln_dec_final"], x)
+        return common.dense(params["unembed"], x).astype(jnp.float32)
+
+    def loss(self, params, batch, *, remat: bool = True):
+        logits = self.forward(
+            params, batch["frames"], batch["tokens"], remat=remat
+        )
+        lp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), axis=-1)
+        tgt = batch["tokens"][:, 1:]
+        nll = -jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+        loss = jnp.mean(nll)
+        return loss, {"ce": loss, "aux": jnp.zeros(())}
+
+    # --------------------------------------------------------------- serving
+    def prefill(self, params, rots: EncDecRotations, frames, tokens, cache,
+                *, kv_block: int = 1024):
+        """Encode audio, quantize cross-KV once, prefill decoder self-KV."""
+        cfg = self.cfg
+        enc = self.encode(params, frames, kv_block=kv_block)
+        S = tokens.shape[1]
+        x = params["embed"]["embedding"][tokens].astype(common.COMPUTE_DTYPE)
+        x = x + params["dec_pos"][:S].astype(common.COMPUTE_DTYPE)
+
+        def body(x, inp):
+            p, c_self, c_cross, rsk, rsv, rck, rcv = inp
+            h, new_self = attention.attention_forward(
+                p["self_attn"], common.layernorm(p["ln_self"], x), cfg,
+                cache=c_self, rot_k=rsk, rot_v=rsv, kv_block=kv_block,
+            )
+            x = x + h
+            # cross attention: compute K/V from enc once, store quantized
+            xq = common.layernorm(p["ln_cross"], x)
+            q = common.dense(p["cross_attn"]["wq"], xq).transpose(0, 2, 1, 3)
+            k = common.dense(p["cross_attn"]["wk"], enc).transpose(0, 2, 1, 3)
+            v = common.dense(p["cross_attn"]["wv"], enc).transpose(0, 2, 1, 3)
+            if isinstance(c_cross, kvcache.QuantKVCache):
+                new_cross = kvcache.prefill(c_cross, rck, rcv, k, v)
+            else:
+                new_cross = kvcache.bf16_prefill(c_cross, k, v)
+            from repro.models.flash import flash_attention
+
+            o = flash_attention(
+                q, k, v, causal=False, scale=cfg.head_dim ** -0.5,
+                kv_block=kv_block,
+            )
+            B, H, Sq, hd = o.shape
+            o = o.transpose(0, 2, 1, 3).reshape(B, Sq, H * hd)
+            x = x + common.dense(p["cross_attn"]["wo"], o)
+            h = ffn.ffn_apply(p["ffn"], common.layernorm(p["ln_ffn"], x),
+                              "gelu")
+            return x + h, (new_self, new_cross)
+
+        x, (new_self, new_cross) = common.scan(
+            body, x,
+            (params["dec_layers"], cache["self"], cache["cross"],
+             rots.self_kv.k, rots.self_kv.v, rots.cross_kv.k,
+             rots.cross_kv.v),
+        )
+        cache = dict(cache, self=new_self, cross=new_cross,
+                     pos=jnp.asarray(S, jnp.int32))
+        x = common.layernorm(params["ln_dec_final"], x[:, -1:])
+        return common.dense(params["unembed"], x).astype(jnp.float32), cache
+
+    def decode_step(self, params, rots: EncDecRotations, token, cache, *,
+                    kv_block: int = 512):
+        cfg = self.cfg
+        pos = cache["pos"]
+        x = params["embed"]["embedding"][token].astype(common.COMPUTE_DTYPE)
+        x = x + jnp.take(params["dec_pos"], pos[None], axis=0).astype(
+            common.COMPUTE_DTYPE
+        )
+
+        def body(x, inp):
+            p, c_self, c_cross, rsk, rsv, rck, rcv = inp
+            h, new_self = attention.attention_decode(
+                p["self_attn"], common.layernorm(p["ln_self"], x), cfg,
+                c_self, position=pos, rot_k=rsk, rot_v=rsv, kv_block=kv_block,
+            )
+            x = x + h
+            # cross-attn decode: read-only quantized cache
+            xq = common.layernorm(p["ln_cross"], x)
+            q = common.dense(p["cross_attn"]["wq"], xq).transpose(0, 2, 1, 3)
+            if isinstance(c_cross, kvcache.QuantKVCache):
+                o = decode_attention_quant_blockwise(
+                    q, c_cross, rck, rcv, scale=cfg.head_dim ** -0.5,
+                    kv_block=kv_block,
+                )
+            else:
+                from repro.core.quant_attention_ref import decode_attention_bf16
+
+                o = decode_attention_bf16(q, c_cross,
+                                          scale=cfg.head_dim ** -0.5)
+            B, H, Sq, hd = o.shape
+            o = o.transpose(0, 2, 1, 3).reshape(B, Sq, H * hd)
+            x = x + common.dense(p["cross_attn"]["wo"], o)
+            h = ffn.ffn_apply(p["ffn"], common.layernorm(p["ln_ffn"], x),
+                              "gelu")
+            return x + h, (new_self, c_cross)
+
+        x, (new_self, _) = common.scan(
+            body, x,
+            (params["dec_layers"], cache["self"], cache["cross"],
+             rots.self_kv.k, rots.self_kv.v, rots.cross_kv.k,
+             rots.cross_kv.v),
+        )
+        cache = dict(cache, self=new_self, pos=pos + 1)
+        x = common.layernorm(params["ln_dec_final"], x)
+        return common.dense(params["unembed"], x).astype(jnp.float32), cache

@@ -1,0 +1,45 @@
+"""Dense FFN variants: SwiGLU (llama/qwen), GeGLU (gemma), plain GELU
+(whisper)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+__all__ = ["ffn_init", "ffn_apply"]
+
+
+def ffn_init(key, d_model: int, d_ff: int, activation: str):
+    ks = jax.random.split(key, 3)
+    if activation in ("swiglu", "geglu"):
+        return {
+            "w_gate": common.dense_init(ks[0], d_model, d_ff),
+            "w_up": common.dense_init(ks[1], d_model, d_ff),
+            "w_down": common.dense_init(ks[2], d_ff, d_model),
+        }
+    if activation == "gelu":
+        return {
+            "w_up": common.dense_init(ks[0], d_model, d_ff),
+            "w_down": common.dense_init(ks[1], d_ff, d_model),
+        }
+    raise ValueError(f"unknown activation {activation}")
+
+
+def ffn_apply(p, x: jax.Array, activation: str) -> jax.Array:
+    if activation == "swiglu":
+        g = jax.nn.silu(common.dense(p["w_gate"], x).astype(jnp.float32))
+        u = common.dense(p["w_up"], x).astype(jnp.float32)
+        return common.dense(p["w_down"], (g * u).astype(common.COMPUTE_DTYPE))
+    if activation == "geglu":
+        g = jax.nn.gelu(
+            common.dense(p["w_gate"], x).astype(jnp.float32), approximate=True
+        )
+        u = common.dense(p["w_up"], x).astype(jnp.float32)
+        return common.dense(p["w_down"], (g * u).astype(common.COMPUTE_DTYPE))
+    if activation == "gelu":
+        h = jax.nn.gelu(
+            common.dense(p["w_up"], x).astype(jnp.float32), approximate=True
+        )
+        return common.dense(p["w_down"], h.astype(common.COMPUTE_DTYPE))
+    raise ValueError(f"unknown activation {activation}")

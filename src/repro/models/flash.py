@@ -1,0 +1,92 @@
+"""Blockwise (flash-style) attention in pure JAX: scan over KV blocks with
+online softmax.  O(S * block) memory instead of O(S^2) -- required for the
+32k prefill and 4k train shapes.  GQA-aware without materializing repeated
+KV heads.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+__all__ = ["flash_attention"]
+
+_NEG_INF = -1e30
+
+
+def flash_attention(
+    q: jax.Array,  # (B, Hq, Sq, d)
+    k: jax.Array,  # (B, Hkv, Skv, d)
+    v: jax.Array,  # (B, Hkv, Skv, d)
+    *,
+    causal: bool = True,
+    q_offset: int | jax.Array = 0,
+    sliding_window: int | None = None,
+    scale: float | None = None,
+    kv_block: int = 1024,
+    kv_valid_len: jax.Array | None = None,
+) -> jax.Array:
+    """Online-softmax attention.  Returns (B, Hq, Sq, d) in q.dtype.
+
+    q_offset: absolute position of q[..., 0, :] (prefill continuation /
+    decode).  kv_valid_len: mask KV positions >= this (static-shape caches).
+    """
+    B, Hq, Sq, d = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    sm = scale if scale is not None else d ** -0.5
+
+    # SP policy: K/V replicated over 'model' (one small all-gather); Q
+    # inherits the sequence sharding, shrinking the S x blk fp32 logits
+    # by the model-axis size per device.
+    k = common.shard_hint(k, "kv_full")
+    v = common.shard_hint(v, "kv_full")
+
+    blk = min(kv_block, Skv)
+    n_blk = -(-Skv // blk)
+    pad = n_blk * blk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    valid = Skv if kv_valid_len is None else kv_valid_len
+
+    qg = q.reshape(B, Hkv, G, Sq, d).astype(jnp.float32) * sm
+    q_pos = q_offset + jnp.arange(Sq)  # absolute query positions
+
+    # stacked blocks as scan inputs: (n_blk, B, Hkv, blk, d)
+    kb = jnp.moveaxis(k.reshape(B, Hkv, n_blk, blk, d), 2, 0)
+    vb = jnp.moveaxis(v.reshape(B, Hkv, n_blk, blk, d), 2, 0)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        j, kj, vj = inp
+        kv_pos = j * blk + jnp.arange(blk)
+        logits = jnp.einsum(
+            "bhgqd,bhsd->bhgqs", qg, kj.astype(jnp.float32)
+        )  # (B,Hkv,G,Sq,blk)
+        mask = (kv_pos[None, :] < valid)
+        if causal:
+            mask = mask & (kv_pos[None, :] <= q_pos[:, None])
+        if sliding_window is not None:
+            mask = mask & (kv_pos[None, :] > q_pos[:, None] - sliding_window)
+        logits = jnp.where(mask[None, None, None], logits, _NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhgqs,bhsd->bhgqd", p, vj.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, G, Sq), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, Sq, d), jnp.float32)
+    (m, l, acc), _ = common.scan(
+        body, (m0, l0, a0), (jnp.arange(n_blk), kb, vb)
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, Hq, Sq, d).astype(q.dtype)

@@ -1,0 +1,628 @@
+"""Unified decoder-only LM covering the dense / moe / vlm / hybrid / ssm
+families, with scan-over-layers (HLO size O(1) in depth) and three entry
+points: ``forward`` (teacher-forced logits, optional KV-quant hook),
+``prefill`` and ``decode_step`` (serving with the int4 SRFT cache).
+
+Layer stacking:
+  dense/moe/vlm : N identical blocks, one lax.scan.
+  hybrid(zamba2): groups of P mamba2 blocks + one SHARED attention block
+                  (same params every firing); scan over groups, remainder
+                  mamba blocks scanned separately.
+  ssm(xlstm)    : groups of (period-1) mLSTM + 1 sLSTM; scan over groups.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import kvcache
+from repro.core.hooks import make_roundtrip
+from repro.core.transforms import Rotation, make_rotation
+from repro.models import attention, common, ffn, moe, ssm, xlstm
+
+__all__ = ["LM", "Rotations", "slice_rotation"]
+
+
+class Rotations(NamedTuple):
+    k: Rotation  # stacked (n_attn_layers, ...) pytree
+    v: Rotation
+
+
+def slice_rotation(rots: Rotation, i) -> Rotation:
+    return jax.tree.map(lambda a: a[i], rots)
+
+
+def _stack_init(init_fn, key, n: int):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+class LM:
+    """Functional model: params/caches are pytrees, methods are pure."""
+
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.family in ("dense", "moe", "vlm", "hybrid", "ssm")
+        self.cfg = cfg
+
+    # ------------------------------------------------------------------ init
+    def _block_init(self, key):
+        """One transformer block (dense/moe/vlm)."""
+        cfg = self.cfg
+        k1, k2, k3 = jax.random.split(key, 3)
+        p = {
+            "ln_attn": common.rmsnorm_init(cfg.d_model),
+            "attn": attention.attention_init(k1, cfg),
+            "ln_ffn": common.rmsnorm_init(cfg.d_model),
+        }
+        if cfg.moe is not None:
+            p["moe"] = moe.moe_init(k2, cfg.d_model, cfg.moe)
+        else:
+            p["ffn"] = ffn.ffn_init(k3, cfg.d_model, cfg.d_ff,
+                                    cfg.ffn_activation)
+        return p
+
+    def _mamba_block_init(self, key):
+        return {
+            "ln": common.rmsnorm_init(self.cfg.d_model),
+            "mamba": ssm.mamba2_init(key, self.cfg),
+        }
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        ks = jax.random.split(key, 8)
+        params: dict[str, Any] = {
+            "embed": common.embed_init(ks[0], cfg.vocab_size, cfg.d_model),
+            "ln_final": common.rmsnorm_init(cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            params["unembed"] = common.dense_init(
+                ks[1], cfg.d_model, cfg.vocab_size
+            )
+        if cfg.family in ("dense", "moe", "vlm"):
+            params["blocks"] = _stack_init(self._block_init, ks[2], cfg.n_layers)
+        elif cfg.family == "hybrid":
+            P = cfg.shared_attn_period
+            n_super = cfg.n_layers // P
+            rem = cfg.n_layers - n_super * P
+            params["mamba_super"] = jax.vmap(
+                lambda k: _stack_init(self._mamba_block_init, k, P)
+            )(jax.random.split(ks[2], n_super))
+            if rem:
+                params["mamba_rem"] = _stack_init(
+                    self._mamba_block_init, ks[3], rem
+                )
+            params["shared_attn"] = self._block_init(ks[4])  # one copy
+        elif cfg.family == "ssm":
+            x = cfg.xlstm
+            P = x.slstm_period
+            n_super = cfg.n_layers // P
+            assert n_super * P == cfg.n_layers
+            params["mlstm_super"] = jax.vmap(
+                lambda k: _stack_init(
+                    lambda kk: {
+                        "ln": common.rmsnorm_init(cfg.d_model),
+                        "mlstm": xlstm.mlstm_init(kk, cfg),
+                    },
+                    k, P - 1,
+                )
+            )(jax.random.split(ks[2], n_super))
+            params["slstm"] = _stack_init(
+                lambda kk: {
+                    "ln": common.rmsnorm_init(cfg.d_model),
+                    "slstm": xlstm.slstm_init(kk, cfg),
+                },
+                ks[3], n_super,
+            )
+        return params
+
+    # -------------------------------------------------------------- rotations
+    @property
+    def n_attn_layers(self) -> int:
+        cfg = self.cfg
+        if cfg.family in ("dense", "moe", "vlm"):
+            return cfg.n_layers
+        if cfg.family == "hybrid":
+            return cfg.n_layers // cfg.shared_attn_period
+        return 0  # ssm
+
+    def init_rotations(self, key) -> Optional[Rotations]:
+        cfg = self.cfg
+        n = self.n_attn_layers
+        if n == 0 or not cfg.kv_quant:
+            return None
+        kk, kv = jax.random.split(key)
+
+        def mk(k):
+            return make_rotation(cfg.rotation, k, cfg.head_dim)
+
+        return Rotations(
+            k=jax.vmap(mk)(jax.random.split(kk, n)),
+            v=jax.vmap(mk)(jax.random.split(kv, n)),
+        )
+
+    # ----------------------------------------------------------------- cache
+    def init_cache(self, batch: int, s_max: int, *, quant: bool = True):
+        cfg = self.cfg
+        cache: dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+        n_attn = self.n_attn_layers
+
+        def mk_attn(_):
+            if quant and cfg.kv_quant:
+                return kvcache.init_cache(
+                    batch, cfg.n_kv_heads, s_max, cfg.head_dim,
+                    group=cfg.kv_group, window=cfg.kv_window,
+                )
+            return kvcache.init_bf16_cache(
+                batch, cfg.n_kv_heads, s_max, cfg.head_dim
+            )
+
+        if n_attn:
+            cache["attn"] = jax.vmap(mk_attn)(jnp.arange(n_attn))
+        if cfg.family == "hybrid":
+            P = cfg.shared_attn_period
+            n_super = cfg.n_layers // P
+            rem = cfg.n_layers - n_super * P
+            mk = lambda _: ssm.init_ssm_state(cfg, batch)
+            cache["ssm_super"] = jax.vmap(
+                lambda _: jax.vmap(mk)(jnp.arange(P))
+            )(jnp.arange(n_super))
+            if rem:
+                cache["ssm_rem"] = jax.vmap(mk)(jnp.arange(rem))
+        if cfg.family == "ssm":
+            x = cfg.xlstm
+            n_super = cfg.n_layers // x.slstm_period
+            cache["mlstm"] = jax.vmap(
+                lambda _: jax.vmap(
+                    lambda __: xlstm.init_mlstm_state(cfg, batch)
+                )(jnp.arange(x.slstm_period - 1))
+            )(jnp.arange(n_super))
+            cache["slstm"] = jax.vmap(
+                lambda _: xlstm.init_slstm_state(cfg, batch)
+            )(jnp.arange(n_super))
+        return cache
+
+    # ------------------------------------------------------------- embedding
+    def _embed(self, params, tokens, patches=None):
+        cfg = self.cfg
+        x = params["embed"]["embedding"][tokens].astype(common.COMPUTE_DTYPE)
+        if cfg.embed_scale:
+            x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(x.dtype)
+        if cfg.family == "vlm" and patches is not None:
+            # prefill/train: patch embeddings prepended; decode steps are
+            # text-only (patches live in the KV cache already)
+            x = jnp.concatenate(
+                [patches.astype(common.COMPUTE_DTYPE), x], axis=1
+            )
+        return x
+
+    def _unembed(self, params, x):
+        cfg = self.cfg
+        x = common.rmsnorm(params["ln_final"], x, eps=cfg.norm_eps)
+        if cfg.tie_embeddings:
+            w = params["embed"]["embedding"]
+            return jax.lax.dot_general(
+                common.dot_operand(x), common.dot_operand(w),
+                (((x.ndim - 1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+        return common.dense(params["unembed"], x).astype(jnp.float32)
+
+    # ---------------------------------------------------------- block bodies
+    def _block_fwd(self, p, x, *, q_offset=0, kv_roundtrip=None,
+                   kv_block=1024):
+        """Full-seq transformer block (train/eval)."""
+        cfg = self.cfg
+        h, _ = attention.attention_forward(
+            p["attn"],
+            common.rmsnorm(p["ln_attn"], x, eps=cfg.norm_eps),
+            cfg, q_offset=q_offset, kv_roundtrip=kv_roundtrip,
+            kv_block=kv_block,
+        )
+        x = x + h
+        h_in = common.rmsnorm(p["ln_ffn"], x, eps=cfg.norm_eps)
+        if cfg.moe is not None:
+            h, aux = moe.moe_apply(p["moe"], h_in, cfg.moe, d_model=cfg.d_model)
+        else:
+            h, aux = ffn.ffn_apply(p["ffn"], h_in, cfg.ffn_activation), 0.0
+        return x + h, aux
+
+    def _block_prefill(self, p, x, cache, rot_k, rot_v, *, kv_block=1024):
+        cfg = self.cfg
+        h, new_cache = attention.attention_forward(
+            p["attn"],
+            common.rmsnorm(p["ln_attn"], x, eps=cfg.norm_eps),
+            cfg, cache=cache, rot_k=rot_k, rot_v=rot_v, kv_block=kv_block,
+        )
+        x = x + h
+        h_in = common.rmsnorm(p["ln_ffn"], x, eps=cfg.norm_eps)
+        if cfg.moe is not None:
+            h, _ = moe.moe_apply(p["moe"], h_in, cfg.moe, d_model=cfg.d_model)
+        else:
+            h = ffn.ffn_apply(p["ffn"], h_in, cfg.ffn_activation)
+        return x + h, new_cache
+
+    def _block_decode(self, p, x, cache, rot_k, rot_v, *, position,
+                      kv_block=512):
+        cfg = self.cfg
+        h, new_cache = attention.attention_decode(
+            p["attn"],
+            common.rmsnorm(p["ln_attn"], x, eps=cfg.norm_eps),
+            cfg, cache, position=position, rot_k=rot_k, rot_v=rot_v,
+            kv_block=kv_block,
+        )
+        x = x + h
+        h_in = common.rmsnorm(p["ln_ffn"], x, eps=cfg.norm_eps)
+        if cfg.moe is not None:
+            h, _ = moe.moe_apply(p["moe"], h_in, cfg.moe, d_model=cfg.d_model)
+        else:
+            h = ffn.ffn_apply(p["ffn"], h_in, cfg.ffn_activation)
+        return x + h, new_cache
+
+    # ----------------------------------------------------------- full forward
+    def forward(self, params, tokens, *, patches=None, rots: Rotations = None,
+                kv_quant_cfg: dict | None = None, remat: bool = True,
+                kv_block: int = 1024):
+        """Teacher-forced logits (B, S_total, vocab).
+
+        kv_quant_cfg = {bits, scheme, group} activates the paper's hook
+        measurement (requires ``rots`` for rotated schemes).
+        """
+        cfg = self.cfg
+        x = self._embed(params, tokens, patches)
+        x = common.shard_hint(x, "residual")
+        aux_total = jnp.zeros((), jnp.float32)
+
+        if cfg.family in ("dense", "moe", "vlm"):
+            def body(carry, inp):
+                x, aux = carry
+                if kv_quant_cfg is not None and rots is not None:
+                    p, rk, rv = inp
+                    rt = make_roundtrip(rk, rv, **kv_quant_cfg)
+                else:
+                    p = inp
+                    rt = None
+                fwd = self._block_fwd
+                if remat:
+                    fwd = jax.checkpoint(
+                        lambda p_, x_: self._block_fwd(
+                            p_, x_, kv_roundtrip=rt, kv_block=kv_block
+                        )
+                    )
+                    y, a = fwd(p, x)
+                else:
+                    y, a = fwd(p, x, kv_roundtrip=rt, kv_block=kv_block)
+                y = common.shard_hint(y, "residual")
+                return (y, aux + a), None
+
+            xs = (
+                (params["blocks"], rots.k, rots.v)
+                if (kv_quant_cfg is not None and rots is not None)
+                else params["blocks"]
+            )
+            (x, aux_total), _ = common.scan(body, (x, aux_total), xs)
+
+        elif cfg.family == "hybrid":
+            x, aux_total = self._hybrid_forward(
+                params, x, rots, kv_quant_cfg, remat, kv_block
+            )
+        elif cfg.family == "ssm":
+            x = self._xlstm_forward(params, x, remat)
+
+        logits = common.shard_hint(self._unembed(params, x), "logits")
+        return logits, aux_total
+
+    def collect_kv(self, params, tokens, *, patches=None, kv_block=1024):
+        """Run the stack and return per-layer raw K/V activations
+        (L, B, Hkv, S, d) -- the calibration-data collection pass
+        (dense/moe/vlm families)."""
+        cfg = self.cfg
+        assert cfg.family in ("dense", "moe", "vlm")
+        x = self._embed(params, tokens, patches)
+
+        def body(x, p):
+            h, _, kv = attention.attention_forward(
+                p["attn"],
+                common.rmsnorm(p["ln_attn"], x, eps=cfg.norm_eps),
+                cfg, kv_block=kv_block, return_kv=True,
+            )
+            x = x + h
+            h_in = common.rmsnorm(p["ln_ffn"], x, eps=cfg.norm_eps)
+            if cfg.moe is not None:
+                h, _ = moe.moe_apply(p["moe"], h_in, cfg.moe,
+                                     d_model=cfg.d_model)
+            else:
+                h = ffn.ffn_apply(p["ffn"], h_in, cfg.ffn_activation)
+            return x + h, kv
+
+        _, kvs = common.scan(body, x, params["blocks"])
+        return kvs  # (k (L,B,H,S,d), v (L,B,H,S,d))
+
+    def _hybrid_forward(self, params, x, rots, kv_quant_cfg, remat, kv_block):
+        cfg = self.cfg
+        P = cfg.shared_attn_period
+        n_super = cfg.n_layers // P
+
+        def mamba_body(x, p):
+            y, _ = ssm.mamba2_forward(
+                p["mamba"],
+                common.rmsnorm(p["ln"], x, eps=cfg.norm_eps), cfg,
+            )
+            return x + y, None
+
+        def super_body(x, inp):
+            if kv_quant_cfg is not None and rots is not None:
+                mparams, rk, rv = inp
+                rt = make_roundtrip(rk, rv, **kv_quant_cfg)
+            else:
+                mparams, rt = inp, None
+
+            def inner(x_):
+                x_, _ = common.scan(mamba_body, x_, mparams)
+                y, _ = self._block_fwd_shared(
+                    params["shared_attn"], x_, rt, kv_block
+                )
+                return y
+
+            x = jax.checkpoint(inner)(x) if remat else inner(x)
+            return x, None
+
+        xs = (
+            (params["mamba_super"], rots.k, rots.v)
+            if (kv_quant_cfg is not None and rots is not None)
+            else params["mamba_super"]
+        )
+        x, _ = common.scan(super_body, x, xs)
+        if "mamba_rem" in params:
+            x, _ = common.scan(mamba_body, x, params["mamba_rem"])
+        return x, jnp.zeros((), jnp.float32)
+
+    def _block_fwd_shared(self, p, x, rt, kv_block):
+        return self._block_fwd(p, x, kv_roundtrip=rt, kv_block=kv_block)
+
+    def _xlstm_forward(self, params, x, remat):
+        cfg = self.cfg
+
+        def m_body(x, p):
+            y, _ = xlstm.mlstm_forward(
+                p["mlstm"], common.rmsnorm(p["ln"], x, eps=cfg.norm_eps), cfg
+            )
+            return x + y, None
+
+        def super_body(x, inp):
+            mparams, sparams = inp
+
+            def inner(x_):
+                x_, _ = common.scan(m_body, x_, mparams)
+                y, _ = xlstm.slstm_forward(
+                    sparams["slstm"],
+                    common.rmsnorm(sparams["ln"], x_, eps=cfg.norm_eps), cfg,
+                )
+                return x_ + y
+
+            x = jax.checkpoint(inner)(x) if remat else inner(x)
+            return x, None
+
+        x, _ = common.scan(
+            super_body, x, (params["mlstm_super"], params["slstm"])
+        )
+        return x
+
+    # ------------------------------------------------------------------ loss
+    def loss(self, params, batch, *, remat: bool = True):
+        """batch: {tokens (B,S), [patches (B,P,d)], [loss_mask (B,S)]}.
+
+        Next-token CE over text positions; returns (loss, metrics).
+        """
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        logits, aux = self.forward(
+            params, tokens, patches=batch.get("patches"), remat=remat
+        )
+        if cfg.family == "vlm":
+            logits = logits[:, batch["patches"].shape[1]:]
+        # shift: predict tokens[:, 1:] from logits[:, :-1]
+        lp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), axis=-1)
+        tgt = tokens[:, 1:]
+        nll = -jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+        mask = batch.get("loss_mask")
+        mask = (
+            jnp.ones_like(nll) if mask is None else mask[:, 1:].astype(jnp.float32)
+        )
+        loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        total = loss + 0.01 * aux
+        return total, {"ce": loss, "aux": aux}
+
+    # --------------------------------------------------------------- serving
+    def prefill(self, params, rots: Rotations | None, tokens, cache, *,
+                patches=None, kv_block: int = 1024):
+        """Process the prompt, fill caches.  Returns (last_logits, cache)."""
+        cfg = self.cfg
+        x = self._embed(params, tokens, patches)
+        S = x.shape[1]
+
+        if cfg.family in ("dense", "moe", "vlm"):
+            def body(x, inp):
+                p, c, rk, rv = inp
+                y, new_c = self._block_prefill(p, x, c, rk, rv,
+                                               kv_block=kv_block)
+                return y, new_c
+
+            if rots is None:
+                # bf16 cache path: rotations unused
+                def body_bf16(x, inp):
+                    p, c = inp
+                    y, new_c = self._block_prefill(p, x, c, None, None,
+                                                   kv_block=kv_block)
+                    return y, new_c
+                x, new_attn = common.scan(
+                    body_bf16, x, (params["blocks"], cache["attn"])
+                )
+            else:
+                x, new_attn = common.scan(
+                    body, x, (params["blocks"], cache["attn"], rots.k, rots.v)
+                )
+            cache = dict(cache, attn=new_attn, pos=jnp.asarray(S, jnp.int32))
+
+        elif cfg.family == "hybrid":
+            x, cache = self._hybrid_prefill(params, x, cache, rots, kv_block)
+            cache["pos"] = jnp.asarray(S, jnp.int32)
+        elif cfg.family == "ssm":
+            x, cache = self._xlstm_prefill(params, x, cache)
+            cache["pos"] = jnp.asarray(S, jnp.int32)
+
+        logits = self._unembed(params, x[:, -1:])
+        return logits, cache
+
+    def _hybrid_prefill(self, params, x, cache, rots, kv_block):
+        cfg = self.cfg
+
+        def mamba_body(carry, inp):
+            x = carry
+            p, st = inp
+            y, new_st = ssm.mamba2_forward(
+                p["mamba"], common.rmsnorm(p["ln"], x, eps=cfg.norm_eps),
+                cfg, state=st,
+            )
+            return x + y, new_st
+
+        def super_body(x, inp):
+            mparams, mstates, attn_c, rk, rv = inp
+            x, new_mstates = common.scan(mamba_body, x, (mparams, mstates))
+            y, new_attn_c = self._block_prefill(
+                params["shared_attn"], x, attn_c, rk, rv, kv_block=kv_block
+            )
+            return y, (new_mstates, new_attn_c)
+
+        x, (new_ssm, new_attn) = common.scan(
+            super_body, x,
+            (params["mamba_super"], cache["ssm_super"], cache["attn"],
+             rots.k, rots.v),
+        )
+        cache = dict(cache, ssm_super=new_ssm, attn=new_attn)
+        if "mamba_rem" in params:
+            x, new_rem = common.scan(
+                mamba_body, x, (params["mamba_rem"], cache["ssm_rem"])
+            )
+            cache["ssm_rem"] = new_rem
+        return x, cache
+
+    def _xlstm_prefill(self, params, x, cache):
+        cfg = self.cfg
+
+        def m_body(x, inp):
+            p, st = inp
+            y, new_st = xlstm.mlstm_forward(
+                p["mlstm"], common.rmsnorm(p["ln"], x, eps=cfg.norm_eps),
+                cfg, state=st,
+            )
+            return x + y, new_st
+
+        def super_body(x, inp):
+            mparams, mstates, sparams, sstate = inp
+            x, new_m = common.scan(m_body, x, (mparams, mstates))
+            y, new_s = xlstm.slstm_forward(
+                sparams["slstm"],
+                common.rmsnorm(sparams["ln"], x, eps=cfg.norm_eps),
+                cfg, state=sstate,
+            )
+            return x + y, (new_m, new_s)
+
+        x, (new_m, new_s) = common.scan(
+            super_body, x,
+            (params["mlstm_super"], cache["mlstm"], params["slstm"],
+             cache["slstm"]),
+        )
+        return x, dict(cache, mlstm=new_m, slstm=new_s)
+
+    def decode_step(self, params, rots: Rotations | None, token, cache, *,
+                    kv_block: int = 512):
+        """token (B, 1) int32 -> (logits (B,1,V), new cache).  O(1)/step."""
+        cfg = self.cfg
+        pos = cache["pos"]
+        x = self._embed(params, token)
+
+        if cfg.family in ("dense", "moe", "vlm"):
+            if rots is not None:
+                def body(x, inp):
+                    p, c, rk, rv = inp
+                    y, new_c = self._block_decode(
+                        p, x, c, rk, rv, position=pos, kv_block=kv_block
+                    )
+                    return y, new_c
+                x, new_attn = common.scan(
+                    body, x, (params["blocks"], cache["attn"], rots.k, rots.v)
+                )
+            else:
+                def body(x, inp):
+                    p, c = inp
+                    y, new_c = self._block_decode(
+                        p, x, c, None, None, position=pos, kv_block=kv_block
+                    )
+                    return y, new_c
+                x, new_attn = common.scan(
+                    body, x, (params["blocks"], cache["attn"])
+                )
+            cache = dict(cache, attn=new_attn, pos=pos + 1)
+
+        elif cfg.family == "hybrid":
+            def mamba_body(x, inp):
+                p, st = inp
+                y, new_st = ssm.mamba2_decode(
+                    p["mamba"], common.rmsnorm(p["ln"], x, eps=cfg.norm_eps),
+                    cfg, st,
+                )
+                return x + y, new_st
+
+            def super_body(x, inp):
+                mparams, mstates, attn_c, rk, rv = inp
+                x, new_m = common.scan(mamba_body, x, (mparams, mstates))
+                y, new_c = self._block_decode(
+                    params["shared_attn"], x, attn_c, rk, rv, position=pos,
+                    kv_block=kv_block,
+                )
+                return y, (new_m, new_c)
+
+            x, (new_ssm, new_attn) = common.scan(
+                super_body, x,
+                (params["mamba_super"], cache["ssm_super"], cache["attn"],
+                 rots.k, rots.v),
+            )
+            cache = dict(cache, ssm_super=new_ssm, attn=new_attn, pos=pos + 1)
+            if "mamba_rem" in params:
+                x, new_rem = common.scan(
+                    mamba_body, x, (params["mamba_rem"], cache["ssm_rem"])
+                )
+                cache["ssm_rem"] = new_rem
+
+        elif cfg.family == "ssm":
+            def m_body(x, inp):
+                p, st = inp
+                y, new_st = xlstm.mlstm_decode(
+                    p["mlstm"], common.rmsnorm(p["ln"], x, eps=cfg.norm_eps),
+                    cfg, st,
+                )
+                return x + y, new_st
+
+            def super_body(x, inp):
+                mparams, mstates, sparams, sstate = inp
+                x, new_m = common.scan(m_body, x, (mparams, mstates))
+                y, new_s = xlstm.slstm_decode(
+                    sparams["slstm"],
+                    common.rmsnorm(sparams["ln"], x, eps=cfg.norm_eps),
+                    cfg, sstate,
+                )
+                return x + y, (new_m, new_s)
+
+            x, (new_m, new_s) = common.scan(
+                super_body, x,
+                (params["mlstm_super"], cache["mlstm"], params["slstm"],
+                 cache["slstm"]),
+            )
+            cache = dict(cache, mlstm=new_m, slstm=new_s, pos=pos + 1)
+
+        logits = self._unembed(params, x)
+        return logits, cache

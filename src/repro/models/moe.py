@@ -1,0 +1,122 @@
+"""Mixture-of-Experts FFN with GShard-style capacity-bounded one-hot
+dispatch (top-k routing, groups of tokens, combine/dispatch einsums).
+
+The formulation is GSPMD-native: tokens are grouped (G, S_g) with G
+sharded over the data axes and experts (E) sharded over the model axis,
+so the dispatch einsums lower to all-to-all style collectives under pjit
+without manual shard_map.  Capacity C is static:
+    C = ceil(S_g * top_k / E * capacity_factor)
+Overflowed tokens are dropped (standard GShard semantics); an aux
+load-balancing loss is returned for training.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+__all__ = ["moe_init", "moe_apply", "capacity"]
+
+
+def capacity(group_tokens: int, top_k: int, n_experts: int, factor: float) -> int:
+    c = math.ceil(group_tokens * top_k / n_experts * factor)
+    return max(4, -(-c // 4) * 4)  # round up to multiple of 4
+
+
+def moe_init(key, d_model: int, mcfg):
+    ks = jax.random.split(key, 4)
+    E, de = mcfg.n_experts, mcfg.d_expert
+    return {
+        "router": common.dense_init(ks[0], d_model, E, scale=0.02),
+        "w_gate": {
+            "w": (jax.random.normal(ks[1], (E, d_model, de), jnp.float32)
+                  / math.sqrt(d_model)).astype(common.PARAM_DTYPE)
+        },
+        "w_up": {
+            "w": (jax.random.normal(ks[2], (E, d_model, de), jnp.float32)
+                  / math.sqrt(d_model)).astype(common.PARAM_DTYPE)
+        },
+        "w_down": {
+            "w": (jax.random.normal(ks[3], (E, de, d_model), jnp.float32)
+                  / math.sqrt(de)).astype(common.PARAM_DTYPE)
+        },
+    }
+
+
+def _dispatch_combine(router_probs, top_idx, top_vals, E: int, C: int):
+    """Build combine (G,S,E,C) and dispatch (G,S,E,C) tensors.
+
+    Earlier routing ranks get capacity priority (rank-major cumsum).
+    """
+    G, S, K = top_idx.shape
+    oh = jax.nn.one_hot(top_idx, E, dtype=jnp.float32)  # (G,S,K,E)
+    # rank-major ordering: (G, K, S, E) -> flatten (K*S)
+    ohk = oh.transpose(0, 2, 1, 3).reshape(G, K * S, E)
+    pos = jnp.cumsum(ohk, axis=1) - ohk  # position of each (k,s) in its expert
+    keep = (pos < C) * ohk  # (G, K*S, E)
+    pos_c = jax.nn.one_hot(pos, C, dtype=jnp.float32) * keep[..., None]
+    # back to (G, S, K, E, C), fold K with gate values
+    pos_c = pos_c.reshape(G, K, S, E, C).transpose(0, 2, 1, 3, 4)
+    gates = top_vals[..., None, None]  # (G,S,K,1,1)
+    combine = jnp.sum(pos_c * gates, axis=2)  # (G,S,E,C)
+    dispatch = jnp.sum(pos_c, axis=2)  # (G,S,E,C) in {0,1}
+    return combine, dispatch
+
+
+def moe_apply(p, x: jax.Array, mcfg, *, d_model: int):
+    """x (B, S, d) -> (y (B, S, d), aux_loss scalar)."""
+    B, S, d = x.shape
+    T = B * S
+    gs = min(mcfg.group_size, T)
+    while T % gs:  # static: largest divisor of T not exceeding group_size
+        gs -= 1
+    G = T // gs
+    E, K = mcfg.n_experts, mcfg.top_k
+    C = capacity(gs, K, E, mcfg.capacity_factor)
+
+    xg = x.reshape(G, gs, d)
+    logits = common.dense(p["router"], xg).astype(jnp.float32)  # (G,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_vals, top_idx = jax.lax.top_k(probs, K)  # (G,S,K)
+    top_vals = top_vals / jnp.maximum(
+        jnp.sum(top_vals, axis=-1, keepdims=True), 1e-9
+    )
+
+    combine, dispatch = _dispatch_combine(probs, top_idx, top_vals, E, C)
+    combine = common.shard_hint(
+        combine.astype(common.COMPUTE_DTYPE), "moe_gsec")
+    dispatch = common.shard_hint(
+        dispatch.astype(common.COMPUTE_DTYPE), "moe_gsec")
+
+    # dispatch tokens to expert slots: (G,E,C,d); under the EP policy the
+    # expert axis is 'model'-sharded here, so GSPMD lowers this einsum to
+    # the canonical token->expert all-to-all
+    xe = common.shard_hint(
+        common.einsum_f32(
+            "gsec,gsd->gecd", dispatch, xg
+        ).astype(common.COMPUTE_DTYPE),
+        "moe_gecd",
+    )
+    # expert SwiGLU
+    gate = common.einsum_f32("gecd,edf->gecf", xe, p["w_gate"]["w"])
+    up = common.einsum_f32("gecd,edf->gecf", xe, p["w_up"]["w"])
+    h = (jax.nn.silu(gate) * up).astype(common.COMPUTE_DTYPE)
+    ye = common.shard_hint(
+        common.einsum_f32(
+            "gecf,efd->gecd", h, p["w_down"]["w"]
+        ).astype(common.COMPUTE_DTYPE),
+        "moe_gecd",
+    )
+    # combine back: (G,S,d)
+    y = common.einsum_f32("gsec,gecd->gsd", combine, ye)
+
+    # GShard aux loss: E * sum_e (fraction routed to e * mean router prob e)
+    me = jnp.mean(
+        jax.nn.one_hot(top_idx[..., 0], E, dtype=jnp.float32), axis=(0, 1)
+    )
+    pe = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(me * pe)
+    return y.reshape(B, S, d).astype(common.COMPUTE_DTYPE), aux

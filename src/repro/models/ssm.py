@@ -1,0 +1,227 @@
+"""Mamba2 (SSD) block: chunked parallel form for train/prefill, O(1)
+recurrent update for decode.  Follows the minimal SSD algorithm of
+Mamba-2 [arXiv:2405.21060] with scalar-identity A per head.
+
+State pytree per layer:
+    ssd_state : (B, H, N, P) fp32
+    conv_state: (B, conv_dim, d_conv-1) compute-dtype
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+__all__ = ["mamba2_init", "mamba2_forward", "mamba2_decode", "init_ssm_state",
+           "SSMState", "HEADDIM"]
+
+HEADDIM = 64  # P, SSD head width
+
+
+class SSMState(NamedTuple):
+    ssd: jax.Array  # (B, H, N, P) fp32
+    conv: jax.Array  # (B, conv_dim, d_conv-1)
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    inner = s.expand * cfg.d_model
+    nheads = inner // HEADDIM
+    conv_dim = inner + 2 * s.n_groups * s.d_state
+    return inner, nheads, conv_dim
+
+
+def mamba2_init(key, cfg):
+    s = cfg.ssm
+    d = cfg.d_model
+    inner, H, conv_dim = _dims(cfg)
+    ks = jax.random.split(key, 5)
+    d_in_proj = 2 * inner + 2 * s.n_groups * s.d_state + H
+    # dt bias init so softplus(dt_bias) spans [1e-3, 1e-1]
+    dt = jnp.exp(
+        jax.random.uniform(ks[2], (H,), jnp.float32)
+        * (jnp.log(0.1) - jnp.log(0.001))
+        + jnp.log(0.001)
+    )
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))
+    return {
+        "in_proj": common.dense_init(ks[0], d, d_in_proj),
+        "conv_w": (
+            jax.random.normal(ks[1], (s.d_conv, conv_dim), jnp.float32) * 0.1
+        ).astype(common.PARAM_DTYPE),
+        "conv_b": jnp.zeros((conv_dim,), common.PARAM_DTYPE),
+        "dt_bias": dt_bias,
+        "A_log": jnp.log(
+            jax.random.uniform(ks[3], (H,), jnp.float32, 1.0, 16.0)
+        ),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm": common.rmsnorm_init(inner),
+        "out_proj": common.dense_init(ks[4], inner, d),
+    }
+
+
+def init_ssm_state(cfg, batch: int) -> SSMState:
+    s = cfg.ssm
+    inner, H, conv_dim = _dims(cfg)
+    return SSMState(
+        ssd=jnp.zeros((batch, H, s.d_state, HEADDIM), jnp.float32),
+        conv=jnp.zeros((batch, conv_dim, s.d_conv - 1), common.COMPUTE_DTYPE),
+    )
+
+
+def _split_proj(cfg, zxbcdt):
+    s = cfg.ssm
+    inner, H, _ = _dims(cfg)
+    gn = s.n_groups * s.d_state
+    z = zxbcdt[..., :inner]
+    xBC = zxbcdt[..., inner : 2 * inner + 2 * gn]
+    dt = zxbcdt[..., 2 * inner + 2 * gn :]
+    return z, xBC, dt
+
+
+def _conv1d(p, xBC, cfg, conv_state=None):
+    """Causal depthwise conv along time.  xBC (B, L, conv_dim)."""
+    s = cfg.ssm
+    w = p["conv_w"].astype(jnp.float32)  # (d_conv, conv_dim)
+    x = xBC.astype(jnp.float32)
+    if conv_state is not None:  # decode: L == 1
+        window = jnp.concatenate(
+            [conv_state.astype(jnp.float32).transpose(0, 2, 1), x], axis=1
+        )  # (B, d_conv, conv_dim)
+        y = jnp.einsum("btc,tc->bc", window, w)[:, None]
+        new_state = window[:, 1:].transpose(0, 2, 1).astype(common.COMPUTE_DTYPE)
+        return jax.nn.silu(y + p["conv_b"].astype(jnp.float32)), new_state
+    pad = jnp.pad(x, ((0, 0), (s.d_conv - 1, 0), (0, 0)))
+    y = sum(
+        pad[:, i : i + x.shape[1]] * w[i] for i in range(s.d_conv)
+    )
+    new_state = (
+        pad[:, x.shape[1] : x.shape[1] + s.d_conv - 1]
+        .transpose(0, 2, 1)
+        .astype(common.COMPUTE_DTYPE)
+    )
+    return jax.nn.silu(y + p["conv_b"].astype(jnp.float32)), new_state
+
+
+def _segsum(dA):
+    """Cumulative-sum decay matrix: out[..., i, j] = sum_{k=j+1..i} dA_k
+    for i >= j, -inf otherwise.  dA: (..., c)."""
+    c = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # (..., i, j)
+    mask = jnp.tril(jnp.ones((c, c), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def _ssd_chunked(x, dt, A, B, C, chunk, init_state):
+    """SSD scan.  x (b,l,h,p), dt (b,l,h), A (h,), B/C (b,l,n) [n_groups=1].
+
+    Returns (y (b,l,h,p), final_state (b,h,n,p)).
+    """
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    nc = l // chunk
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = B.reshape(b, nc, chunk, n)
+    Cc = C.reshape(b, nc, chunk, n)
+
+    dA = dtc * A  # (b,nc,c,h), negative
+    cums = jnp.cumsum(dA, axis=2)  # (b,nc,c,h)
+
+    # intra-chunk (attention-like): scores[i,j] = C_i.B_j * exp(cums_i-cums_j)
+    L = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))  # (b,nc,h,c,c)
+    CB = jnp.einsum("bzin,bzjn->bzij", Cc, Bc)  # (b,nc,c,c)
+    scores = CB[:, :, None] * L  # (b,nc,h,i,j)
+    y_intra = jnp.einsum("bzhij,bzjh,bzjhp->bzihp", scores, dtc, xc)
+
+    # chunk summaries: S_z = sum_j exp(cums_end - cums_j) dt_j B_j (x) x_j
+    decay_end = jnp.exp(cums[:, :, -1:, :] - cums)  # (b,nc,c,h)
+    Sz = jnp.einsum("bzch,bzcn,bzchp->bzhnp", decay_end * dtc, Bc, xc)
+    lam = jnp.exp(cums[:, :, -1])  # (b,nc,h) total chunk decay
+
+    def scan_body(state, inp):
+        Sz_z, lam_z = inp  # (b,h,n,p), (b,h)
+        new = state * lam_z[..., None, None] + Sz_z
+        return new, state  # emit state *before* this chunk
+
+    (final_state, prev_states) = common.scan(
+        scan_body,
+        init_state,
+        (Sz.transpose(1, 0, 2, 3, 4), lam.transpose(1, 0, 2)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (b,nc,h,n,p)
+
+    # inter-chunk: y_i += C_i . (prev_state * exp(cums_i))
+    y_inter = jnp.einsum(
+        "bzcn,bzhnp,bzch->bzchp", Cc, prev_states, jnp.exp(cums)
+    )
+    y = (y_intra + y_inter).reshape(b, l, h, p)
+    return y, final_state
+
+
+def mamba2_forward(p, u: jax.Array, cfg, state: SSMState | None = None):
+    """Full-sequence forward.  u (B, L, d) -> (y, new_state)."""
+    s = cfg.ssm
+    inner, H, conv_dim = _dims(cfg)
+    B_, L, _ = u.shape
+    if state is None:
+        state = init_ssm_state(cfg, B_)
+    chunk = min(s.chunk, L)
+    assert L % chunk == 0, f"L={L} % chunk={chunk}"
+
+    zxbcdt = common.dense(p["in_proj"], u)
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    xBC, conv_state = _conv1d(p, xBC, cfg)
+    x = xBC[..., :inner].reshape(B_, L, H, HEADDIM)
+    Bmat = xBC[..., inner : inner + s.d_state]
+    Cmat = xBC[..., inner + s.d_state :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    y, final = _ssd_chunked(
+        x.astype(jnp.float32), dt, A,
+        Bmat.astype(jnp.float32), Cmat.astype(jnp.float32),
+        chunk, state.ssd,
+    )
+    y = y + p["D"][None, None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(B_, L, inner)
+    y = common.rmsnorm(
+        p["norm"],
+        (y * jax.nn.silu(z.astype(jnp.float32))).astype(common.COMPUTE_DTYPE),
+        eps=cfg.norm_eps,
+    )
+    return common.dense(p["out_proj"], y), SSMState(final, conv_state)
+
+
+def mamba2_decode(p, u: jax.Array, cfg, state: SSMState):
+    """Single-token recurrent update.  u (B, 1, d)."""
+    s = cfg.ssm
+    inner, H, _ = _dims(cfg)
+    B_ = u.shape[0]
+
+    zxbcdt = common.dense(p["in_proj"], u)
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    xBC, conv_state = _conv1d(p, xBC, cfg, conv_state=state.conv)
+    x = xBC[..., :inner].reshape(B_, 1, H, HEADDIM)[:, 0]  # (B,H,P)
+    Bmat = xBC[:, 0, inner : inner + s.d_state]  # (B,N)
+    Cmat = xBC[:, 0, inner + s.d_state :]
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+
+    dA = jnp.exp(dt * A)  # (B,H)
+    upd = jnp.einsum("bh,bn,bhp->bhnp", dt, Bmat.astype(jnp.float32),
+                     x.astype(jnp.float32))
+    new_ssd = state.ssd * dA[..., None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", Cmat.astype(jnp.float32), new_ssd)
+    y = y + p["D"][None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(B_, 1, inner)
+    y = common.rmsnorm(
+        p["norm"],
+        (y * jax.nn.silu(z.astype(jnp.float32))).astype(common.COMPUTE_DTYPE),
+        eps=cfg.norm_eps,
+    )
+    return common.dense(p["out_proj"], y), SSMState(new_ssd, conv_state)

@@ -1,0 +1,343 @@
+"""xLSTM blocks [arXiv:2405.04517]: mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory with recurrent gate weights).
+
+Exponential gating with the max-stabilizer m_t; per-head RMS norm on the
+recurrent output; pre-up/down projections with a SiLU side gate (the
+xLSTM "block" wrapping).
+
+State pytrees:
+    mLSTM: C (B,H,dk,dv) fp32, n (B,H,dk) fp32, m (B,H) fp32
+    sLSTM: c,n,h (B,H,dh) fp32, m (B,H,dh) fp32
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+__all__ = [
+    "mlstm_init", "mlstm_forward", "mlstm_decode", "init_mlstm_state",
+    "slstm_init", "slstm_forward", "slstm_decode", "init_slstm_state",
+    "MLSTMState", "SLSTMState", "mlstm_dims",
+]
+
+
+class MLSTMState(NamedTuple):
+    C: jax.Array  # (B, H, dk, dv)
+    n: jax.Array  # (B, H, dk)
+    m: jax.Array  # (B, H)
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array  # (B, H, dh)
+    n: jax.Array
+    h: jax.Array
+    m: jax.Array
+
+
+def mlstm_dims(cfg):
+    x = cfg.xlstm
+    inner = x.expand * cfg.d_model
+    H = cfg.n_heads
+    dv = inner // H
+    dk = int(dv * x.qk_dim_factor)
+    return inner, H, dk, dv
+
+
+def mlstm_init(key, cfg):
+    inner, H, dk, dv = mlstm_dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    return {
+        "up": common.dense_init(ks[0], d, 2 * inner),
+        "wq": common.dense_init(ks[1], inner, (H, dk)),
+        "wk": common.dense_init(ks[2], inner, (H, dk)),
+        "wif": common.dense_init(ks[3], inner, 2 * H, bias=True),
+        "wo": common.dense_init(ks[4], inner, inner, bias=True),
+        "norm": common.rmsnorm_init(dv),
+        "down": common.dense_init(ks[5], inner, d),
+    }
+
+
+def init_mlstm_state(cfg, batch: int) -> MLSTMState:
+    _, H, dk, dv = mlstm_dims(cfg)
+    return MLSTMState(
+        C=jnp.zeros((batch, H, dk, dv), jnp.float32),
+        n=jnp.zeros((batch, H, dk), jnp.float32),
+        m=jnp.full((batch, H), -jnp.inf, jnp.float32),
+    )
+
+
+def _mlstm_step(state: MLSTMState, inp):
+    """One recurrent step.  q,k (B,H,dk), v (B,H,dv), i/f preacts (B,H)."""
+    q, k, v, ipre, fpre = inp
+    C, n, m = state
+    m_new = jnp.maximum(fpre + m, ipre)
+    # first step: m == -inf -> f-term drops out cleanly
+    i_g = jnp.exp(ipre - m_new)
+    # first step: m == -inf => fpre + m == -inf => f_g == 0 cleanly
+    f_g = jnp.exp(fpre + m - m_new)
+    C_new = f_g[..., None, None] * C + i_g[..., None, None] * (
+        k[..., :, None] * v[..., None, :]
+    )
+    n_new = f_g[..., None] * n + i_g[..., None] * k
+    denom = jnp.maximum(
+        jnp.abs(jnp.einsum("bhk,bhk->bh", n_new, q)), 1.0
+    )
+    h = jnp.einsum("bhk,bhkv->bhv", q, C_new) / denom[..., None]
+    return MLSTMState(C_new, n_new, m_new), h
+
+
+def _mlstm_inputs(p, x_m, cfg):
+    inner, H, dk, dv = mlstm_dims(cfg)
+    B, L, _ = x_m.shape
+    q = common.dense(p["wq"], x_m).astype(jnp.float32) / jnp.sqrt(float(dk))
+    k = common.dense(p["wk"], x_m).astype(jnp.float32) / jnp.sqrt(float(dk))
+    v = x_m.reshape(B, L, H, dv).astype(jnp.float32)
+    i_f = common.dense(p["wif"], x_m).astype(jnp.float32)
+    ipre, fpre = i_f[..., :H], i_f[..., H:]
+    fpre = jax.nn.log_sigmoid(fpre)  # forget gate in log space
+    return q, k, v, ipre, fpre
+
+
+def mlstm_forward(p, x: jax.Array, cfg, state: MLSTMState | None = None):
+    """Full-sequence mLSTM.  x (B, L, d) -> (y, state).
+
+    Dispatches to the chunkwise-parallel form (default, §Perf hillclimb 1:
+    the per-token scan saves the (B,H,dk,dv) matrix memory C per step for
+    BPTT -- 4096 x 0.5 GB/device at train_4k -- while the chunkwise form
+    saves it once per chunk, 64x less, and turns the inner work into
+    MXU matmuls).  Falls back to the sequential oracle when L is not
+    chunk-divisible.  Both forms are numerically identical at chunk
+    boundaries (same max-stabilized recurrence); test_xlstm_chunkwise
+    asserts allclose.
+    """
+    inner, H, dk, dv = mlstm_dims(cfg)
+    B, L, _ = x.shape
+    if state is None:
+        state = init_mlstm_state(cfg, B)
+    up = common.dense(p["up"], x)
+    x_m, z = up[..., :inner], up[..., inner:]
+    q, k, v, ipre, fpre = _mlstm_inputs(p, x_m, cfg)
+    o = jax.nn.sigmoid(common.dense(p["wo"], x_m).astype(jnp.float32))
+
+    chunk = getattr(cfg.xlstm, "chunk", 64)
+    if chunk and L % chunk == 0 and L > chunk:
+        h = _mlstm_chunkwise(q, k, v, ipre, fpre, state, chunk)
+        state = h[1]
+        hs_blhv = h[0]  # (B,L,H,dv) f32
+    else:
+        def body(st, inp):
+            return _mlstm_step(st, inp)
+
+        xs = (
+            q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+            v.transpose(1, 0, 2, 3),
+            ipre.transpose(1, 0, 2), fpre.transpose(1, 0, 2),
+        )
+        state, hs = jax.lax.scan(body, state, xs)  # hs (L,B,H,dv)
+        hs_blhv = hs.transpose(1, 0, 2, 3)  # (B,L,H,dv)
+    h = common.rmsnorm(p["norm"], hs_blhv.astype(common.COMPUTE_DTYPE),
+                       eps=cfg.norm_eps)
+    h = (h.astype(jnp.float32).reshape(B, L, inner) * o)
+    y = h * jax.nn.silu(z.astype(jnp.float32))
+    return common.dense(p["down"], y.astype(common.COMPUTE_DTYPE)), state
+
+
+def _mlstm_chunkwise(q, k, v, ipre, fpre, state: MLSTMState, chunk: int):
+    """Chunkwise-parallel mLSTM (SSD-style), exact max-stabilized math.
+
+    q/k (B,L,H,dk), v (B,L,H,dv), ipre/fpre (B,L,H) with fpre already in
+    log-sigmoid space.  Per chunk of length c, with b_j = cumsum(fpre),
+    entering state (C_p, n_p, m_p):
+
+        m_j   = max(m_p + b_j, max_{t<=j}(i_t - b_t) + b_j)
+        D[j,t]= exp(i_t + b_j - b_t - m_j),  t <= j
+        h_j   = [ (q_j k_t^T * D) v + exp(m_p + b_j - m_j) q_j C_p ] / den_j
+        den_j = max(|q_j . n_j|, 1),  n_j = D[j,:] k + exp(...) n_p
+        state'= the j = c values (identical to the sequential recurrence).
+    """
+    B, L, H, dk = q.shape
+    dv = v.shape[-1]
+    c = chunk
+    nc = L // c
+
+    # explicit transposes (clarity over cleverness)
+    qc = q.reshape(B, nc, c, H, dk).transpose(1, 0, 3, 2, 4)  # (nc,B,H,c,dk)
+    kc = k.reshape(B, nc, c, H, dk).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(B, nc, c, H, dv).transpose(1, 0, 3, 2, 4)
+    ic = ipre.reshape(B, nc, c, H).transpose(1, 0, 3, 2)  # (nc,B,H,c)
+    fc = fpre.reshape(B, nc, c, H).transpose(1, 0, 3, 2)
+
+    tril = jnp.tril(jnp.ones((c, c), bool))
+
+    def body(st, inp):
+        C_p, n_p, m_p = st  # (B,H,dk,dv), (B,H,dk), (B,H)
+        qj, kj, vj, ij, fj = inp
+        b = jnp.cumsum(fj, axis=-1)  # (B,H,c)
+        a = ij - b
+        m_intra = b + jax.lax.cummax(a, axis=a.ndim - 1)
+        m = jnp.maximum(m_p[..., None] + b, m_intra)  # (B,H,c)
+        # D[j,t] = exp(a_t + b_j - m_j) for t<=j
+        expo = a[..., None, :] + (b - m)[..., :, None]  # (B,H,c(j),c(t))
+        D = jnp.exp(jnp.where(tril, expo, -jnp.inf))
+        inter = jnp.exp(m_p[..., None] + b - m)  # (B,H,c)
+        scores = jnp.einsum("bhjd,bhtd->bhjt", qj, kj) * D
+        h_num = jnp.einsum("bhjt,bhtv->bhjv", scores, vj) \
+            + inter[..., None] * jnp.einsum("bhjd,bhdv->bhjv", qj, C_p)
+        n_vec = jnp.einsum("bhjt,bhtd->bhjd", D, kj) \
+            + inter[..., None] * n_p[..., None, :]
+        den = jnp.maximum(
+            jnp.abs(jnp.einsum("bhjd,bhjd->bhj", qj, n_vec)), 1.0
+        )
+        h = h_num / den[..., None]  # (B,H,c,dv)
+        C_new = inter[..., -1, None, None] * C_p + jnp.einsum(
+            "bht,bhtd,bhtv->bhdv", D[..., -1, :], kj, vj
+        )
+        return MLSTMState(C_new, n_vec[..., -1, :], m[..., -1]), h
+
+    state, hs = jax.lax.scan(
+        body, state, (qc, kc, vc, ic, fc)
+    )  # hs (nc,B,H,c,dv)
+    h = hs.transpose(1, 0, 3, 2, 4).reshape(B, L, H, dv)
+    return h, state
+
+
+def mlstm_decode(p, x: jax.Array, cfg, state: MLSTMState):
+    """x (B, 1, d) -> (y (B,1,d), state)."""
+    inner, H, dk, dv = mlstm_dims(cfg)
+    B = x.shape[0]
+    up = common.dense(p["up"], x)
+    x_m, z = up[..., :inner], up[..., inner:]
+    q, k, v, ipre, fpre = _mlstm_inputs(p, x_m, cfg)
+    o = jax.nn.sigmoid(common.dense(p["wo"], x_m).astype(jnp.float32))
+    state, h = _mlstm_step(
+        state, (q[:, 0], k[:, 0], v[:, 0], ipre[:, 0], fpre[:, 0])
+    )
+    h = common.rmsnorm(p["norm"], h[:, None].astype(common.COMPUTE_DTYPE),
+                       eps=cfg.norm_eps)  # (B,1,H,dv)
+    h = h.astype(jnp.float32).reshape(B, 1, inner) * o
+    y = h * jax.nn.silu(z.astype(jnp.float32))
+    return common.dense(p["down"], y.astype(common.COMPUTE_DTYPE)), state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_dims(cfg):
+    x = cfg.xlstm
+    inner = x.expand * cfg.d_model
+    H = cfg.n_heads
+    dh = inner // H
+    return inner, H, dh
+
+
+def slstm_init(key, cfg):
+    inner, H, dh = slstm_dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    # 4 gates (i, f, z, o) from input; block-diagonal recurrent weights
+    return {
+        "up": common.dense_init(ks[0], d, 2 * inner),
+        "wg": common.dense_init(ks[1], inner, 4 * inner, bias=True),
+        "rg": (
+            jax.random.normal(ks[2], (4, H, dh, dh), jnp.float32)
+            / jnp.sqrt(float(dh))
+        ).astype(common.PARAM_DTYPE),
+        "norm": common.rmsnorm_init(dh),
+        "down": common.dense_init(ks[3], inner, d),
+    }
+
+
+def init_slstm_state(cfg, batch: int) -> SLSTMState:
+    _, H, dh = slstm_dims(cfg)
+    z = jnp.zeros((batch, H, dh), jnp.float32)
+    return SLSTMState(c=z, n=z, h=z, m=jnp.full((batch, H, dh), -jnp.inf))
+
+
+def _slstm_step(p, state: SLSTMState, g_in, cfg):
+    """g_in: (B, 4*inner) input-gate preacts for one step."""
+    inner, H, dh = slstm_dims(cfg)
+    B = g_in.shape[0]
+    rec = jnp.einsum(
+        "bhd,ghde->gbhe", state.h, p["rg"].astype(jnp.float32)
+    )  # (4,B,H,dh)
+    g = g_in.reshape(B, 4, H, dh).transpose(1, 0, 2, 3) + rec
+    ipre, fpre, zpre, opre = g[0], g[1], g[2], g[3]
+    fpre = jax.nn.log_sigmoid(fpre)
+    m_new = jnp.maximum(fpre + state.m, ipre)
+    i_g = jnp.exp(ipre - m_new)
+    f_g = jnp.exp(fpre + state.m - m_new)  # -inf init => 0 cleanly
+    c_new = f_g * state.c + i_g * jnp.tanh(zpre)
+    n_new = f_g * state.n + i_g
+    h_new = jax.nn.sigmoid(opre) * c_new / jnp.maximum(n_new, 1.0)
+    return SLSTMState(c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_forward(p, x: jax.Array, cfg, state: SLSTMState | None = None):
+    """sLSTM is inherently sequential (recurrent gate coupling through h),
+    so the memory lever is chunked rematerialization (§Perf hillclimb 1b):
+    scan over L/chunk segments whose bodies (a) compute the gate
+    projection locally -- never materializing the (B,L,4*inner) fp32
+    preactivation tensor -- and (b) are jax.checkpoint'ed, so BPTT saves
+    only chunk-boundary states and the bf16 chunk inputs, recomputing the
+    inner steps in the backward pass."""
+    inner, H, dh = slstm_dims(cfg)
+    B, L, _ = x.shape
+    if state is None:
+        state = init_slstm_state(cfg, B)
+    up = common.dense(p["up"], x)
+    x_s, z = up[..., :inner], up[..., inner:]
+
+    chunk = getattr(cfg.xlstm, "chunk", 64)
+
+    if chunk and L % chunk == 0 and L > chunk:
+        nc = L // chunk
+        xc = x_s.reshape(B, nc, chunk, inner).transpose(1, 0, 2, 3)
+
+        @jax.checkpoint
+        def chunk_body(st, x_chunk):  # x_chunk (B,c,inner) bf16
+            g_all = common.dense(p["wg"], x_chunk).astype(jnp.float32)
+
+            def body(st, g):
+                new_st, h = _slstm_step(p, st, g, cfg)
+                return new_st, h.astype(common.COMPUTE_DTYPE)
+
+            st, hs = jax.lax.scan(body, st, g_all.transpose(1, 0, 2))
+            return st, hs  # hs (c,B,H,dh) bf16
+
+        state, hs = jax.lax.scan(chunk_body, state, xc)  # (nc,c,B,H,dh)
+        h = hs.transpose(2, 0, 1, 3, 4).reshape(B, L, H, dh)
+    else:
+        g_all = common.dense(p["wg"], x_s).astype(jnp.float32)
+
+        def body(st, g):
+            return _slstm_step(p, st, g, cfg)
+
+        state, hs = jax.lax.scan(body, state, g_all.transpose(1, 0, 2))
+        h = hs.transpose(1, 0, 2, 3).astype(common.COMPUTE_DTYPE)
+    h = common.rmsnorm(p["norm"], h.astype(common.COMPUTE_DTYPE),
+                       eps=cfg.norm_eps)
+    y = h.astype(jnp.float32).reshape(B, L, inner) * jax.nn.silu(
+        z.astype(jnp.float32)
+    )
+    return common.dense(p["down"], y.astype(common.COMPUTE_DTYPE)), state
+
+
+def slstm_decode(p, x: jax.Array, cfg, state: SLSTMState):
+    inner, H, dh = slstm_dims(cfg)
+    B = x.shape[0]
+    up = common.dense(p["up"], x)
+    x_s, z = up[..., :inner], up[..., inner:]
+    g = common.dense(p["wg"], x_s).astype(jnp.float32)[:, 0]
+    state, h = _slstm_step(p, state, g, cfg)
+    h = common.rmsnorm(p["norm"], h[:, None].astype(common.COMPUTE_DTYPE),
+                       eps=cfg.norm_eps)
+    y = h.astype(jnp.float32).reshape(B, 1, inner) * jax.nn.silu(
+        z.astype(jnp.float32)
+    )
+    return common.dense(p["down"], y.astype(common.COMPUTE_DTYPE)), state

@@ -1,0 +1,15 @@
+from repro.optim.adam import (
+    AdamState,
+    adam_init,
+    adam_update,
+    clip_by_global_norm,
+    cosine_schedule,
+)
+
+__all__ = [
+    "AdamState",
+    "adam_init",
+    "adam_update",
+    "clip_by_global_norm",
+    "cosine_schedule",
+]

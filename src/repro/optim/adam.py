@@ -1,0 +1,91 @@
+"""Minimal functional AdamW + schedules (no external deps).
+
+Used both for model training (examples/train_lm.py) and for the paper's
+post-training rotation calibration (200-300 Adam steps on reconstruction
+MSE, §5.1).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "AdamState",
+    "adam_init",
+    "adam_update",
+    "clip_by_global_norm",
+    "cosine_schedule",
+]
+
+
+class AdamState(NamedTuple):
+    step: jax.Array  # () int32
+    mu: dict  # first moments, same pytree as params
+    nu: dict  # second moments
+
+
+def adam_init(params) -> AdamState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return AdamState(jnp.zeros((), jnp.int32), zeros,
+                     jax.tree.map(jnp.copy, zeros))
+
+
+def adam_update(
+    grads,
+    state: AdamState,
+    params,
+    *,
+    lr,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+):
+    """One AdamW step.  ``lr`` may be a scalar or a callable of step."""
+    step = state.step + 1
+    if callable(lr):
+        lr_t = lr(step)
+    else:
+        lr_t = jnp.asarray(lr, jnp.float32)
+    b1c = 1.0 - b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - b2 ** step.astype(jnp.float32)
+
+    mu = jax.tree.map(
+        lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads
+    )
+    nu = jax.tree.map(
+        lambda n, g: b2 * n + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+        state.nu,
+        grads,
+    )
+
+    def upd(p, m, n):
+        mhat = m / b1c
+        nhat = n / b2c
+        delta = mhat / (jnp.sqrt(nhat) + eps)
+        if weight_decay:
+            delta = delta + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, AdamState(step, mu, nu)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads), gn
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr

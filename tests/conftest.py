@@ -1,0 +1,8 @@
+import os
+import sys
+
+# src/ layout import without install
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Smoke tests and benches must see exactly ONE device; the dry-run sets its
+# own XLA_FLAGS (512 host devices) in its own process.  Never set that here.

@@ -1,0 +1,137 @@
+"""Per-kernel validation (interpret mode): shape/dtype sweeps asserting
+bit-exactness (quantize) / allclose (attention) against the pure-jnp
+oracles, per the kernel contract."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import kvcache
+from repro.core.quant_attention_ref import decode_attention_quant
+from repro.core.transforms import Rotation, make_rotation
+from repro.kernels.quant_attention.ops import decode_attention_kernel
+from repro.kernels.srft_quant import ref
+from repro.kernels.srft_quant.ops import dequantize_rotate, rotate_quantize
+
+
+def _rot(d, key=0, lam=False):
+    r = make_rotation("srft", jax.random.PRNGKey(key), d)
+    if lam:
+        r = Rotation(
+            r.matrix,
+            jnp.exp(0.3 * jax.random.normal(jax.random.PRNGKey(key + 1), (d,))),
+            r.signs, r.kind,
+        )
+    return r
+
+
+SWEEP = [
+    # (d, group, bits, n)
+    (64, 32, 4, 256), (64, 16, 4, 128), (64, 64, 4, 64),
+    (128, 32, 4, 256), (128, 16, 8, 128), (128, 128, 4, 64),
+    (256, 32, 4, 128), (256, 32, 8, 64),
+    (112, 28, 4, 96), (112, 14, 4, 96),  # mixed-radix head_dim
+]
+
+
+@pytest.mark.parametrize("d,group,bits,n", SWEEP)
+def test_srft_quant_kernel_bit_exact(d, group, bits, n):
+    rot = _rot(d, key=d + group + bits, lam=True)
+    x = jax.random.normal(jax.random.PRNGKey(1), (n, d))
+    m = ref.fold_matrix(rot)
+    pk_ref, sc_ref = ref.srft_quant_ref(x, m, group=group, bits=bits)
+    pk, sc = rotate_quantize(x, rot, group=group, bits=bits)
+    np.testing.assert_array_equal(np.asarray(pk), np.asarray(pk_ref))
+    np.testing.assert_allclose(np.asarray(sc), np.asarray(sc_ref), rtol=1e-6)
+
+
+@pytest.mark.parametrize("d,group,bits,n", SWEEP[:6])
+def test_srft_dequant_kernel_matches_ref(d, group, bits, n):
+    rot = _rot(d, key=d + 7, lam=True)
+    x = jax.random.normal(jax.random.PRNGKey(2), (n, d))
+    pk, sc = rotate_quantize(x, rot, group=group, bits=bits)
+    out_k = dequantize_rotate(pk, sc, rot, group=group, bits=bits)
+    minv = ref.fold_inverse_matrix(rot)
+    out_ref = ref.srft_dequant_ref(pk, sc, minv, group=group, bits=bits)
+    np.testing.assert_allclose(
+        np.asarray(out_k), np.asarray(out_ref), atol=1e-5
+    )
+    # round-trip error bounded by quantization noise
+    err = np.abs(np.asarray(out_k) - np.asarray(x)).max()
+    assert err < (1.5 if bits == 4 else 0.1), err
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_srft_quant_kernel_dtype_sweep(dtype):
+    d, g = 128, 32
+    rot = _rot(d, key=3)
+    x = jax.random.normal(jax.random.PRNGKey(4), (128, d)).astype(dtype)
+    pk, sc = rotate_quantize(x, rot, group=g, bits=4)
+    m = ref.fold_matrix(rot)
+    pk_ref, _ = ref.srft_quant_ref(x.astype(jnp.float32), m, group=g, bits=4)
+    np.testing.assert_array_equal(np.asarray(pk), np.asarray(pk_ref))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2 ** 16),
+    d=st.sampled_from([64, 128]),
+    group=st.sampled_from([16, 32]),
+)
+def test_property_kernel_roundtrip_error_bounded(seed, d, group):
+    """Round-trip error is bounded by per-group scale/2 rotated back
+    (orthonormal -> L2 preserved): ||x - rt(x)||_2 <= ||scale||/2 * sqrt(d)."""
+    rot = _rot(d, key=seed % 97)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (64, d))
+    pk, sc = rotate_quantize(x, rot, group=group, bits=4)
+    xr = dequantize_rotate(pk, sc, rot, group=group, bits=4)
+    err = np.linalg.norm(np.asarray(xr) - np.asarray(x), axis=-1)
+    bound = 0.5 * np.sqrt(
+        (np.asarray(sc) ** 2).sum(-1) * group
+    ) + 1e-4
+    assert (err <= bound).all()
+
+
+ATTN_SWEEP = [
+    # (d, g, Hq, Hkv, S, prompt)
+    (64, 32, 4, 2, 96, 70), (64, 16, 8, 8, 64, 64),
+    (128, 32, 8, 2, 128, 100), (128, 32, 16, 4, 256, 17),
+    (112, 28, 4, 4, 64, 33), (256, 32, 4, 1, 512, 480),
+]
+
+
+@pytest.mark.parametrize("d,g,Hq,Hkv,S,prompt", ATTN_SWEEP)
+def test_decode_attention_kernel_vs_oracle(d, g, Hq, Hkv, S, prompt):
+    rk = _rot(d, key=d, lam=True)
+    rv = _rot(d, key=d + 1)
+    B = 2
+    cache = kvcache.init_cache(B, Hkv, S, d, group=g, window=16)
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, Hkv, prompt, d))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, Hkv, prompt, d))
+    cache = kvcache.prefill(cache, rk, rv, k, v)
+    q = jax.random.normal(jax.random.PRNGKey(3), (B, Hq, 1, d))
+    out_ref = decode_attention_quant(q, cache, rk, rv)
+    out_k = decode_attention_kernel(q, cache, rk, rv, blk=32)
+    np.testing.assert_allclose(
+        np.asarray(out_ref), np.asarray(out_k), atol=5e-5
+    )
+
+
+def test_decode_attention_kernel_after_decode_updates():
+    d, g, Hq, Hkv, S = 64, 16, 4, 2, 128
+    rk, rv = _rot(d, key=11, lam=True), _rot(d, key=12)
+    B = 1
+    cache = kvcache.init_cache(B, Hkv, S, d, group=g, window=16)
+    k = jax.random.normal(jax.random.PRNGKey(5), (B, Hkv, 64, d))
+    cache = kvcache.prefill(cache, rk, rv, k, k)
+    for i in range(20):  # crosses a flush boundary
+        kn = jax.random.normal(jax.random.PRNGKey(100 + i), (B, Hkv, 1, d))
+        cache = kvcache.decode_update(cache, rk, rv, kn, kn)
+    q = jax.random.normal(jax.random.PRNGKey(6), (B, Hq, 1, d))
+    out_ref = decode_attention_quant(q, cache, rk, rv)
+    out_k = decode_attention_kernel(q, cache, rk, rv, blk=32)
+    np.testing.assert_allclose(
+        np.asarray(out_ref), np.asarray(out_k), atol=5e-5
+    )

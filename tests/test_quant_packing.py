@@ -1,0 +1,90 @@
+"""Quantizer + nibble-packing properties (paper §3.2, Table 5 schemes)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import packing, quant
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(1, 16),
+    d_half=st.integers(1, 64),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_property_pack_unpack_roundtrip(n, d_half, seed):
+    d = 2 * d_half
+    codes = jax.random.randint(
+        jax.random.PRNGKey(seed), (n, d), -8, 8
+    ).astype(jnp.int8)
+    packed = packing.pack_int4(codes)
+    assert packed.shape == (n, d_half)
+    assert packed.dtype == jnp.uint8
+    out = packing.unpack_int4(packed)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(codes))
+
+
+@pytest.mark.parametrize("bits", [3, 4, 6, 8])
+def test_per_token_quant_error_bound(bits):
+    """|x - deq(q(x))| <= scale/2 per coordinate (symmetric, no clip)."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (128, 64))
+    q = quant.quantize_per_token(x, bits)
+    deq = quant.dequantize_per_token(q)
+    err = np.abs(np.asarray(deq) - np.asarray(x))
+    bound = np.asarray(q.scales) * 0.5 + 1e-6
+    assert (err <= bound).all()
+    assert int(np.abs(np.asarray(q.codes)).max()) <= quant.qmax(bits)
+
+
+@pytest.mark.parametrize("group", [8, 16, 32])
+def test_per_group_matches_per_token_when_group_is_d(group):
+    d = group
+    x = jax.random.normal(jax.random.PRNGKey(1), (32, d))
+    qg = quant.quantize_per_group(x, 4, d)
+    qt = quant.quantize_per_token(x, 4)
+    np.testing.assert_array_equal(np.asarray(qg.codes), np.asarray(qt.codes))
+
+
+def test_per_group_beats_per_token_with_outlier_channel():
+    """Paper §5.6 mechanism: one dominant coordinate collapses per-token
+    resolution; per-group scaling recovers it."""
+    d, g = 128, 16
+    x = jax.random.normal(jax.random.PRNGKey(2), (512, d))
+    x = x.at[:, 3].mul(100.0)  # dominant coordinate
+
+    qt = quant.quantize_per_token(x, 4)
+    err_t = np.abs(np.asarray(quant.dequantize_per_token(qt)) - np.asarray(x))
+    qg = quant.quantize_per_group(x, 4, g)
+    err_g = np.abs(
+        np.asarray(quant.dequantize_per_group(qg, g)) - np.asarray(x)
+    )
+    # measure error on the NON-outlier coordinates
+    mask = np.ones(d, bool)
+    mask[3] = False
+    assert err_g[:, mask].mean() < 0.25 * err_t[:, mask].mean()
+
+
+@settings(max_examples=20, deadline=None)
+@given(bits=st.sampled_from([4, 8]), seed=st.integers(0, 2 ** 16))
+def test_property_quant_scale_invariance(bits, seed):
+    """Q(a*x) has codes == Q(x) for a > 0 (symmetric abs-max quantizer)."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (16, 32))
+    a = 3.7
+    q1 = quant.quantize_per_token(x, bits)
+    q2 = quant.quantize_per_token(a * x, bits)
+    np.testing.assert_array_equal(np.asarray(q1.codes), np.asarray(q2.codes))
+    np.testing.assert_allclose(
+        np.asarray(q2.scales), a * np.asarray(q1.scales), rtol=1e-5
+    )
+
+
+def test_packed_nbytes():
+    assert packing.packed_nbytes(128, 4) == 64
+    assert packing.packed_nbytes(128, 8) == 128
+    # compression ratio at d=128, g=32: 2d / (d/2 + 4*d/g) = 3.2x (paper §7.2)
+    d, g = 128, 32
+    ratio = (2 * d) / (d / 2 + 4 * (d // g))
+    assert abs(ratio - 3.2) < 1e-6

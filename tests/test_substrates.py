@@ -1,0 +1,109 @@
+"""Substrate tests: data determinism/resume, checkpoint atomicity +
+keep-k + resume + elastic hooks, Adam correctness, gradient compression
+error feedback."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.data import DataIterator, SyntheticCorpus
+from repro.distributed.compression import compress_decompress, ef_init
+from repro.optim.adam import adam_init, adam_update, clip_by_global_norm
+
+
+def test_data_deterministic_and_resumable():
+    c = SyntheticCorpus(seed=7)
+    it1 = DataIterator(c, batch_per_shard=2, seq_len=64)
+    b0, b1 = it1.next(), it1.next()
+    state = it1.state_dict()
+    b2 = it1.next()
+    it2 = DataIterator(c, batch_per_shard=2, seq_len=64)
+    it2.restore(state)
+    b2b = it2.next()
+    np.testing.assert_array_equal(b2["tokens"], b2b["tokens"])
+    assert not np.array_equal(b0["tokens"], b1["tokens"])
+    # disjoint shards differ
+    it3 = DataIterator(c, batch_per_shard=2, seq_len=64, shard_id=1,
+                       num_shards=2)
+    assert not np.array_equal(it3.next()["tokens"], b0["tokens"])
+
+
+def test_checkpoint_roundtrip_keepk_and_atomicity(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"w": jnp.arange(12.0).reshape(3, 4), "b": jnp.ones((4,))}
+    for step in [10, 20, 30]:
+        mgr.save(step, tree, metadata={"data": {"step": step}})
+    # keep-k GC
+    assert mgr.latest_step() == 30
+    assert sorted(os.listdir(tmp_path)) == ["step_00000020", "step_00000030"]
+    restored, meta = mgr.restore(30, tree)
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(tree["w"]))
+    assert meta["data"]["step"] == 30
+    # atomicity: no .tmp dirs left behind
+    assert not any(d.endswith(".tmp") for d in os.listdir(tmp_path))
+
+
+def test_checkpoint_elastic_sharding_hook(tmp_path):
+    """restore() re-places leaves with a caller-supplied sharding."""
+    mgr = CheckpointManager(str(tmp_path))
+    tree = {"w": jnp.arange(16.0).reshape(4, 4)}
+    mgr.save(1, tree)
+    placed = {}
+
+    def sharding_fn(i, ex):
+        placed[i] = True
+        return None  # single-device: default placement
+
+    restored, _ = mgr.restore(1, tree, sharding_fn=sharding_fn)
+    assert placed  # hook was exercised per leaf
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(tree["w"]))
+
+
+def test_adam_minimizes_quadratic():
+    params = {"x": jnp.asarray([5.0, -3.0])}
+    opt = adam_init(params)
+
+    def loss(p):
+        return jnp.sum(jnp.square(p["x"] - jnp.asarray([1.0, 2.0])))
+
+    for _ in range(300):
+        g = jax.grad(loss)(params)
+        params, opt = adam_update(g, opt, params, lr=5e-2)
+    np.testing.assert_allclose(
+        np.asarray(params["x"]), [1.0, 2.0], atol=1e-2
+    )
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert abs(float(norm) - np.sqrt(1000.0)) < 1e-3
+    total = float(jnp.sqrt(jnp.sum(jnp.square(clipped["a"]))))
+    assert abs(total - 1.0) < 1e-5
+
+
+def test_compression_error_feedback_converges():
+    """With EF, the *accumulated* compressed signal tracks the true sum:
+    bias does not grow with steps (error feedback's whole point)."""
+    key = jax.random.PRNGKey(0)
+    g = jax.random.normal(key, (1024,)) * jnp.logspace(
+        -3, 0, 1024
+    )  # wide dynamic range
+    state = ef_init(g)
+    acc_true = jnp.zeros_like(g)
+    acc_hat = jnp.zeros_like(g)
+    for i in range(50):
+        acc_true = acc_true + g
+        x_hat, state = compress_decompress(g, state, bits=8)
+        acc_hat = acc_hat + x_hat
+    rel = float(
+        jnp.linalg.norm(acc_hat - acc_true) / jnp.linalg.norm(acc_true)
+    )
+    assert rel < 2e-3, rel
+    # and the one-shot (no-EF) quantization error is NOT zero
+    x1, _ = compress_decompress(g, ef_init(g), bits=8)
+    assert float(jnp.linalg.norm(x1 - g)) > 0.0

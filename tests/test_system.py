@@ -1,0 +1,140 @@
+"""End-to-end behaviour tests for the paper's system.
+
+1. Train a tiny LM on the synthetic corpus: loss must drop.
+2. Serve it with the SRFTInt4 cache: generation runs, O(1) updates, and
+   greedy continuation matches the bf16-cache continuation for the first
+   tokens (quantization noise is below the argmax margin on a trained
+   model at short context -- the paper's DeltaPPL ~ 0 regime).
+3. The paper's central quality ordering: identity << SRFT at 4-bit
+   (hook DeltaPPL), 8-bit lossless.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import SMOL_D64
+from repro.data import DataIterator, SyntheticCorpus
+from repro.launch.steps import init_train_state, make_train_step
+from repro.models import build_model
+
+
+@pytest.fixture(scope="module")
+def trained_model():
+    cfg = SMOL_D64
+    model = build_model(cfg)
+    params, opt = init_train_state(model, jax.random.PRNGKey(0))
+    it = DataIterator(SyntheticCorpus(0), batch_per_shard=8, seq_len=128)
+    step = jax.jit(make_train_step(model, lr=3e-3))
+    losses = []
+    for _ in range(150):
+        params, opt, m = step(params, opt, it.next())
+        losses.append(float(m["loss"]))
+    return cfg, model, params, losses
+
+
+def test_training_reduces_loss(trained_model):
+    _, _, _, losses = trained_model
+    assert losses[-1] < losses[0] - 0.5, (losses[0], losses[-1])
+    assert losses[-1] < 3.0, losses[-1]
+
+
+def test_generation_with_int4_cache_matches_bf16(trained_model):
+    """The paper's DeltaPPL ~ 0 regime: int4-cache decode logits stay
+    within a small noise band of the bf16-cache logits, so greedy picks
+    agree wherever the bf16 margin exceeds that noise.  (Unconditional
+    trajectory agreement is not the right assertion: on near-ties the
+    argmax is decided by sub-LSB noise and one flip reshapes the whole
+    continuation.)"""
+    cfg, model, params, _ = trained_model
+    it = DataIterator(SyntheticCorpus(1), batch_per_shard=2, seq_len=48)
+    prompt = jnp.asarray(it.next()["tokens"])[:, :40]
+    rots = model.init_rotations(jax.random.PRNGKey(7))
+
+    cq = model.init_cache(2, 64, quant=True)
+    cb = model.init_cache(2, 64, quant=False)
+    lq, cq = model.prefill(params, rots, prompt, cq)
+    lb, cb = model.prefill(params, None, prompt, cb)
+
+    max_logit_err = 0.0
+    n_confident, n_confident_agree = 0, 0
+    tok = jnp.argmax(lb[:, -1], -1)[:, None].astype(jnp.int32)
+    for _ in range(16):
+        lq, cq = model.decode_step(params, rots, tok, cq)
+        lb, cb = model.decode_step(params, None, tok, cb)
+        zq = jax.nn.log_softmax(lq[:, -1].astype(jnp.float32), -1)
+        zb = jax.nn.log_softmax(lb[:, -1].astype(jnp.float32), -1)
+        max_logit_err = max(max_logit_err, float(jnp.abs(zq - zb).max()))
+        srt = jnp.sort(zb, -1)
+        margin = np.asarray(srt[:, -1] - srt[:, -2])
+        agree = np.asarray(jnp.argmax(zq, -1) == jnp.argmax(zb, -1))
+        conf = margin > 0.5
+        n_confident += int(conf.sum())
+        n_confident_agree += int((agree & conf).sum())
+        tok = jnp.argmax(zb, -1)[:, None].astype(jnp.int32)  # follow bf16
+
+    assert max_logit_err < 1.0, max_logit_err
+    assert n_confident >= 8, "test needs confident steps to be meaningful"
+    assert n_confident_agree == n_confident, (
+        f"int4 flipped a confident token: {n_confident_agree}/{n_confident}, "
+        f"max logit err {max_logit_err}"
+    )
+
+
+def _hook_ppl(model, params, tokens, rots, kv_quant_cfg):
+    logits, _ = model.forward(
+        params, tokens, rots=rots, kv_quant_cfg=kv_quant_cfg, remat=False
+    )
+    lp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), -1)
+    nll = -jnp.take_along_axis(lp, tokens[:, 1:, None], -1)[..., 0]
+    return float(jnp.exp(jnp.mean(nll)))
+
+
+def test_srft_beats_identity_at_4bit(trained_model):
+    """Fig 2's ordering on our trained stand-in.
+
+    The paper's mechanism (§5.6) requires outlier channels in K/V: the
+    per-token abs-max is set by a dominant coordinate, crushing the
+    resolution of the rest; the rotation spreads the outlier.  A tiny
+    model trained 100 steps on a synthetic corpus does not grow such
+    channels organically, so we inject one with the exactly
+    function-preserving reparameterization in core/outliers.py and check
+    (a) the fp32 model is unchanged, (b) identity-quantization is hurt
+    far more than SRFT-quantization.
+    """
+    cfg, model, params, _ = trained_model
+    it = DataIterator(SyntheticCorpus(2), batch_per_shard=4, seq_len=128)
+    toks = jnp.asarray(it.next()["tokens"])
+
+    base = _hook_ppl(model, params, toks, None, None)
+    from repro.core.outliers import inject_kv_outliers
+
+    params_o = inject_kv_outliers(params, head_dim=cfg.head_dim, alpha=20.0)
+    base_o = _hook_ppl(model, params_o, toks, None, None)
+    # invariance: injection must not change the unquantized model
+    assert abs(base_o - base) / base < 5e-3, (base, base_o)
+
+    import dataclasses
+
+    rots_srft = model.init_rotations(jax.random.PRNGKey(1))
+    m_id = build_model(dataclasses.replace(cfg, rotation="identity"))
+    rots_id = m_id.init_rotations(jax.random.PRNGKey(1))
+
+    cfg4 = dict(bits=4, scheme="per_token", group=32)
+    ppl_id = _hook_ppl(model, params_o, toks, rots_id, cfg4)
+    ppl_srft = _hook_ppl(model, params_o, toks, rots_srft, cfg4)
+    # identity quantization hurts more than SRFT-rotated quantization
+    assert ppl_srft < ppl_id, (base, ppl_srft, ppl_id)
+    assert ppl_srft - base < 0.5 * (ppl_id - base), (base, ppl_srft, ppl_id)
+    assert ppl_srft < base * 1.5, (base, ppl_srft)
+
+
+def test_eight_bit_is_lossless(trained_model):
+    cfg, model, params, _ = trained_model
+    it = DataIterator(SyntheticCorpus(3), batch_per_shard=4, seq_len=128)
+    toks = jnp.asarray(it.next()["tokens"])
+    base = _hook_ppl(model, params, toks, None, None)
+    rots = model.init_rotations(jax.random.PRNGKey(1))
+    ppl8 = _hook_ppl(model, params, toks, rots,
+                     dict(bits=8, scheme="per_token", group=32))
+    assert abs(ppl8 - base) / base < 0.01, (base, ppl8)

@@ -1,0 +1,108 @@
+"""SRFT/SRHT transform properties (paper §3.1): exact orthonormality,
+Parseval, inner-product preservation, inverse symmetry, matrix-form
+agreement, Gaussianization (kurtosis reduction)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import transforms as T
+
+DIMS = [8, 64, 112, 128, 256]  # includes the mixed-radix (non-pow2) case
+
+
+@pytest.mark.parametrize("d", DIMS)
+@pytest.mark.parametrize("kind", ["srft", "srht", "identity"])
+def test_roundtrip_exact(d, kind):
+    if kind == "srht" and d & (d - 1):
+        pytest.skip("Hadamard needs power-of-two d (the paper's SRFT point)")
+    rot = T.make_rotation(kind, jax.random.PRNGKey(0), d)
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, d))
+    y = rot.forward(x)
+    xr = rot.inverse(y)
+    np.testing.assert_allclose(np.asarray(xr), np.asarray(x), atol=2e-5)
+
+
+@pytest.mark.parametrize("d", DIMS)
+def test_parseval_and_inner_products(d):
+    signs = T.random_signs(jax.random.PRNGKey(0), d)
+    x = jax.random.normal(jax.random.PRNGKey(1), (32, d))
+    y = jax.random.normal(jax.random.PRNGKey(2), (32, d))
+    fx, fy = T.srft_forward(x, signs), T.srft_forward(y, signs)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(fx), axis=-1),
+        np.linalg.norm(np.asarray(x), axis=-1),
+        rtol=1e-5,
+    )
+    np.testing.assert_allclose(
+        np.sum(np.asarray(fx) * np.asarray(fy), -1),
+        np.sum(np.asarray(x) * np.asarray(y), -1),
+        rtol=1e-3, atol=1e-3,
+    )
+
+
+@pytest.mark.parametrize("d", DIMS)
+@pytest.mark.parametrize("kind", ["srft", "srht"])
+def test_matrix_is_orthonormal_and_matches_functional(d, kind):
+    if kind == "srht" and d & (d - 1):
+        pytest.skip("power-of-two only")
+    signs = T.random_signs(jax.random.PRNGKey(3), d)
+    B = T.transform_matrix(kind, signs)
+    np.testing.assert_allclose(
+        np.asarray(B @ B.T), np.eye(d), atol=1e-5
+    )
+    x = jax.random.normal(jax.random.PRNGKey(4), (16, d))
+    fwd = T.srft_forward(x, signs) if kind == "srft" else T.srht_forward(x, signs)
+    np.testing.assert_allclose(
+        np.asarray(x @ B.T), np.asarray(fwd), atol=1e-4
+    )
+
+
+def test_hermitian_pack_unpack_inverse():
+    d = 64
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, d))
+    y = jnp.fft.rfft(x, axis=-1, norm="ortho")
+    p = T.hermitian_pack(y, d)
+    y2 = T.hermitian_unpack(p, d)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y2), atol=1e-6)
+
+
+def test_gaussianization_kurtosis_drop():
+    """Paper §3.1: heavy-tailed input -> near-Gaussian after SRFT."""
+    d = 128
+    key = jax.random.PRNGKey(0)
+    # heavy-tailed: one dominant coordinate (the Qwen layer-0 pathology)
+    x = jax.random.normal(key, (4096, d)) * 0.1
+    x = x.at[:, 7].mul(40.0)
+
+    def excess_kurtosis(v):
+        v = np.asarray(v).reshape(-1)
+        v = (v - v.mean()) / v.std()
+        return float((v ** 4).mean() - 3.0)
+
+    signs = T.random_signs(jax.random.PRNGKey(1), d)
+    k_before = excess_kurtosis(x)
+    k_after = excess_kurtosis(T.srft_forward(x, signs))
+    assert k_before > 10.0
+    assert abs(k_after) < 1.5, f"SRFT failed to gaussianize: {k_after}"
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    d_exp=st.integers(min_value=3, max_value=8),
+    seed=st.integers(min_value=0, max_value=2 ** 16),
+)
+def test_property_srft_isometry(d_exp, seed):
+    d = 2 ** d_exp
+    signs = T.random_signs(jax.random.PRNGKey(seed), d)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (4, d))
+    y = T.srft_forward(x, signs)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(y), axis=-1),
+        np.linalg.norm(np.asarray(x), axis=-1),
+        rtol=1e-4,
+    )
+    xr = T.srft_inverse(y, signs)
+    np.testing.assert_allclose(np.asarray(xr), np.asarray(x), atol=1e-4)
