@@ -75,22 +75,22 @@ def run(*, quick: bool = False) -> dict:
     print(fmt_table(rows, ["model", "prefix", "bf16_us", "int4_us",
                            "delta_pct", "kv_ratio"]))
 
-    # measured O(1)-update evidence on CPU (relative only)
+    # measured O(1)-update evidence on CPU (relative only).  Caches come
+    # from the policy registry; rotations live inside the int4 state.
     cfg, model, params = trained_standin("smol-d128")
-    rots = model.init_rotations(jax.random.PRNGKey(7))
     measured = []
     for s_max, prefill_len in ((128, 96), (512, 480)):
         tok = jnp.zeros((2, 1), jnp.int32)
         it = jnp.zeros((2, prefill_len), jnp.int32)
-        cq = model.init_cache(2, s_max, quant=True)
-        cb = model.init_cache(2, s_max, quant=False)
-        _, cq = jax.jit(model.prefill)(params, rots, it, cq)
-        _, cb = jax.jit(lambda p, t, c: model.prefill(p, None, t, c))(
-            params, it, cb)
-        dq = jax.jit(model.decode_step)
-        db = jax.jit(lambda p, t, c: model.decode_step(p, None, t, c))
-        tq = time_fn(lambda: dq(params, rots, tok, cq), iters=5)
-        tb = time_fn(lambda: db(params, tok, cb), iters=5)
+        cq = model.init_cache(2, s_max, policy="int4-srft",
+                              key=jax.random.PRNGKey(7))
+        cb = model.init_cache(2, s_max, policy="bf16")
+        prefill = jax.jit(model.prefill)
+        _, cq = prefill(params, it, cq)
+        _, cb = prefill(params, it, cb)
+        decode = jax.jit(model.decode_step)
+        tq = time_fn(lambda: decode(params, tok, cq), iters=5)
+        tb = time_fn(lambda: decode(params, tok, cb), iters=5)
         measured.append({"prefix": prefill_len, "cpu_quant_ms": tq * 1e3,
                          "cpu_bf16_ms": tb * 1e3})
         print(f"  CPU decode_step prefix={prefill_len}: quant "

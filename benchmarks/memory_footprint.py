@@ -16,18 +16,11 @@ measured full-attention ratios.
 from __future__ import annotations
 
 import jax
-import numpy as np
 
 from benchmarks.common import fmt_table, save_record
-from repro.core import kvcache as kvc
+from repro.core.cache_api import get_policy
 
 BYTES = {"bf16": 2, "fp16": 2, "fp32": 4, "uint8": 1}
-
-
-def nbytes(tree) -> int:
-    return sum(
-        x.size * x.dtype.itemsize for x in jax.tree.leaves(tree)
-    )
 
 
 def ratio_arith(d: int, group: int, scale_bytes: int = 4,
@@ -37,18 +30,20 @@ def ratio_arith(d: int, group: int, scale_bytes: int = 4,
 
 def measured(*, batch=2, heads=4, s_max=512, d=128, group=32,
              window=16) -> dict:
-    q = kvc.init_cache(batch, heads, s_max, d, group=group, window=window)
-    b = kvc.init_bf16_cache(batch, heads, s_max, d)
-    nb_q, nb_b = nbytes(q), nbytes(b)
-    # persistent storage only (exclude the fp32 residual window, which is
-    # O(W) not O(S); the paper counts persistent memory the same way)
-    nb_q_persistent = nbytes(
-        (q.k_packed, q.k_scales, q.v_packed, q.v_scales)
-    )
+    """Measured bytes via the policy API -- the same ``nbytes`` /
+    ``compression_ratio`` methods launch/serve.py reports, so serving and
+    this benchmark cannot drift."""
+    pol = get_policy("int4-srft", group=group, window=window)
+    bpol = get_policy("bf16")
+    key = jax.random.PRNGKey(0)
+    q = pol.init_state(batch, heads, s_max, d, key=key)
+    b = bpol.init_state(batch, heads, s_max, d)
     return {
-        "bf16_bytes": nb_b, "int4_bytes_total": nb_q,
-        "int4_bytes_persistent": nb_q_persistent,
-        "measured_ratio": nb_b / nb_q_persistent,
+        "bf16_bytes": bpol.nbytes(b),
+        "int4_bytes_total": pol.nbytes(q, persistent_only=False),
+        "int4_bytes_persistent": pol.nbytes(q),
+        # bf16-equivalent / persistent, straight from the policy
+        "measured_ratio": pol.compression_ratio(q),
         "arith_ratio": ratio_arith(d, group),
     }
 

@@ -4,9 +4,9 @@
 
 1. Build a small GQA transformer (head_dim=64, the paper's SmolLM2 regime).
 2. Train it briefly on the synthetic corpus.
-3. Serve greedy decode twice -- bf16 DynamicCache baseline vs SRFT int4
-   cache -- and compare logits, memory, and the round-trip error of the
-   fused rotate-quantize kernel against its oracle.
+3. Serve greedy decode under three registered cache policies -- bf16
+   DynamicCache baseline, SRFT int4, and int8 per-token -- plus the
+   round-trip error of the fused rotate-quantize kernel vs its oracle.
 """
 import jax
 import jax.numpy as jnp
@@ -46,23 +46,26 @@ pr, sr = ref.srft_quant_ref(x, ref.fold_matrix(rot), group=32, bits=4)
 print(f"kernel vs oracle: {100*float(np.mean(np.asarray(packed)==np.asarray(pr))):.3f}% "
       "bit-identical")
 
-# --- 3b. serve with the int4 cache vs bf16 -----------------------------------
+# --- 3b. serve under three registered cache policies -------------------------
+# One serving loop, three schemes: the model code never branches on the
+# cache type; each policy owns its state (rotations included) and reads.
 prompt = jnp.asarray(
     DataIterator(SyntheticCorpus(1), batch_per_shard=2, seq_len=48).next()
     ["tokens"]
 )[:, :40]
-rots = model.init_rotations(jax.random.PRNGKey(7))
 
-for name, quant, r in (("bf16", False, None), ("int4", True, rots)):
-    cache = model.init_cache(2, 64, quant=quant)
-    logits, cache = jax.jit(model.prefill)(params, r, prompt, cache)
+for name in ("bf16", "int4-srft", "int8-per-token"):
+    cache = model.init_cache(2, 64, policy=name, key=jax.random.PRNGKey(7))
+    logits, cache = jax.jit(model.prefill)(params, prompt, cache)
     tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
     toks = []
     for _ in range(12):
         toks.append(np.asarray(tok))
-        logits, cache = jax.jit(model.decode_step)(params, r, tok, cache)
+        logits, cache = jax.jit(model.decode_step)(params, tok, cache)
         tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
     text = "".join(chr(c) if 32 <= c < 127 else "?"
                    for c in np.concatenate(toks, 1)[0])
-    print(f"  {name} continuation: {text!r}")
+    pol = model.cache_policy(name)
+    ratio = pol.compression_ratio(cache["attn"])
+    print(f"  {name:15s} ({ratio:.2f}x KV) continuation: {text!r}")
 print("quickstart done.")

@@ -24,7 +24,7 @@ import numpy as np
 
 from repro.configs.paper_models import SMOL_D64
 from repro.data import DataIterator, SyntheticCorpus
-from repro.launch.serve import cache_nbytes, calibrate_lambdas
+from repro.launch.serve import calibrate_lambdas
 from repro.launch.steps import init_train_state, make_train_step
 from repro.models import build_model
 
@@ -48,30 +48,35 @@ reqs = [
 ]
 prompt = jnp.asarray(np.stack(reqs))
 
-# calibrate per-channel lambda: one forward pass over a prompt stream
+# calibrate per-channel lambda: one forward pass over a prompt stream;
+# the calibrated rotations are embedded into the int4 cache state, so the
+# serving loop below never sees them again
 rots = model.init_rotations(jax.random.PRNGKey(7))
 t0 = time.time()
 rots = calibrate_lambdas(model, params, prompt, rots)
 print(f"[calibrate] lambda in {time.time()-t0:.1f}s "
       f"(paper: ~2s per model)")
 
-s_max = PROMPT + NEW + (16 - (PROMPT + NEW) % 16) % 16
-cache = model.init_cache(BATCH, s_max, quant=True)
-bf16 = model.init_cache(BATCH, s_max, quant=False)
-print(f"[memory] persistent KV: bf16 {cache_nbytes(bf16['attn'])/1e3:.1f} KB"
-      f" -> int4 {cache_nbytes(cache['attn'])/1e3:.1f} KB "
-      f"({cache_nbytes(bf16['attn'])/cache_nbytes(cache['attn']):.2f}x)")
+pol = model.cache_policy("int4-srft")
+W = pol.window
+s_max = PROMPT + NEW + (W - (PROMPT + NEW) % W) % W
+cache = model.init_cache(BATCH, s_max, policy=pol, rots=rots)
+bpol = model.cache_policy("bf16")
+bf16 = model.init_cache(BATCH, s_max, policy=bpol)
+print(f"[memory] persistent KV: bf16 {bpol.nbytes(bf16['attn'])/1e3:.1f} KB"
+      f" -> int4 {pol.nbytes(cache['attn'])/1e3:.1f} KB "
+      f"({pol.compression_ratio(cache['attn']):.2f}x, via the policy API)")
 
 prefill = jax.jit(model.prefill)
 decode = jax.jit(model.decode_step)
 
-logits, cache = prefill(params, rots, prompt, cache)
+logits, cache = prefill(params, prompt, cache)
 tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
 outs = []
 t0 = time.time()
 for _ in range(NEW):
     outs.append(np.asarray(tok))
-    logits, cache = decode(params, rots, tok, cache)
+    logits, cache = decode(params, tok, cache)
     tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
 dt = time.time() - t0
 gen = np.concatenate(outs, axis=1)

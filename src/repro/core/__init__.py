@@ -6,7 +6,9 @@ Public API:
     quant:       quantize_per_token/group/tensor + dequant, Quantized
     packing:     pack_int4 / unpack_int4
     kvcache:     QuantKVCache, BF16KVCache, init_cache, prefill,
-                 decode_update
+                 decode_update (the int4 policy's engine)
+    cache_api:   KVCachePolicy protocol, CacheState, AttendBackend,
+                 register_policy / get_policy registry (DESIGN.md §6)
     calibrate:   static_lambda, calibrate (learned lambda/Cayley/Householder)
     quant_attention_ref: rotated-space decode attention oracle
 """
@@ -16,6 +18,14 @@ from repro.core.quant_attention_ref import (
     decode_attention_quant,
 )
 from repro.core.transforms import Rotation, make_rotation
+from repro.core import cache_api
+from repro.core.cache_api import (
+    AttendBackend,
+    CacheState,
+    KVCachePolicy,
+    get_policy,
+    register_policy,
+)
 
 __all__ = [
     "calibrate",
@@ -23,8 +33,14 @@ __all__ = [
     "packing",
     "quant",
     "transforms",
+    "cache_api",
     "Rotation",
     "make_rotation",
     "decode_attention_quant",
     "decode_attention_bf16",
+    "AttendBackend",
+    "CacheState",
+    "KVCachePolicy",
+    "get_policy",
+    "register_policy",
 ]

@@ -1,6 +1,8 @@
 """Quantized KV cache with residual window (paper §7.2, `SRFTInt4Cache`).
 
-Functional JAX analogue of the paper's HuggingFace ``Cache`` subclass:
+Storage engine behind the "int4-srft" policy in ``core/cache_api.py``
+(the polymorphic analogue of the paper's HuggingFace ``Cache`` subclass;
+model code dispatches through that protocol, not these functions):
 
   (i)   K/V stored between decode steps as int4 codes (nibble-packed uint8)
         + per-group fp32 scales -- 3.2x theoretical compression at d=128/g=32;

@@ -80,14 +80,8 @@ def build_cell(arch: str, shape_name: str, mesh, cfg=None):
         jfn = jax.jit(fn, in_shardings=in_sh, donate_argnums=(0, 1))
         return jfn, args, cfg, shape, params_shapes
 
-    # serving cells
-    rots_shapes = jax.eval_shape(
-        lambda: model.init_rotations(jax.random.PRNGKey(1))
-    )
-    rots_sh = jax.tree.map(
-        lambda l: pt.make_shardings(pt.auto_spec(l.shape, mesh, skip_dims=l.ndim), mesh),
-        rots_shapes,
-    )  # rotations replicated (small d x d per layer)
+    # serving cells: rotation state rides inside the cache pytree
+    # (cache_specs replicates rot_k/rot_v leaves -- small d x d per layer)
     cache_shapes = serve_cache_shapes(model, cfg, shape)
     cache_sh = pt.make_shardings(pt.cache_specs(cache_shapes, mesh), mesh)
 
@@ -95,18 +89,18 @@ def build_cell(arch: str, shape_name: str, mesh, cfg=None):
         batch_shapes = input_specs(cfg, shape)
         batch_sh = pt.make_shardings(pt.batch_specs(batch_shapes, mesh), mesh)
         fn = make_prefill_step(model)
-        args = (params_shapes, rots_shapes, batch_shapes, cache_shapes)
-        in_sh = (params_sh, rots_sh, batch_sh, cache_sh)
-        jfn = jax.jit(fn, in_shardings=in_sh, donate_argnums=(3,))
+        args = (params_shapes, batch_shapes, cache_shapes)
+        in_sh = (params_sh, batch_sh, cache_sh)
+        jfn = jax.jit(fn, in_shardings=in_sh, donate_argnums=(2,))
         return jfn, args, cfg, shape, params_shapes
 
     # decode
     tok_shapes = input_specs(cfg, shape)["token"]
     tok_sh = pt.make_shardings(pt.batch_specs({"t": tok_shapes}, mesh)["t"], mesh)
     fn = make_decode_step(model)
-    args = (params_shapes, rots_shapes, tok_shapes, cache_shapes)
-    in_sh = (params_sh, rots_sh, tok_sh, cache_sh)
-    jfn = jax.jit(fn, in_shardings=in_sh, donate_argnums=(3,))
+    args = (params_shapes, tok_shapes, cache_shapes)
+    in_sh = (params_sh, tok_sh, cache_sh)
+    jfn = jax.jit(fn, in_shardings=in_sh, donate_argnums=(2,))
     return jfn, args, cfg, shape, params_shapes
 
 

@@ -136,6 +136,10 @@ def cache_specs(cache_shapes, mesh):
         field = names[-1] if names else ""
         if not shape:
             return P()
+        # rotation state inside the cache (cache_api.Int4State): small
+        # per-layer d x d constants -- always replicated
+        if "rot_k" in names or "rot_v" in names:
+            return P()
         # find the batch dim: first dim after stack dims; stack depth from
         # the cache dict key (attn caches are vmapped once; hybrid ssm_super
         # twice).  Heuristic: cache arrays are (L, B, ...) or (L, P, B, ...)
@@ -147,7 +151,8 @@ def cache_specs(cache_shapes, mesh):
         b_dim = skip
         seq_dim = None
         head_dim_idx = None
-        if field in ("k_packed", "k_scales", "v_packed", "v_scales", "k", "v"):
+        if field in ("k_packed", "k_scales", "v_packed", "v_scales", "k", "v",
+                     "k_codes", "v_codes"):
             head_dim_idx = skip + 1
             seq_dim = skip + 2
         elif field in ("k_residual", "v_residual"):

@@ -1,16 +1,19 @@
-"""Batched serving driver with the SRFT int4 KV cache.
+"""Batched serving driver over the ``KVCachePolicy`` registry.
 
     PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
         --smoke --batch 4 --prompt-len 64 --new-tokens 32 \
-        [--no-quant] [--calibrate] [--ckpt-dir DIR]
+        [--policy {bf16,int4-srft,int8-per-token,...}] \
+        [--backend {gather,blockwise,kernel}] \
+        [--calibrate] [--ckpt-dir DIR]
 
 The serving analogue of launch/train.py: builds the arch (optionally
 smoke-reduced), loads params from a checkpoint or initializes them,
 optionally calibrates per-channel lambda from a short prompt stream (the
 paper's ~2 s one-forward-pass recipe, §7.3), then runs batched greedy
-decode with either the quantized cache (rotated-space attention, int4 +
-residual window) or the bf16 baseline, and reports tokens/s plus the
-measured persistent-cache compression ratio.
+decode with the selected cache policy (the paper's int4 SRFT recipe by
+default) and reports tokens/s plus the measured persistent-cache
+compression ratio straight from the policy API -- serving and benchmarks
+share one byte-accounting method and cannot drift.
 """
 from __future__ import annotations
 
@@ -24,6 +27,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.checkpoint.manager import CheckpointManager
 from repro.core import calibrate as C
+from repro.core.cache_api import AttendBackend, available_policies
 from repro.core.transforms import Rotation
 from repro.data import DataIterator, SyntheticCorpus
 from repro.launch.train import smoke_config
@@ -49,16 +53,6 @@ def calibrate_lambdas(model, params, tokens, rots: Rotations) -> Rotations:
     return Rotations(k=fit(rots.k, k_act), v=fit(rots.v, v_act))
 
 
-def cache_nbytes(cache, *, persistent_only: bool = True) -> int:
-    total = 0
-    for path, leaf in jax.tree_util.tree_leaves_with_path(cache):
-        name = str(path[-1])
-        if persistent_only and "residual" in name:
-            continue
-        total += leaf.size * leaf.dtype.itemsize
-    return total
-
-
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="internlm2-1.8b")
@@ -66,7 +60,14 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--new-tokens", type=int, default=32)
-    ap.add_argument("--no-quant", action="store_true")
+    ap.add_argument("--policy", default=None,
+                    help=f"cache policy name (default: config; "
+                         f"registered: {', '.join(available_policies())})")
+    ap.add_argument("--backend", default="gather",
+                    choices=[b.value for b in AttendBackend],
+                    help="attention read path for decode")
+    ap.add_argument("--no-quant", action="store_true",
+                    help="shorthand for --policy bf16")
     ap.add_argument("--calibrate", action="store_true")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
@@ -76,7 +77,7 @@ def main():
     if args.smoke:
         cfg = smoke_config(cfg)
     model = build_model(cfg)
-    if not cfg.kv_applicable and not args.no_quant:
+    if not cfg.kv_applicable:
         print(f"[note] {cfg.name} has no attention KV cache "
               f"(family={cfg.family}); running its recurrent-state path")
 
@@ -97,22 +98,33 @@ def main():
                       seq_len=args.prompt_len)
     prompt = jnp.asarray(it.next()["tokens"])
 
-    quant = not args.no_quant and cfg.kv_applicable and cfg.kv_quant
-    rots = model.init_rotations(jax.random.PRNGKey(7)) if quant else None
-    if quant and args.calibrate:
+    policy_name = "bf16" if args.no_quant else args.policy
+    policy = model.cache_policy(policy_name) if cfg.kv_applicable else None
+    backend = AttendBackend.parse(args.backend)
+
+    rots = None
+    if args.calibrate and policy is not None \
+            and hasattr(policy, "rotation"):
+        rots = model.init_rotations(jax.random.PRNGKey(7))
         t0 = time.time()
         rots = calibrate_lambdas(model, params, prompt, rots)
         print(f"[calibrate] per-channel lambda in {time.time()-t0:.1f}s")
 
-    s_max = args.prompt_len + args.new_tokens + 16
-    s_max += (-s_max) % 16  # residual-window alignment
-    cache = model.init_cache(args.batch, s_max, quant=quant)
+    # headroom + round up to the policy's residual-window multiple (1 for
+    # window-free policies), derived instead of a hardcoded 16
+    window = getattr(policy, "window", 1) if policy is not None else 1
+    s_max = args.prompt_len + args.new_tokens + window
+    s_max += (-s_max) % max(window, 1)
+    cache = model.init_cache(args.batch, s_max, policy=policy, rots=rots,
+                             key=jax.random.PRNGKey(7))
 
     prefill = jax.jit(model.prefill)
-    decode = jax.jit(model.decode_step)
+    decode = jax.jit(
+        lambda p, t, c: model.decode_step(p, t, c, backend=backend)
+    )
 
     t0 = time.time()
-    logits, cache = prefill(params, rots, prompt, cache)
+    logits, cache = prefill(params, prompt, cache)
     logits = jax.block_until_ready(logits)
     t_prefill = time.time() - t0
 
@@ -120,7 +132,7 @@ def main():
     out_tokens = [np.asarray(tok)]
     t0 = time.time()
     for _ in range(args.new_tokens - 1):
-        logits, cache = decode(params, rots, tok, cache)
+        logits, cache = decode(params, tok, cache)
         tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
         out_tokens.append(np.asarray(tok))
     jax.block_until_ready(logits)
@@ -128,15 +140,18 @@ def main():
     gen = np.concatenate(out_tokens, axis=1)
 
     n_gen = args.batch * args.new_tokens
-    print(f"[serve] arch={cfg.name} quant={quant} batch={args.batch} "
+    pname = policy.name if policy is not None else "-"
+    print(f"[serve] arch={cfg.name} policy={pname} "
+          f"backend={backend.value} batch={args.batch} "
           f"prompt={args.prompt_len} new={args.new_tokens}")
     print(f"  prefill: {t_prefill*1e3:.0f} ms   decode: "
           f"{t_decode*1e3/max(args.new_tokens-1,1):.1f} ms/tok   "
           f"throughput: {n_gen/ (t_prefill+t_decode):.1f} tok/s (CPU)")
-    if quant and "attn" in cache:
-        bf16 = model.init_cache(args.batch, s_max, quant=False)
-        ratio = cache_nbytes(bf16["attn"]) / cache_nbytes(cache["attn"])
-        print(f"  persistent KV memory ratio vs bf16: {ratio:.2f}x")
+    if policy is not None and "attn" in cache:
+        state = cache["attn"]
+        print(f"  persistent KV: {policy.nbytes(state)/1e3:.1f} KB "
+              f"({policy.compression_ratio(state):.2f}x vs bf16, "
+              f"policy API)")
     sample = "".join(
         chr(c) if 32 <= c < 127 else "?" for c in gen[0].tolist()
     )

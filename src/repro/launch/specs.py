@@ -55,10 +55,13 @@ def serve_cache_shapes(model, cfg: ModelConfig, shape: ShapeConfig):
     """
     import os
 
-    quant = os.environ.get("REPRO_KV_CACHE", "int4") != "bf16"
+    env = os.environ.get("REPRO_KV_CACHE", "")
+    # env selects any registered policy by name ("bf16", "int8-per-token",
+    # ...); empty/int4 -> config default (int4-srft when cfg.kv_quant)
+    policy = None if env in ("", "int4") else env
     B, S = shape.global_batch, shape.seq_len
     if cfg.family == "audio":
         enc_len = S if shape.kind == "prefill" else WHISPER_DECODE_ENC_LEN
         return jax.eval_shape(
-            lambda: model.init_cache(B, S, enc_len, quant=quant))
-    return jax.eval_shape(lambda: model.init_cache(B, S, quant=quant))
+            lambda: model.init_cache(B, S, enc_len, policy=policy))
+    return jax.eval_shape(lambda: model.init_cache(B, S, policy=policy))

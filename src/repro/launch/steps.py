@@ -46,23 +46,26 @@ def make_train_step(model, *, lr=3e-4, clip: float = 1.0):
 def make_prefill_step(model):
     cfg = model.cfg
 
-    def prefill_step(params, rots, batch, cache):
+    def prefill_step(params, batch, cache):
         if cfg.family == "audio":
             return model.prefill(
-                params, rots, batch["frames"], batch["tokens"], cache
+                params, batch["frames"], batch["tokens"], cache
             )
         if cfg.family == "vlm":
             return model.prefill(
-                params, rots, batch["tokens"], cache,
+                params, batch["tokens"], cache,
                 patches=batch.get("patches"),
             )
-        return model.prefill(params, rots, batch["tokens"], cache)
+        return model.prefill(params, batch["tokens"], cache)
 
     return prefill_step
 
 
-def make_decode_step(model):
-    def decode_step(params, rots, token, cache):
-        return model.decode_step(params, rots, token, cache)
+def make_decode_step(model, *, backend=None):
+    """``backend`` is a cache_api.AttendBackend (static; closed over so the
+    jitted step signature stays (params, token, cache))."""
+
+    def decode_step(params, token, cache):
+        return model.decode_step(params, token, cache, backend=backend)
 
     return decode_step

@@ -1,28 +1,24 @@
 """Attention layer: GQA/MQA/MHA + RoPE + qk_norm + optional QKV bias,
-with three read paths:
+with two serving paths behind the ``KVCachePolicy`` protocol:
 
   * train/prefill  : blockwise flash attention on raw (bf16) K/V; an
                      optional ``kv_roundtrip`` hook quantize-dequantizes
                      K/V first (the paper's "hook ΔPPL" measurement mode).
-  * decode (quant) : rotated-space attention over the int4 cache
-                     (the paper's SRFTInt4Cache deployment path).
-  * decode (bf16)  : DynamicCache baseline.
+                     If a cache is given, K/V are written through its
+                     policy (quantized for int4/int8 schemes).
+  * decode         : one-token attention against the cache.  The cache
+                     state carries its policy (cache_api.CacheState), so
+                     this layer never branches on the concrete scheme;
+                     the read path is selected by a typed
+                     ``AttendBackend`` enum, not magic strings.
 """
 from __future__ import annotations
 
 from typing import Callable, Optional
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import kvcache
-from repro.core.kvcache import BF16KVCache, QuantKVCache
-from repro.core.quant_attention_ref import (
-    decode_attention_bf16,
-    decode_attention_quant,
-    decode_attention_quant_blockwise,
-)
-from repro.core.transforms import Rotation
+from repro.core.cache_api import AttendBackend, CacheState
 from repro.models import common
 from repro.models.flash import flash_attention
 
@@ -76,9 +72,7 @@ def attention_forward(
     causal: bool = True,
     kv_block: int = 1024,
     kv_roundtrip: Optional[Callable] = None,
-    cache: QuantKVCache | BF16KVCache | None = None,
-    rot_k: Rotation | None = None,
-    rot_v: Rotation | None = None,
+    cache: CacheState | None = None,
     cross_kv: jax.Array | None = None,  # encoder states for cross-attn
     return_kv: bool = False,
 ):
@@ -86,14 +80,14 @@ def attention_forward(
 
     Returns (y, new_cache) -- or (y, new_cache, (k, v)) with
     ``return_kv`` (activation collection for lambda calibration).  If
-    ``cache`` is given (prefill), K/V are written into it (quantized for
-    QuantKVCache).  ``kv_roundtrip``, if given, maps (k, v) -> (k~, v~)
-    before attention -- the paper's hook measurement (quantization error
-    applied to ALL reads).
+    ``cache`` is given (prefill), K/V are written into it via its policy.
+    ``kv_roundtrip``, if given, maps (k, v) -> (k~, v~) before attention
+    -- the paper's hook measurement (quantization error applied to ALL
+    reads).
     """
     B, S, _ = x.shape
     if positions is None:
-        positions = q_offset + jnp.arange(S)
+        positions = q_offset + jax.numpy.arange(S)
     if cross_kv is not None:
         # cross-attention: queries from x, K/V from encoder states
         q = common.dense(p["wq"], x).transpose(0, 2, 1, 3)
@@ -107,10 +101,8 @@ def attention_forward(
         k, v = kv_roundtrip(k, v)
 
     new_cache = None
-    if isinstance(cache, QuantKVCache):
-        new_cache = kvcache.prefill(cache, rot_k, rot_v, k, v)
-    elif isinstance(cache, BF16KVCache):
-        new_cache = kvcache.bf16_prefill(cache, k, v)
+    if cache is not None:
+        new_cache = cache.policy.prefill(cache, k, v)
 
     o = flash_attention(
         q, k, v, causal=causal, q_offset=q_offset, kv_block=kv_block,
@@ -125,21 +117,18 @@ def attention_decode(
     p,
     x: jax.Array,  # (B, 1, d)
     cfg,
-    cache: QuantKVCache | BF16KVCache,
+    cache: CacheState,
     *,
     position: jax.Array,  # () absolute position of this token
-    rot_k: Rotation | None = None,
-    rot_v: Rotation | None = None,
     cross: bool = False,
     kv_block: int = 512,
-    impl: str = "gather",  # gather (GSPMD-friendly) | blockwise | kernel
+    backend: AttendBackend | str | None = None,
 ):
     """One-token decode against the cache.  Returns (y, new_cache).
 
-    impl="gather" dequantizes the local cache shard in one shot (no
-    dynamic_slice across sharded seq — the multi-chip serve path);
-    "blockwise" is the flash-decode jnp mirror; "kernel" calls the Pallas
-    kernel (single-device / shard_map inner).
+    The cache state's policy owns both the append (``update``) and the
+    read (``attend``); ``backend`` picks the read path (defaults to
+    AttendBackend.GATHER, the GSPMD-friendly multi-chip serve path).
     """
     if cross:
         # cross-attention decode: read-only cache (filled at prefill)
@@ -148,28 +137,10 @@ def attention_decode(
     else:
         pos = position[None] if position.ndim == 0 else position
         q, k, v = _project_qkv(p, x, cfg, pos)
-        if isinstance(cache, QuantKVCache):
-            new_cache = kvcache.decode_update(cache, rot_k, rot_v, k, v)
-        else:
-            new_cache = kvcache.bf16_decode_update(cache, k, v)
+        new_cache = cache.policy.update(cache, k, v)
 
-    if isinstance(cache, QuantKVCache):
-        if impl == "blockwise":
-            o = decode_attention_quant_blockwise(
-                q, new_cache, rot_k, rot_v,
-                scale=cfg.head_dim ** -0.5, kv_block=kv_block,
-            )
-        elif impl == "kernel":
-            from repro.kernels.quant_attention import decode_attention_kernel
-
-            o = decode_attention_kernel(
-                q, new_cache, rot_k, rot_v, scale=cfg.head_dim ** -0.5,
-                blk=kv_block,
-            )
-        else:
-            o = decode_attention_quant(
-                q, new_cache, rot_k, rot_v, scale=cfg.head_dim ** -0.5
-            )
-    else:
-        o = decode_attention_bf16(q, new_cache, scale=cfg.head_dim ** -0.5)
+    o = new_cache.policy.attend(
+        q, new_cache, scale=cfg.head_dim ** -0.5, backend=backend,
+        kv_block=kv_block,
+    )
     return _merge_heads(p, o), new_cache

@@ -15,9 +15,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core import kvcache
+from repro.core import cache_api
+from repro.core.cache_api import AttendBackend
 from repro.core.hooks import make_roundtrip
-from repro.core.quant_attention_ref import decode_attention_quant_blockwise
 from repro.core.transforms import Rotation, make_rotation
 from repro.models import attention, common, ffn
 from repro.models.lm import Rotations, _stack_init
@@ -95,27 +95,39 @@ class EncDec:
             cross_kv=Rotations(k=stack(ks[2]), v=stack(ks[3])),
         )
 
+    def cache_policy(self, policy=None) -> "cache_api.KVCachePolicy":
+        return cache_api.policy_from_config(self.cfg, policy)
+
     def init_cache(self, batch: int, s_max_dec: int, s_enc: int, *,
-                   quant: bool = True):
+                   policy: "cache_api.KVCachePolicy | str | None" = None,
+                   rots: Optional[EncDecRotations] = None,
+                   key: Optional[jax.Array] = None):
         cfg = self.cfg
+        pol = self.cache_policy(policy)
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        k_self, k_cross = jax.random.split(key)
 
-        def mk(s):
-            def one(_):
-                if quant and cfg.kv_quant:
-                    return kvcache.init_cache(
-                        batch, cfg.n_kv_heads, s, cfg.head_dim,
-                        group=cfg.kv_group, window=cfg.kv_window,
-                    )
-                return kvcache.init_bf16_cache(
-                    batch, cfg.n_kv_heads, s, cfg.head_dim
+        def mk(s, k):
+            return jax.vmap(
+                lambda kk: pol.init_state(
+                    batch, cfg.n_kv_heads, s, cfg.head_dim, key=kk
                 )
-            return jax.vmap(one)(jnp.arange(cfg.n_layers))
+            )(jax.random.split(k, cfg.n_layers))
 
+        # cross KV has no residual-window dynamics: fill at prefill
+        window = getattr(pol, "window", 1)
+        s_cross = ((s_enc + window - 1) // window + 1) * window
+        self_c = mk(s_max_dec, k_self)
+        cross_c = mk(s_cross, k_cross)
+        if rots is not None:
+            self_c = pol.with_rotations(self_c, rots.self_kv.k,
+                                        rots.self_kv.v)
+            cross_c = pol.with_rotations(cross_c, rots.cross_kv.k,
+                                         rots.cross_kv.v)
         return {
-            "self": mk(s_max_dec),
-            # cross KV has no residual-window dynamics: fill at prefill
-            "cross": mk(((s_enc + cfg.kv_window - 1) // cfg.kv_window)
-                        * cfg.kv_window + cfg.kv_window),
+            "self": self_c,
+            "cross": cross_c,
             "pos": jnp.zeros((), jnp.int32),
         }
 
@@ -201,8 +213,8 @@ class EncDec:
         return loss, {"ce": loss, "aux": jnp.zeros(())}
 
     # --------------------------------------------------------------- serving
-    def prefill(self, params, rots: EncDecRotations, frames, tokens, cache,
-                *, kv_block: int = 1024):
+    def prefill(self, params, frames, tokens, cache, *,
+                kv_block: int = 1024):
         """Encode audio, quantize cross-KV once, prefill decoder self-KV."""
         cfg = self.cfg
         enc = self.encode(params, frames, kv_block=kv_block)
@@ -211,21 +223,19 @@ class EncDec:
         x = x + params["dec_pos"][:S].astype(common.COMPUTE_DTYPE)
 
         def body(x, inp):
-            p, c_self, c_cross, rsk, rsv, rck, rcv = inp
+            p, c_self, c_cross = inp
             h, new_self = attention.attention_forward(
                 p["self_attn"], common.layernorm(p["ln_self"], x), cfg,
-                cache=c_self, rot_k=rsk, rot_v=rsv, kv_block=kv_block,
+                cache=c_self, kv_block=kv_block,
             )
             x = x + h
-            # cross attention: compute K/V from enc once, store quantized
+            # cross attention: compute K/V from enc once, store through the
+            # cache policy (quantized for int4/int8 -- read-many bandwidth)
             xq = common.layernorm(p["ln_cross"], x)
             q = common.dense(p["cross_attn"]["wq"], xq).transpose(0, 2, 1, 3)
             k = common.dense(p["cross_attn"]["wk"], enc).transpose(0, 2, 1, 3)
             v = common.dense(p["cross_attn"]["wv"], enc).transpose(0, 2, 1, 3)
-            if isinstance(c_cross, kvcache.QuantKVCache):
-                new_cross = kvcache.prefill(c_cross, rck, rcv, k, v)
-            else:
-                new_cross = kvcache.bf16_prefill(c_cross, k, v)
+            new_cross = c_cross.policy.prefill(c_cross, k, v)
             from repro.models.flash import flash_attention
 
             o = flash_attention(
@@ -241,17 +251,15 @@ class EncDec:
 
         x, (new_self, new_cross) = common.scan(
             body, x,
-            (params["dec_layers"], cache["self"], cache["cross"],
-             rots.self_kv.k, rots.self_kv.v, rots.cross_kv.k,
-             rots.cross_kv.v),
+            (params["dec_layers"], cache["self"], cache["cross"]),
         )
         cache = dict(cache, self=new_self, cross=new_cross,
                      pos=jnp.asarray(S, jnp.int32))
         x = common.layernorm(params["ln_dec_final"], x[:, -1:])
         return common.dense(params["unembed"], x).astype(jnp.float32), cache
 
-    def decode_step(self, params, rots: EncDecRotations, token, cache, *,
-                    kv_block: int = 512):
+    def decode_step(self, params, token, cache, *, kv_block: int = 512,
+                    backend=None):
         cfg = self.cfg
         pos = cache["pos"]
         x = params["embed"]["embedding"][token].astype(common.COMPUTE_DTYPE)
@@ -260,25 +268,19 @@ class EncDec:
         )
 
         def body(x, inp):
-            p, c_self, c_cross, rsk, rsv, rck, rcv = inp
+            p, c_self, c_cross = inp
             h, new_self = attention.attention_decode(
                 p["self_attn"], common.layernorm(p["ln_self"], x), cfg,
-                c_self, position=pos, rot_k=rsk, rot_v=rsv, kv_block=kv_block,
+                c_self, position=pos, kv_block=kv_block, backend=backend,
             )
             x = x + h
-            # cross-attn decode: read-only quantized cache
+            # cross-attn decode: read-only cache, policy-dispatched
             xq = common.layernorm(p["ln_cross"], x)
             q = common.dense(p["cross_attn"]["wq"], xq).transpose(0, 2, 1, 3)
-            if isinstance(c_cross, kvcache.QuantKVCache):
-                o = decode_attention_quant_blockwise(
-                    q, c_cross, rck, rcv, scale=cfg.head_dim ** -0.5,
-                    kv_block=kv_block,
-                )
-            else:
-                from repro.core.quant_attention_ref import decode_attention_bf16
-
-                o = decode_attention_bf16(q, c_cross,
-                                          scale=cfg.head_dim ** -0.5)
+            o = c_cross.policy.attend(
+                q, c_cross, scale=cfg.head_dim ** -0.5, backend=backend,
+                kv_block=kv_block,
+            )
             B, H, Sq, hd = o.shape
             o = o.transpose(0, 2, 1, 3).reshape(B, Sq, H * hd)
             x = x + common.dense(p["cross_attn"]["wo"], o)
@@ -288,9 +290,7 @@ class EncDec:
 
         x, (new_self, _) = common.scan(
             body, x,
-            (params["dec_layers"], cache["self"], cache["cross"],
-             rots.self_kv.k, rots.self_kv.v, rots.cross_kv.k,
-             rots.cross_kv.v),
+            (params["dec_layers"], cache["self"], cache["cross"]),
         )
         cache = dict(cache, self=new_self, pos=pos + 1)
         x = common.layernorm(params["ln_dec_final"], x)

@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core import kvcache
+from repro.core import cache_api
 from repro.core.hooks import make_roundtrip
 from repro.core.transforms import Rotation, make_rotation
 from repro.models import attention, common, ffn, moe, ssm, xlstm
@@ -145,23 +145,39 @@ class LM:
         )
 
     # ----------------------------------------------------------------- cache
-    def init_cache(self, batch: int, s_max: int, *, quant: bool = True):
+    def cache_policy(self,
+                     policy: "cache_api.KVCachePolicy | str | None" = None
+                     ) -> "cache_api.KVCachePolicy":
+        """Resolve the KV-cache policy: an instance, a registry name, or
+        None (config default: int4-srft when cfg.kv_quant, else bf16)."""
+        return cache_api.policy_from_config(self.cfg, policy)
+
+    def init_cache(self, batch: int, s_max: int, *,
+                   policy: "cache_api.KVCachePolicy | str | None" = None,
+                   rots: Optional[Rotations] = None,
+                   key: Optional[jax.Array] = None):
+        """Build the serving cache.  Rotation state (for policies that
+        rotate) lives INSIDE the per-layer cache state: pass ``key`` for
+        fresh rotations or ``rots`` (e.g. lambda-calibrated) to embed
+        existing ones; prefill/decode_step then need no rotation args.
+        """
         cfg = self.cfg
         cache: dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
         n_attn = self.n_attn_layers
 
-        def mk_attn(_):
-            if quant and cfg.kv_quant:
-                return kvcache.init_cache(
-                    batch, cfg.n_kv_heads, s_max, cfg.head_dim,
-                    group=cfg.kv_group, window=cfg.kv_window,
-                )
-            return kvcache.init_bf16_cache(
-                batch, cfg.n_kv_heads, s_max, cfg.head_dim
-            )
-
         if n_attn:
-            cache["attn"] = jax.vmap(mk_attn)(jnp.arange(n_attn))
+            pol = self.cache_policy(policy)
+            keys = jax.random.split(
+                key if key is not None else jax.random.PRNGKey(0), n_attn
+            )
+            attn = jax.vmap(
+                lambda k: pol.init_state(
+                    batch, cfg.n_kv_heads, s_max, cfg.head_dim, key=k
+                )
+            )(keys)
+            if rots is not None:
+                attn = pol.with_rotations(attn, rots.k, rots.v)
+            cache["attn"] = attn
         if cfg.family == "hybrid":
             P = cfg.shared_attn_period
             n_super = cfg.n_layers // P
@@ -230,12 +246,12 @@ class LM:
             h, aux = ffn.ffn_apply(p["ffn"], h_in, cfg.ffn_activation), 0.0
         return x + h, aux
 
-    def _block_prefill(self, p, x, cache, rot_k, rot_v, *, kv_block=1024):
+    def _block_prefill(self, p, x, cache, *, kv_block=1024):
         cfg = self.cfg
         h, new_cache = attention.attention_forward(
             p["attn"],
             common.rmsnorm(p["ln_attn"], x, eps=cfg.norm_eps),
-            cfg, cache=cache, rot_k=rot_k, rot_v=rot_v, kv_block=kv_block,
+            cfg, cache=cache, kv_block=kv_block,
         )
         x = x + h
         h_in = common.rmsnorm(p["ln_ffn"], x, eps=cfg.norm_eps)
@@ -245,14 +261,14 @@ class LM:
             h = ffn.ffn_apply(p["ffn"], h_in, cfg.ffn_activation)
         return x + h, new_cache
 
-    def _block_decode(self, p, x, cache, rot_k, rot_v, *, position,
-                      kv_block=512):
+    def _block_decode(self, p, x, cache, *, position, kv_block=512,
+                      backend=None):
         cfg = self.cfg
         h, new_cache = attention.attention_decode(
             p["attn"],
             common.rmsnorm(p["ln_attn"], x, eps=cfg.norm_eps),
-            cfg, cache, position=position, rot_k=rot_k, rot_v=rot_v,
-            kv_block=kv_block,
+            cfg, cache, position=position, kv_block=kv_block,
+            backend=backend,
         )
         x = x + h
         h_in = common.rmsnorm(p["ln_ffn"], x, eps=cfg.norm_eps)
@@ -437,38 +453,30 @@ class LM:
         return total, {"ce": loss, "aux": aux}
 
     # --------------------------------------------------------------- serving
-    def prefill(self, params, rots: Rotations | None, tokens, cache, *,
+    def prefill(self, params, tokens, cache, *,
                 patches=None, kv_block: int = 1024):
-        """Process the prompt, fill caches.  Returns (last_logits, cache)."""
+        """Process the prompt, fill caches.  Returns (last_logits, cache).
+
+        The cache (from :meth:`init_cache`) carries its policy and any
+        rotation state; there is one code path for every cache scheme.
+        """
         cfg = self.cfg
         x = self._embed(params, tokens, patches)
         S = x.shape[1]
 
         if cfg.family in ("dense", "moe", "vlm"):
             def body(x, inp):
-                p, c, rk, rv = inp
-                y, new_c = self._block_prefill(p, x, c, rk, rv,
-                                               kv_block=kv_block)
+                p, c = inp
+                y, new_c = self._block_prefill(p, x, c, kv_block=kv_block)
                 return y, new_c
 
-            if rots is None:
-                # bf16 cache path: rotations unused
-                def body_bf16(x, inp):
-                    p, c = inp
-                    y, new_c = self._block_prefill(p, x, c, None, None,
-                                                   kv_block=kv_block)
-                    return y, new_c
-                x, new_attn = common.scan(
-                    body_bf16, x, (params["blocks"], cache["attn"])
-                )
-            else:
-                x, new_attn = common.scan(
-                    body, x, (params["blocks"], cache["attn"], rots.k, rots.v)
-                )
+            x, new_attn = common.scan(
+                body, x, (params["blocks"], cache["attn"])
+            )
             cache = dict(cache, attn=new_attn, pos=jnp.asarray(S, jnp.int32))
 
         elif cfg.family == "hybrid":
-            x, cache = self._hybrid_prefill(params, x, cache, rots, kv_block)
+            x, cache = self._hybrid_prefill(params, x, cache, kv_block)
             cache["pos"] = jnp.asarray(S, jnp.int32)
         elif cfg.family == "ssm":
             x, cache = self._xlstm_prefill(params, x, cache)
@@ -477,7 +485,7 @@ class LM:
         logits = self._unembed(params, x[:, -1:])
         return logits, cache
 
-    def _hybrid_prefill(self, params, x, cache, rots, kv_block):
+    def _hybrid_prefill(self, params, x, cache, kv_block):
         cfg = self.cfg
 
         def mamba_body(carry, inp):
@@ -490,17 +498,16 @@ class LM:
             return x + y, new_st
 
         def super_body(x, inp):
-            mparams, mstates, attn_c, rk, rv = inp
+            mparams, mstates, attn_c = inp
             x, new_mstates = common.scan(mamba_body, x, (mparams, mstates))
             y, new_attn_c = self._block_prefill(
-                params["shared_attn"], x, attn_c, rk, rv, kv_block=kv_block
+                params["shared_attn"], x, attn_c, kv_block=kv_block
             )
             return y, (new_mstates, new_attn_c)
 
         x, (new_ssm, new_attn) = common.scan(
             super_body, x,
-            (params["mamba_super"], cache["ssm_super"], cache["attn"],
-             rots.k, rots.v),
+            (params["mamba_super"], cache["ssm_super"], cache["attn"]),
         )
         cache = dict(cache, ssm_super=new_ssm, attn=new_attn)
         if "mamba_rem" in params:
@@ -538,34 +545,28 @@ class LM:
         )
         return x, dict(cache, mlstm=new_m, slstm=new_s)
 
-    def decode_step(self, params, rots: Rotations | None, token, cache, *,
-                    kv_block: int = 512):
-        """token (B, 1) int32 -> (logits (B,1,V), new cache).  O(1)/step."""
+    def decode_step(self, params, token, cache, *, kv_block: int = 512,
+                    backend=None):
+        """token (B, 1) int32 -> (logits (B,1,V), new cache).  O(1)/step.
+
+        ``backend`` (cache_api.AttendBackend or its string value) selects
+        the attention read path; None uses the policy default (gather).
+        """
         cfg = self.cfg
         pos = cache["pos"]
         x = self._embed(params, token)
 
         if cfg.family in ("dense", "moe", "vlm"):
-            if rots is not None:
-                def body(x, inp):
-                    p, c, rk, rv = inp
-                    y, new_c = self._block_decode(
-                        p, x, c, rk, rv, position=pos, kv_block=kv_block
-                    )
-                    return y, new_c
-                x, new_attn = common.scan(
-                    body, x, (params["blocks"], cache["attn"], rots.k, rots.v)
+            def body(x, inp):
+                p, c = inp
+                y, new_c = self._block_decode(
+                    p, x, c, position=pos, kv_block=kv_block, backend=backend
                 )
-            else:
-                def body(x, inp):
-                    p, c = inp
-                    y, new_c = self._block_decode(
-                        p, x, c, None, None, position=pos, kv_block=kv_block
-                    )
-                    return y, new_c
-                x, new_attn = common.scan(
-                    body, x, (params["blocks"], cache["attn"])
-                )
+                return y, new_c
+
+            x, new_attn = common.scan(
+                body, x, (params["blocks"], cache["attn"])
+            )
             cache = dict(cache, attn=new_attn, pos=pos + 1)
 
         elif cfg.family == "hybrid":
@@ -578,18 +579,17 @@ class LM:
                 return x + y, new_st
 
             def super_body(x, inp):
-                mparams, mstates, attn_c, rk, rv = inp
+                mparams, mstates, attn_c = inp
                 x, new_m = common.scan(mamba_body, x, (mparams, mstates))
                 y, new_c = self._block_decode(
-                    params["shared_attn"], x, attn_c, rk, rv, position=pos,
-                    kv_block=kv_block,
+                    params["shared_attn"], x, attn_c, position=pos,
+                    kv_block=kv_block, backend=backend,
                 )
                 return y, (new_m, new_c)
 
             x, (new_ssm, new_attn) = common.scan(
                 super_body, x,
-                (params["mamba_super"], cache["ssm_super"], cache["attn"],
-                 rots.k, rots.v),
+                (params["mamba_super"], cache["ssm_super"], cache["attn"]),
             )
             cache = dict(cache, ssm_super=new_ssm, attn=new_attn, pos=pos + 1)
             if "mamba_rem" in params:

@@ -1,0 +1,42 @@
+"""Fallback for environments without ``hypothesis``.
+
+Property-based tests import ``given``/``settings``/``st`` through the
+``try: import hypothesis`` guard in each test module; when the package is
+missing, these stand-ins keep the module importable (the seed suite
+aborted collection on the bare import) and turn each property test into
+an explicit skip via ``pytest.importorskip`` -- while every non-property
+test in the same file still runs.
+"""
+import pytest
+
+
+class _StrategyStub:
+    """``st.integers(...)`` etc. -- accepted and ignored."""
+
+    def __getattr__(self, name):
+        def strategy(*args, **kwargs):
+            return None
+
+        return strategy
+
+
+st = _StrategyStub()
+
+
+def settings(*args, **kwargs):
+    def deco(fn):
+        return fn
+
+    return deco
+
+
+def given(*args, **kwargs):
+    def deco(fn):
+        def skipper(*a, **k):
+            pytest.importorskip("hypothesis")
+
+        skipper.__name__ = fn.__name__
+        skipper.__doc__ = fn.__doc__
+        return skipper
+
+    return deco

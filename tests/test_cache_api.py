@@ -1,0 +1,218 @@
+"""KVCachePolicy protocol + registry (core/cache_api.py, DESIGN.md §6):
+registry semantics, polymorphic dispatch with no model-code changes,
+attend-backend parity on the int4 policy, and byte accounting."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cache_api
+from repro.core.cache_api import (
+    AttendBackend,
+    CacheState,
+    KVCachePolicy,
+    available_policies,
+    get_policy,
+    register_policy,
+)
+
+D, G, W = 64, 16, 16
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_has_builtin_policies():
+    names = available_policies()
+    for expected in ("bf16", "int4-srft", "int8-per-token"):
+        assert expected in names, names
+
+
+def test_get_policy_filters_hyperparams():
+    # a shared config superset must instantiate every scheme
+    for name in available_policies():
+        pol = get_policy(name, group=G, window=W, rotation="srft")
+        assert isinstance(pol, KVCachePolicy)
+        assert pol.name == name
+    p4 = get_policy("int4-srft", group=G, window=W)
+    assert (p4.group, p4.window) == (G, W)
+
+
+def test_unknown_policy_and_backend_raise():
+    with pytest.raises(KeyError, match="unknown cache policy"):
+        get_policy("fp7-wishful")
+    with pytest.raises(ValueError, match="unknown attend backend"):
+        AttendBackend.parse("speculative")
+    assert AttendBackend.parse(None) is AttendBackend.GATHER
+    assert AttendBackend.parse("kernel") is AttendBackend.KERNEL
+    assert AttendBackend.parse(AttendBackend.BLOCKWISE) \
+        is AttendBackend.BLOCKWISE
+
+
+def test_duplicate_registration_rejected():
+    with pytest.raises(ValueError, match="already registered"):
+
+        @register_policy("bf16")
+        @dataclasses.dataclass(frozen=True)
+        class Dup:  # pragma: no cover - must not register
+            pass
+
+
+# ---------------------------------------------------------------------------
+# state plumbing
+# ---------------------------------------------------------------------------
+
+def _state(name, **kw):
+    pol = get_policy(name, group=G, window=W, **kw)
+    return pol, pol.init_state(2, 2, 64, D, key=jax.random.PRNGKey(0))
+
+
+@pytest.mark.parametrize("name", ["bf16", "int4-srft", "int8-per-token"])
+def test_state_is_self_describing_pytree(name):
+    """CacheState threads through jit/tree ops; the policy rides in the
+    treedef so round-trips preserve dispatch."""
+    pol, state = _state(name)
+    leaves, treedef = jax.tree_util.tree_flatten(state)
+    rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert rebuilt.policy == pol
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, 2, 8, D))
+    state2 = jax.jit(lambda s, k_: s.policy.prefill(s, k_, k_))(state, k)
+    assert int(state2.length) == 8
+    assert int(state.length) == 0  # functional update
+
+
+@pytest.mark.parametrize("name", ["bf16", "int4-srft", "int8-per-token"])
+def test_prefill_then_update_then_attend(name):
+    pol, state = _state(name)
+    k = jax.random.normal(jax.random.PRNGKey(2), (2, 2, 20, D))
+    v = jax.random.normal(jax.random.PRNGKey(3), (2, 2, 20, D))
+    state = pol.prefill(state, k, v)
+    k1 = jax.random.normal(jax.random.PRNGKey(4), (2, 2, 1, D))
+    state = pol.update(state, k1, k1)
+    assert int(state.length) == 21
+    q = jax.random.normal(jax.random.PRNGKey(5), (2, 4, 1, D))
+    out = pol.attend(q, state)
+    assert out.shape == (2, 4, 1, D)
+    assert not bool(jnp.any(jnp.isnan(out)))
+
+
+def test_int8_tracks_bf16_closely():
+    """8-bit per-token is near-lossless (paper Table 5): attention output
+    must match the bf16 policy tightly on identical K/V."""
+    pb, sb = _state("bf16")
+    p8, s8 = _state("int8-per-token")
+    k = jax.random.normal(jax.random.PRNGKey(6), (2, 2, 24, D))
+    v = jax.random.normal(jax.random.PRNGKey(7), (2, 2, 24, D))
+    sb = pb.prefill(sb, k, v)
+    s8 = p8.prefill(s8, k, v)
+    q = jax.random.normal(jax.random.PRNGKey(8), (2, 4, 1, D))
+    np.testing.assert_allclose(
+        np.asarray(pb.attend(q, sb)), np.asarray(p8.attend(q, s8)),
+        atol=2e-2,
+    )
+
+
+def test_int8_unsupported_backend_raises():
+    p8, s8 = _state("int8-per-token")
+    k = jax.random.normal(jax.random.PRNGKey(9), (2, 2, 8, D))
+    s8 = p8.prefill(s8, k, k)
+    q = jax.random.normal(jax.random.PRNGKey(10), (2, 4, 1, D))
+    with pytest.raises(NotImplementedError, match="GATHER"):
+        p8.attend(q, s8, backend=AttendBackend.KERNEL)
+
+
+# ---------------------------------------------------------------------------
+# int4 backend parity (the pluggable read paths)
+# ---------------------------------------------------------------------------
+
+def test_int4_backend_parity_same_state():
+    """All three AttendBackends read the SAME state and must agree
+    (gather is the oracle; blockwise mirrors the kernel tiling)."""
+    pol, state = _state("int4-srft")
+    k = jax.random.normal(jax.random.PRNGKey(11), (2, 2, 40, D))
+    v = jax.random.normal(jax.random.PRNGKey(12), (2, 2, 40, D))
+    state = pol.prefill(state, k, v)
+    q = jax.random.normal(jax.random.PRNGKey(13), (2, 4, 1, D))
+    outs = {
+        b: np.asarray(pol.attend(q, state, backend=b, kv_block=16))
+        for b in AttendBackend
+    }
+    np.testing.assert_allclose(
+        outs[AttendBackend.GATHER], outs[AttendBackend.BLOCKWISE], atol=1e-5
+    )
+    np.testing.assert_allclose(
+        outs[AttendBackend.GATHER], outs[AttendBackend.KERNEL], atol=1e-4
+    )
+
+
+def test_int4_rotations_travel_with_state():
+    """with_rotations embeds calibrated rotations; attend uses them (a
+    different lambda must change the stored codes' dequantization)."""
+    from repro.core.transforms import Rotation, make_rotation
+
+    pol, state = _state("int4-srft")
+    rk = make_rotation("srft", jax.random.PRNGKey(14), D)
+    lam = jnp.exp(0.5 * jax.random.normal(jax.random.PRNGKey(15), (D,)))
+    rk_cal = Rotation(rk.matrix, lam, rk.signs, rk.kind)
+    state_cal = pol.with_rotations(state, rk_cal, rk_cal)
+    assert np.allclose(np.asarray(state_cal.data.rot_k.lam), np.asarray(lam))
+    k = jax.random.normal(jax.random.PRNGKey(16), (2, 2, 20, D))
+    a = pol.prefill(state_cal, k, k)
+    b = pol.prefill(pol.with_rotations(state, rk, rk), k, k)
+    assert not np.array_equal(
+        np.asarray(a.data.kv.k_scales), np.asarray(b.data.kv.k_scales)
+    )
+
+
+# ---------------------------------------------------------------------------
+# byte accounting (serving and benchmarks share this method)
+# ---------------------------------------------------------------------------
+
+def test_nbytes_and_compression_ratio():
+    pb, sb = _state("bf16")
+    p4, s4 = _state("int4-srft")
+    p8, s8 = _state("int8-per-token")
+    bf16 = pb.nbytes(sb)
+    assert bf16 == 2 * 2 * 2 * 2 * 64 * D  # K+V * B*H*S*d * 2B
+    # int4: persistent < total (residual window excluded), ~3.2x at g=16
+    assert p4.nbytes(s4) < p4.nbytes(s4, persistent_only=False)
+    assert p4.compression_ratio(s4) == pytest.approx(
+        bf16 / p4.nbytes(s4)
+    )
+    assert 2.5 < p4.compression_ratio(s4) < 3.3
+    assert 1.5 < p8.compression_ratio(s8) < 2.0
+    assert pb.compression_ratio(sb) == 1.0
+    # CacheState convenience delegates to the policy
+    assert s4.nbytes() == p4.nbytes(s4)
+
+
+# ---------------------------------------------------------------------------
+# third scheme end-to-end: no model-code changes
+# ---------------------------------------------------------------------------
+
+def test_third_policy_decodes_through_model():
+    """The acceptance bar: a scheme beyond bf16/int4-srft serves through
+    the unchanged LM (registry name -> init_cache -> prefill -> decode)."""
+    from repro.configs.paper_models import SMOL_D64
+    from repro.models import build_model
+
+    model = build_model(SMOL_D64)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 24), 0,
+                              SMOL_D64.vocab_size)
+    ref_cache = model.init_cache(2, 48, policy="bf16")
+    cache = model.init_cache(2, 48, policy="int8-per-token")
+    lr, ref_cache = model.prefill(params, toks, ref_cache)
+    l8, cache = model.prefill(params, toks, cache)
+    for _ in range(4):
+        tok = jnp.argmax(lr[:, -1], -1)[:, None].astype(jnp.int32)
+        lr, ref_cache = model.decode_step(params, tok, ref_cache)
+        l8, cache = model.decode_step(params, tok, cache)
+    assert int(cache["pos"]) == 28
+    # near-lossless: int8 decode logits hug the bf16 ones
+    np.testing.assert_allclose(
+        np.asarray(l8), np.asarray(lr), atol=0.3, rtol=0.1
+    )

@@ -111,6 +111,86 @@ def test_quant_cache_memory_ratio():
     assert 2.9 < ratio < 3.3, ratio
 
 
+def test_flush_boundary_packed_len_invariant():
+    """The W-th decode_update (length % W == W-1 going in) flushes the
+    whole residual window: packed_len jumps by exactly W and n_residual
+    drops to 0 (the flushed copies are masked out, §7.2 invariant)."""
+    rk, rv = _rots()
+    cache = kvcache.init_cache(1, 1, 64, D, group=G, window=W)
+    k = jax.random.normal(jax.random.PRNGKey(20), (1, 1, W - 1, D))
+    cache = kvcache.prefill(cache, rk, rv, k, k)
+    assert int(cache.length) == W - 1
+    assert int(kvcache.packed_len(cache)) == 0  # all residual
+    # this token lands in slot W-1 and must trigger the flush
+    kn = jax.random.normal(jax.random.PRNGKey(21), (1, 1, 1, D))
+    cache = kvcache.decode_update(cache, rk, rv, kn, kn)
+    assert int(cache.length) == W
+    assert int(kvcache.packed_len(cache)) == W
+    assert int(cache.length) % cache.window == 0  # n_residual == 0
+    # packed slab equals quantizing the full rotated window directly
+    yk = jnp.concatenate([rk.forward(k), rk.forward(kn)], axis=-2)
+    kp_ref, ks_ref = kvcache._quantize_rotated(yk, G)
+    np.testing.assert_array_equal(
+        np.asarray(cache.k_packed[:, :, :W]), np.asarray(kp_ref)
+    )
+    np.testing.assert_allclose(
+        np.asarray(cache.k_scales[:, :, :W]), np.asarray(ks_ref), rtol=1e-6
+    )
+
+
+def test_exact_multiple_prefill_packs_everything():
+    """Prefill of S == k*W tokens leaves n_residual == 0: every token is
+    read from packed storage, and attention right after matches a cache
+    that reached the same length through the decode path."""
+    rk, rv = _rots()
+    S = 3 * W
+    k = jax.random.normal(jax.random.PRNGKey(22), (1, 1, S, D))
+    v = jax.random.normal(jax.random.PRNGKey(23), (1, 1, S, D))
+    c1 = kvcache.prefill(
+        kvcache.init_cache(1, 1, 64, D, group=G, window=W), rk, rv, k, v
+    )
+    assert int(c1.length) == S
+    assert int(kvcache.packed_len(c1)) == S  # exact multiple: no residual
+    c2 = kvcache.init_cache(1, 1, 64, D, group=G, window=W)
+    for i in range(S):
+        c2 = kvcache.decode_update(
+            c2, rk, rv, k[:, :, i : i + 1], v[:, :, i : i + 1]
+        )
+    assert int(kvcache.packed_len(c2)) == S
+    q = jax.random.normal(jax.random.PRNGKey(24), (1, 1, 1, D))
+    o1 = decode_attention_quant(q, c1, rk, rv)
+    o2 = decode_attention_quant(q, c2, rk, rv)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-6)
+
+
+def test_attend_backend_parity_across_flush():
+    """gather / blockwise / kernel agree on the SAME cache state at the
+    flush step (residual just emptied) and right after it (one token in
+    the fresh window)."""
+    from repro.kernels.quant_attention import decode_attention_kernel
+
+    rk, rv = _rots()
+    cache = kvcache.init_cache(1, 2, 64, D, group=G, window=W)
+    k = jax.random.normal(jax.random.PRNGKey(25), (1, 2, 2 * W - 1, D))
+    cache = kvcache.prefill(cache, rk, rv, k, k)  # residual has W-1 tokens
+    q = jax.random.normal(jax.random.PRNGKey(26), (1, 4, 1, D))
+    for step in range(2):  # step 0 fills slot W-1 -> flush; step 1 appends
+        kn = jax.random.normal(jax.random.PRNGKey(30 + step), (1, 2, 1, D))
+        cache = kvcache.decode_update(cache, rk, rv, kn, kn)
+        o_g = decode_attention_quant(q, cache, rk, rv)
+        o_b = decode_attention_quant_blockwise(q, cache, rk, rv, kv_block=16)
+        o_k = decode_attention_kernel(q, cache, rk, rv, blk=16)
+        np.testing.assert_allclose(
+            np.asarray(o_g), np.asarray(o_b), atol=1e-5,
+            err_msg=f"blockwise diverged at step {step}",
+        )
+        np.testing.assert_allclose(
+            np.asarray(o_g), np.asarray(o_k), atol=1e-4,
+            err_msg=f"kernel diverged at step {step}",
+        )
+    assert int(cache.length) == 2 * W + 1
+
+
 def test_eight_bit_path_near_lossless():
     """At 8-bit the rotated round-trip is ~LSB accurate (paper: 6/8-bit
     lossless)."""

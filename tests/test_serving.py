@@ -27,15 +27,15 @@ def test_bf16_cache_decode_matches_forward():
     model, params, toks = _setup(cfg)
     logits_tf, _ = model.forward(params, toks, remat=False)
 
-    cache = model.init_cache(B, S + 8, quant=False)
-    lp, cache = model.prefill(params, None, toks[:, :S], cache)
+    cache = model.init_cache(B, S + 8, policy="bf16")
+    lp, cache = model.prefill(params, toks[:, :S], cache)
     np.testing.assert_allclose(
         np.asarray(lp[:, 0]), np.asarray(logits_tf[:, S - 1]),
         atol=0.15, rtol=0.05,
     )
     # decode the next two ground-truth tokens and compare logits
     for i in range(2):
-        ld, cache = model.decode_step(params, None, toks[:, S + i : S + i + 1],
+        ld, cache = model.decode_step(params, toks[:, S + i : S + i + 1],
                                       cache)
         np.testing.assert_allclose(
             np.asarray(ld[:, 0]), np.asarray(logits_tf[:, S + i]),
@@ -49,46 +49,43 @@ def test_int4_cache_decode_tracks_forward():
     cfg = SMOL_D64
     model, params, toks = _setup(cfg)
     logits_tf, _ = model.forward(params, toks, remat=False)
-    rots = model.init_rotations(jax.random.PRNGKey(3))
-    cache = model.init_cache(B, S + 8, quant=True)
-    lp, cache = model.prefill(params, rots, toks[:, :S], cache)
+    cache = model.init_cache(B, S + 8, policy="int4-srft",
+                             key=jax.random.PRNGKey(3))
+    lp, cache = model.prefill(params, toks[:, :S], cache)
     # top-1 agreement (the argmax token) rather than exact logits
     agree = (
         np.argmax(np.asarray(lp[:, 0]), -1)
         == np.argmax(np.asarray(logits_tf[:, S - 1]), -1)
     ).mean()
     assert agree >= 0.5, agree
-    ld, _ = model.decode_step(params, rots, toks[:, S : S + 1], cache)
+    ld, _ = model.decode_step(params, toks[:, S : S + 1], cache)
     assert not bool(jnp.any(jnp.isnan(ld)))
 
 
-def test_decode_impl_equivalence_through_model():
-    """gather vs blockwise vs Pallas-kernel decode give the same output
-    through the full attention layer."""
-    from repro.core import kvcache
-    from repro.core.transforms import make_rotation
+def test_decode_backend_equivalence_through_model():
+    """GATHER vs BLOCKWISE vs KERNEL backends give the same output
+    through the full attention layer (typed AttendBackend enum)."""
+    from repro.core.cache_api import AttendBackend, get_policy
     from repro.models import attention
 
     cfg = SMOL_D64
     d = cfg.head_dim
     p = attention.attention_init(jax.random.PRNGKey(0), cfg)
-    rk = make_rotation("srft", jax.random.PRNGKey(1), d)
-    rv = make_rotation("srft", jax.random.PRNGKey(2), d)
-    cache = kvcache.init_cache(B, cfg.n_kv_heads, 64, d, group=cfg.kv_group,
-                               window=16)
+    pol = get_policy("int4-srft", group=cfg.kv_group, window=16)
+    cache = pol.init_state(B, cfg.n_kv_heads, 64, d,
+                           key=jax.random.PRNGKey(1))
     k = jax.random.normal(jax.random.PRNGKey(3), (B, cfg.n_kv_heads, 40, d))
-    cache = kvcache.prefill(cache, rk, rv, k, k)
+    cache = pol.prefill(cache, k, k)
     x = jax.random.normal(jax.random.PRNGKey(4), (B, 1, cfg.d_model)).astype(
         jnp.bfloat16
     )
     pos = jnp.asarray(40)
     outs = {}
-    for impl in ["gather", "blockwise", "kernel"]:
+    for backend in AttendBackend:
         y, _ = attention.attention_decode(
-            p, x, cfg, cache, position=pos, rot_k=rk, rot_v=rv,
-            impl=impl, kv_block=32,
+            p, x, cfg, cache, position=pos, backend=backend, kv_block=32,
         )
-        outs[impl] = np.asarray(y.astype(jnp.float32))
+        outs[backend.value] = np.asarray(y.astype(jnp.float32))
     np.testing.assert_allclose(outs["gather"], outs["blockwise"], atol=2e-2)
     np.testing.assert_allclose(outs["gather"], outs["kernel"], atol=2e-2)
 
@@ -98,19 +95,18 @@ def test_exotic_family_serving(arch):
     cfg = reduced(get_config(arch))
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    rots = model.init_rotations(jax.random.PRNGKey(1))
     toks = jax.random.randint(jax.random.PRNGKey(2), (B, 32), 0,
                               cfg.vocab_size)
     if cfg.family == "audio":
         frames = jax.random.normal(jax.random.PRNGKey(3),
                                    (B, 32, cfg.d_model))
-        cache = model.init_cache(B, 48, 32)
-        logits, cache = model.prefill(params, rots, frames, toks, cache)
+        cache = model.init_cache(B, 48, 32, key=jax.random.PRNGKey(1))
+        logits, cache = model.prefill(params, frames, toks, cache)
     else:
-        cache = model.init_cache(B, 48)
-        logits, cache = model.prefill(params, rots, toks, cache)
+        cache = model.init_cache(B, 48, key=jax.random.PRNGKey(1))
+        logits, cache = model.prefill(params, toks, cache)
     for _ in range(3):
         tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
-        logits, cache = model.decode_step(params, rots, tok, cache)
+        logits, cache = model.decode_step(params, tok, cache)
     assert not bool(jnp.any(jnp.isnan(logits)))
     assert int(cache["pos"]) == 35

@@ -49,19 +49,18 @@ def test_generation_with_int4_cache_matches_bf16(trained_model):
     cfg, model, params, _ = trained_model
     it = DataIterator(SyntheticCorpus(1), batch_per_shard=2, seq_len=48)
     prompt = jnp.asarray(it.next()["tokens"])[:, :40]
-    rots = model.init_rotations(jax.random.PRNGKey(7))
-
-    cq = model.init_cache(2, 64, quant=True)
-    cb = model.init_cache(2, 64, quant=False)
-    lq, cq = model.prefill(params, rots, prompt, cq)
-    lb, cb = model.prefill(params, None, prompt, cb)
+    cq = model.init_cache(2, 64, policy="int4-srft",
+                          key=jax.random.PRNGKey(7))
+    cb = model.init_cache(2, 64, policy="bf16")
+    lq, cq = model.prefill(params, prompt, cq)
+    lb, cb = model.prefill(params, prompt, cb)
 
     max_logit_err = 0.0
     n_confident, n_confident_agree = 0, 0
     tok = jnp.argmax(lb[:, -1], -1)[:, None].astype(jnp.int32)
     for _ in range(16):
-        lq, cq = model.decode_step(params, rots, tok, cq)
-        lb, cb = model.decode_step(params, None, tok, cb)
+        lq, cq = model.decode_step(params, tok, cq)
+        lb, cb = model.decode_step(params, tok, cb)
         zq = jax.nn.log_softmax(lq[:, -1].astype(jnp.float32), -1)
         zb = jax.nn.log_softmax(lb[:, -1].astype(jnp.float32), -1)
         max_logit_err = max(max_logit_err, float(jnp.abs(zq - zb).max()))
