@@ -1,29 +1,52 @@
 """Paper Table 8 / Fig 1 (the central claim): int4 KV decode vs fp16.
 
-The paper measures model.generate wall-clock on Apple M1 unified memory.
-This container has no TPU, so the claim is validated the way DESIGN.md §1
-states it: decode is HBM-bandwidth-bound, so per-step time is dominated by
+Two components, recorded together in ``BENCH_decode.json`` at the repo
+root (the per-PR perf trajectory; CI uploads it as an artifact):
 
-    t_step ~ (param_bytes + kv_bytes(prefix)) / HBM_bw + kernel_overhead
+1. ROOFLINE (model): the paper measures model.generate wall-clock on
+   Apple M1 unified memory.  This container has no TPU, so the claim is
+   validated the way DESIGN.md §1 states it: decode is HBM-bandwidth-
+   bound, so per-step time is dominated by
 
-and int4 wins iff kv_bytes shrinks by more than the added kernel cost.
-Both sides are computed from EXACT byte/FLOP counts of our cache layouts
-(the same arithmetic the dry-run validates against compiled HLO), per
-prefix length in {256..4096} (Table 8) and per assigned arch at 32K.
+       t_step ~ (param_bytes + kv_bytes(prefix)) / HBM_bw + kernel_overhead
 
-A second, measured, component: CPU wall-clock of one decode_step on the
-trained d=128 stand-in with quant vs bf16 cache -- ONLY as evidence that
-the quant path adds no superlinear work (O(1) updates), not as a latency
-claim.
+   and int4 wins iff kv_bytes shrinks by more than the added kernel
+   cost.  Both sides are computed from EXACT byte/FLOP counts of our
+   cache layouts, per prefix length in {256..4096} (Table 8) and at 32K.
+
+2. MEASURED (fused vs per-step): wall-clock of the fused generation
+   engine (launch/engine.py: ONE dispatch for the whole decode loop,
+   cache donated) against the conventional ``jit(decode_step)``-per-
+   token Python loop, across policies x supported backends x prefix
+   lengths, 64 decoded tokens each (the ISSUE-2 acceptance workload).
+   CPU-relative numbers: what they demonstrate is the dispatch/copy
+   overhead the fusion removes, not absolute latency.
+
+Usage:
+    PYTHONPATH=src python benchmarks/e2e_decode.py [--smoke] [--quick]
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
+import sys
+import time
+
+if __package__ in (None, ""):  # `python benchmarks/e2e_decode.py`
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import (fmt_table, save_record, time_fn,
                                trained_standin)
 from repro.launch.mesh import HW
+
+ROOT_RECORD = os.path.join(
+    os.path.dirname(__file__), "..", "BENCH_decode.json"
+)
 
 
 def decode_step_model(*, n_layers: int, n_kv: int, d: int, batch: int,
@@ -60,7 +83,7 @@ MODELS = [
 ]
 
 
-def run(*, quick: bool = False) -> dict:
+def roofline_rows() -> list[dict]:
     rows = []
     for name, kw in MODELS:
         for prefix in (256, 1024, 2048, 4096, 32768):
@@ -72,55 +95,193 @@ def run(*, quick: bool = False) -> dict:
                 "delta_pct": round(r["delta_pct"], 2),
                 "kv_ratio": round(r["kv_ratio"], 2),
             })
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Measured: fused engine vs per-step loop (the ISSUE-2 workload)
+# ---------------------------------------------------------------------------
+
+def _copy_tree(tree):
+    return jax.tree.map(jnp.copy, tree)
+
+
+def _time_with_fresh_cache(cache0, call, iters: int) -> float:
+    """Best-of-N seconds of call(cache); a fresh buffer copy per call so
+    donation never consumes the template (copies made outside the timed
+    region)."""
+    ts = []
+    for _ in range(iters + 1):  # first call compiles; dropped below
+        c = _copy_tree(cache0)
+        jax.block_until_ready(c)
+        t0 = time.perf_counter()
+        jax.block_until_ready(call(c))
+        ts.append(time.perf_counter() - t0)
+    return float(min(ts[1:]))
+
+
+def measure_fused_vs_per_step(*, smoke: bool) -> list[dict]:
+    """ms/tok of fused scan decode vs jit(decode_step)-per-token, across
+    policies x supported backends x prefix lengths, 64 new tokens."""
+    from repro.core.cache_api import AttendBackend, available_policies
+    from repro.configs.paper_models import PAPER_MODELS
+    from repro.launch.engine import Engine
+    from repro.models import build_model
+
+    cfg = PAPER_MODELS["smol-d64"]
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    n_new = 64
+    batch = 1
+    iters = 3
+    prefixes = (16, 48) if smoke else (64, 256)
+    kv_block = 64
+    backends = {AttendBackend.GATHER, AttendBackend.BLOCKWISE}
+    if not smoke:  # interpret-mode Pallas: slow to compile, full runs only
+        backends.add(AttendBackend.KERNEL)
+
+    rows = []
+    for pname in available_policies():
+        pol = model.cache_policy(pname)
+        for backend in pol.supported_backends:
+            if backend not in backends:
+                continue
+            engine = Engine(model, backend=backend, kv_block=kv_block)
+            for prefix in prefixes:
+                window = getattr(pol, "window", 1)
+                s_max = prefix + n_new + window
+                s_max += (-s_max) % kv_block  # kernel path: S % blk == 0
+                prompt = jax.random.randint(
+                    jax.random.PRNGKey(1), (batch, prefix), 0,
+                    cfg.vocab_size,
+                )
+                cache = model.init_cache(batch, s_max, policy=pol,
+                                         key=jax.random.PRNGKey(7))
+                logits, cache0 = jax.jit(model.prefill)(params, prompt,
+                                                        cache)
+                tok0 = jnp.argmax(logits[:, -1], -1)[:, None].astype(
+                    jnp.int32
+                )
+
+                step = jax.jit(
+                    lambda p, t, c: model.decode_step(
+                        p, t, c, backend=backend, kv_block=kv_block
+                    )
+                )
+
+                def per_step(c):
+                    tok = tok0
+                    for _ in range(n_new):
+                        logits, c = step(params, tok, c)
+                        # host-side argmax each token, as the pre-engine
+                        # serving loop did (the round-trip being measured)
+                        tok = jnp.argmax(logits[:, -1], -1)[:, None] \
+                            .astype(jnp.int32)
+                    return tok
+
+                def fused(c):
+                    toks, _ = engine.decode(params, tok0, c, n_new)
+                    return toks
+
+                t_loop = _time_with_fresh_cache(cache0, per_step, iters)
+                t_fused = _time_with_fresh_cache(cache0, fused, iters)
+                rows.append({
+                    "policy": pname, "backend": backend.value,
+                    "prefix": prefix, "n_new": n_new,
+                    "per_step_ms_tok": round(t_loop * 1e3 / n_new, 3),
+                    "fused_ms_tok": round(t_fused * 1e3 / n_new, 3),
+                    "speedup": round(t_loop / t_fused, 2),
+                })
+                print(f"  {pname:15s} {backend.value:9s} prefix={prefix:4d}: "
+                      f"per-step {rows[-1]['per_step_ms_tok']:7.2f} ms/tok  "
+                      f"fused {rows[-1]['fused_ms_tok']:7.2f} ms/tok  "
+                      f"({rows[-1]['speedup']:.2f}x)")
+    return rows
+
+
+def run(*, quick: bool = False, smoke: bool = False) -> dict:
+    rows = roofline_rows()
     print(fmt_table(rows, ["model", "prefix", "bf16_us", "int4_us",
                            "delta_pct", "kv_ratio"]))
 
-    # measured O(1)-update evidence on CPU (relative only).  Caches come
-    # from the policy registry; rotations live inside the int4 state.
-    cfg, model, params = trained_standin("smol-d128")
+    print("\nmeasured: fused scan decode (donated cache) vs per-step loop")
+    engine_rows = measure_fused_vs_per_step(smoke=smoke or quick)
+
+    # ISSUE-2 acceptance: fused 64-token decode improves on the per-step
+    # loop.  Claimed on the geometric-mean speedup (single rows can lose
+    # to scheduler noise on a loaded CI box; per-row wins are recorded in
+    # engine_measured for inspection).
+    speedups = [r["per_step_ms_tok"] / r["fused_ms_tok"]
+                for r in engine_rows]
+    geomean = float(np.exp(np.mean(np.log(speedups))))
+    print(f"  fused-vs-per-step geomean speedup: {geomean:.2f}x "
+          f"(wins {sum(s > 1 for s in speedups)}/{len(speedups)} rows)")
+    claims = {
+        # the paper's inversion: negative delta at every tested prefix
+        "int4_faster_at_all_prefixes_tpu_model": all(
+            r["delta_pct"] < 0 for r in rows),
+        "advantage_grows_with_prefix": rows[4]["delta_pct"]
+        < rows[0]["delta_pct"],
+        "fused_beats_per_step_64tok": geomean > 1.0,
+    }
+
     measured = []
-    for s_max, prefill_len in ((128, 96), (512, 480)):
-        tok = jnp.zeros((2, 1), jnp.int32)
-        it = jnp.zeros((2, prefill_len), jnp.int32)
-        cq = model.init_cache(2, s_max, policy="int4-srft",
-                              key=jax.random.PRNGKey(7))
-        cb = model.init_cache(2, s_max, policy="bf16")
-        prefill = jax.jit(model.prefill)
-        _, cq = prefill(params, it, cq)
-        _, cb = prefill(params, it, cb)
-        decode = jax.jit(model.decode_step)
-        tq = time_fn(lambda: decode(params, tok, cq), iters=5)
-        tb = time_fn(lambda: decode(params, tok, cb), iters=5)
-        measured.append({"prefix": prefill_len, "cpu_quant_ms": tq * 1e3,
-                         "cpu_bf16_ms": tb * 1e3})
-        print(f"  CPU decode_step prefix={prefill_len}: quant "
-              f"{tq*1e3:.1f} ms vs bf16 {tb*1e3:.1f} ms")
+    if not (smoke or quick):
+        # measured O(1)-update evidence on CPU (relative only).  Caches
+        # come from the policy registry; rotations live inside the int4
+        # state.
+        cfg, model, params = trained_standin("smol-d128")
+        for s_max, prefill_len in ((128, 96), (512, 480)):
+            tok = jnp.zeros((2, 1), jnp.int32)
+            it = jnp.zeros((2, prefill_len), jnp.int32)
+            cq = model.init_cache(2, s_max, policy="int4-srft",
+                                  key=jax.random.PRNGKey(7))
+            cb = model.init_cache(2, s_max, policy="bf16")
+            prefill = jax.jit(model.prefill)
+            _, cq = prefill(params, it, cq)
+            _, cb = prefill(params, it, cb)
+            decode = jax.jit(model.decode_step)
+            tq = time_fn(lambda: decode(params, tok, cq), iters=5)
+            tb = time_fn(lambda: decode(params, tok, cb), iters=5)
+            measured.append({"prefix": prefill_len,
+                             "cpu_quant_ms": tq * 1e3,
+                             "cpu_bf16_ms": tb * 1e3})
+            print(f"  CPU decode_step prefix={prefill_len}: quant "
+                  f"{tq*1e3:.1f} ms vs bf16 {tb*1e3:.1f} ms")
+        growth_q = measured[1]["cpu_quant_ms"] / measured[0]["cpu_quant_ms"]
+        growth_b = measured[1]["cpu_bf16_ms"] / measured[0]["cpu_bf16_ms"]
+        claims["o1_updates"] = bool(growth_q < growth_b * 1.5 + 0.5)
 
-    # O(1) check: quant-path cost must not grow faster than bf16-path cost
-    growth_q = measured[1]["cpu_quant_ms"] / measured[0]["cpu_quant_ms"]
-    growth_b = measured[1]["cpu_bf16_ms"] / measured[0]["cpu_bf16_ms"]
-
-    short = [r for r in rows if r["prefix"] <= 4096]
     record = {
-        "table": "table8_fig1", "rows": rows, "cpu_measured": measured,
-        "claims": {
-            # the paper's inversion: negative delta at every tested prefix
-            "int4_faster_at_all_prefixes_tpu_model": all(
-                r["delta_pct"] < 0 for r in rows),
-            "advantage_grows_with_prefix": rows[4]["delta_pct"]
-            < rows[0]["delta_pct"],
-            "o1_updates": growth_q < growth_b * 1.5 + 0.5,
-        },
+        "table": "table8_fig1", "rows": rows,
+        "engine_measured": engine_rows,
+        "fused_geomean_speedup": round(geomean, 3),
+        "cpu_measured": measured,
+        "smoke": bool(smoke or quick), "claims": claims,
         "notes": (
             "TPU columns are roofline-derived (bandwidth model), the "
-            "mechanism the paper itself attributes its win to; CPU "
-            "columns are wall-clock scaling evidence only."
+            "mechanism the paper itself attributes its win to; "
+            "engine_measured rows are CPU wall-clock of the fused "
+            "lax.scan decode loop (one dispatch, donated cache) vs the "
+            "jit(decode_step)-per-token Python loop, 64 new tokens."
         ),
     }
     save_record("e2e_decode", record)
-    print("claims:", record["claims"])
+    with open(ROOT_RECORD, "w") as f:  # perf trajectory at the repo root
+        json.dump(record, f, indent=2, default=float)
+    print(f"claims: {claims}")
+    print(f"[record] {os.path.abspath(ROOT_RECORD)}")
     return record
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: small prefixes, no kernel "
+                    "backend, no trained stand-in")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    record = run(quick=args.quick, smoke=args.smoke)
+    if not all(v is not False for v in record["claims"].values()):
+        sys.exit(1)

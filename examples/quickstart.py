@@ -16,6 +16,7 @@ from repro.configs.paper_models import SMOL_D64
 from repro.core.transforms import make_rotation
 from repro.data import DataIterator, SyntheticCorpus
 from repro.kernels.srft_quant import ops, ref
+from repro.launch.engine import generate
 from repro.launch.steps import init_train_state, make_train_step
 from repro.models import build_model
 
@@ -47,8 +48,10 @@ print(f"kernel vs oracle: {100*float(np.mean(np.asarray(packed)==np.asarray(pr))
       "bit-identical")
 
 # --- 3b. serve under three registered cache policies -------------------------
-# One serving loop, three schemes: the model code never branches on the
+# One fused call, three schemes: the model code never branches on the
 # cache type; each policy owns its state (rotations included) and reads.
+# generate() runs prefill + the whole 12-token decode loop in ONE jit
+# dispatch (lax.scan), with the cache donated -- no per-token copies.
 prompt = jnp.asarray(
     DataIterator(SyntheticCorpus(1), batch_per_shard=2, seq_len=48).next()
     ["tokens"]
@@ -56,15 +59,9 @@ prompt = jnp.asarray(
 
 for name in ("bf16", "int4-srft", "int8-per-token"):
     cache = model.init_cache(2, 64, policy=name, key=jax.random.PRNGKey(7))
-    logits, cache = jax.jit(model.prefill)(params, prompt, cache)
-    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
-    toks = []
-    for _ in range(12):
-        toks.append(np.asarray(tok))
-        logits, cache = jax.jit(model.decode_step)(params, tok, cache)
-        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    toks, cache = generate(params, prompt, cache, 12, model=model)
     text = "".join(chr(c) if 32 <= c < 127 else "?"
-                   for c in np.concatenate(toks, 1)[0])
+                   for c in np.asarray(toks)[0])
     pol = model.cache_policy(name)
     ratio = pol.compression_ratio(cache["attn"])
     print(f"  {name:15s} ({ratio:.2f}x KV) continuation: {text!r}")

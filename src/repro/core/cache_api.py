@@ -54,6 +54,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import warnings
 from typing import Any, NamedTuple, Optional, Protocol, runtime_checkable
 
 import jax
@@ -63,6 +64,7 @@ from repro.core import kvcache, quant
 from repro.core.kvcache import BF16KVCache, QuantKVCache
 from repro.core.quant_attention_ref import (
     decode_attention_bf16,
+    decode_attention_bf16_blockwise,
     decode_attention_quant,
     decode_attention_quant_blockwise,
 )
@@ -137,9 +139,22 @@ class CacheState:
 
 @runtime_checkable
 class KVCachePolicy(Protocol):
-    """Protocol for KV-cache schemes (see module docstring for lifecycle)."""
+    """Protocol for KV-cache schemes (see module docstring for lifecycle).
+
+    ``supported_backends`` lets serve/benchmark sweeps enumerate the read
+    paths a scheme implements instead of catching NotImplementedError.
+
+    Donation invariant (DESIGN.md §8): ``prefill`` and ``update`` must
+    return a state with the SAME pytree structure, shapes and dtypes,
+    and must not read any input buffer except as an operand of the op
+    producing its replacement -- so a jitted step with
+    ``donate_argnums`` on the cache lowers every append to an in-place
+    ``dynamic_update_slice`` (no per-token O(S_max) copy).  The fused
+    generation engine (launch/engine.py) relies on this.
+    """
 
     name: str
+    supported_backends: tuple[AttendBackend, ...]
 
     def init_state(self, batch: int, n_kv_heads: int, s_max: int,
                    head_dim: int, *, key: Optional[jax.Array] = None
@@ -241,9 +256,18 @@ def _leaf_bytes(*leaves) -> int:
 class BF16Policy:
     """Uncompressed bf16 cache (the paper's fp16 DynamicCache analogue).
 
-    Single dense read path (there is nothing to dequantize blockwise);
-    requesting a tiled backend raises rather than silently degrading.
+    GATHER reads the dense cache in one shot; BLOCKWISE runs the same
+    flash-decode tiling as the int4 mirror (minus dequant) so backend
+    sweeps compare policies under identical tiling.  KERNEL is int4-only
+    (there are no packed codes to stream) and raises.
+
+    Donation-safe (DESIGN.md §8): ``prefill``/``update`` produce the new
+    k/v buffers via ``dynamic_update_slice`` over the old ones -- same
+    shape/dtype, no read after the write -- so under ``donate_argnums``
+    XLA updates the cache in place.
     """
+
+    supported_backends = (AttendBackend.GATHER, AttendBackend.BLOCKWISE)
 
     def init_state(self, batch, n_kv_heads, s_max, head_dim, *, key=None):
         return CacheState(
@@ -259,10 +283,15 @@ class BF16Policy:
     def attend(self, q, state, *, scale=None, backend=None, kv_block=512,
                sliding_window=None):
         backend = AttendBackend.parse(backend)
+        if backend is AttendBackend.BLOCKWISE:
+            return decode_attention_bf16_blockwise(
+                q, state.data, scale=scale, sliding_window=sliding_window,
+                kv_block=kv_block,
+            )
         if backend is not AttendBackend.GATHER:
             raise NotImplementedError(
-                f"bf16 implements only the GATHER read path "
-                f"(got {backend.value}); tiled dequant is int4-only"
+                f"bf16 implements GATHER and BLOCKWISE read paths "
+                f"(got {backend.value}); the Pallas kernel is int4-only"
             )
         return decode_attention_bf16(
             q, state.data, scale=scale, sliding_window=sliding_window
@@ -297,12 +326,27 @@ class Int4State(NamedTuple):
         return self.kv.length
 
 
+_KERNEL_SLIDING_WINDOW_WARNED = False
+
+
 @register_policy("int4-srft")
 @dataclasses.dataclass(frozen=True)
 class Int4SRFTPolicy:
     """SRFT rotation + per-channel lambda + int4 per-group codes + fp32
     residual window (paper §7.1-7.2).  Supports all three attend backends;
-    their parity is asserted by tests/test_cache_api.py."""
+    their parity is asserted by tests/test_cache_api.py.
+
+    Donation-safe (DESIGN.md §8): ``kvcache.prefill`` writes packed
+    storage and residual window via ``dynamic_update_slice``;
+    ``kvcache.decode_update`` writes one residual slot the same way and,
+    on a flush step, rebuilds packed storage with a masked select over
+    the old buffers (reads only as operands of the producing op).  All
+    buffers keep shape/dtype, so the whole state aliases in place under
+    ``donate_argnums``.
+    """
+
+    supported_backends = (AttendBackend.GATHER, AttendBackend.BLOCKWISE,
+                          AttendBackend.KERNEL)
 
     group: int = 32
     window: int = 16
@@ -348,12 +392,27 @@ class Int4SRFTPolicy:
                 sliding_window=sliding_window, kv_block=kv_block,
             )
         if backend is AttendBackend.KERNEL:
+            if sliding_window is not None:
+                # Mid-request backend/feature mismatch must not kill the
+                # request: serve the step through the blockwise mirror
+                # (same tiling, same numerics) and say so once.
+                global _KERNEL_SLIDING_WINDOW_WARNED
+                if not _KERNEL_SLIDING_WINDOW_WARNED:
+                    _KERNEL_SLIDING_WINDOW_WARNED = True
+                    warnings.warn(
+                        "int4-srft: the Pallas kernel path does not "
+                        "implement sliding_window; falling back to the "
+                        "BLOCKWISE read path for this and subsequent "
+                        "windowed reads",
+                        RuntimeWarning,
+                        stacklevel=2,
+                    )
+                return decode_attention_quant_blockwise(
+                    q, d.kv, d.rot_k, d.rot_v, scale=scale,
+                    sliding_window=sliding_window, kv_block=kv_block,
+                )
             from repro.kernels.quant_attention import decode_attention_kernel
 
-            if sliding_window is not None:
-                raise NotImplementedError(
-                    "sliding_window not supported by the Pallas kernel path"
-                )
             return decode_attention_kernel(
                 q, d.kv, d.rot_k, d.rot_v, scale=scale, blk=kv_block
             )
@@ -404,7 +463,13 @@ class Int8PerTokenPolicy:
     scheme is ~40 lines on top of the existing quantizers.  ~1.9x
     compression at d=128 vs bf16.  Read path: dense dequant-gather (the
     BLOCKWISE/KERNEL tiled paths are int4-only; requesting them raises).
+
+    Donation-safe: ``_write`` is four ``dynamic_update_slice`` ops over
+    the old buffers, shape/dtype preserved -- aliases in place under
+    ``donate_argnums`` (DESIGN.md §8).
     """
+
+    supported_backends = (AttendBackend.GATHER,)
 
     def _quant(self, x):
         q = quant.quantize_per_token(x, 8)

@@ -20,6 +20,14 @@ model code dispatches through that protocol, not these functions):
 
 All state is a pytree of arrays with static shapes, so the cache threads
 through jax.jit / scan-over-layers (leading layer axis) unchanged.
+
+Donation audit (DESIGN.md §8; the fused engine donates the cache):
+every update path here preserves buffer shape/dtype and reads old
+buffers only as operands of the op that produces their replacement --
+``dynamic_update_slice`` for prefill/bf16/residual-slot writes, and a
+``take``+``select`` pair for the flush slab -- so under
+``donate_argnums`` XLA aliases the whole cache in place and a decode
+step never copies the O(S_max) packed storage.
 """
 from __future__ import annotations
 

@@ -22,7 +22,11 @@ from repro.core import kvcache
 from repro.core.kvcache import BF16KVCache, QuantKVCache
 from repro.core.transforms import Rotation
 
-__all__ = ["decode_attention_quant", "decode_attention_bf16"]
+__all__ = [
+    "decode_attention_quant",
+    "decode_attention_bf16",
+    "decode_attention_bf16_blockwise",
+]
 
 
 def _gqa_repeat(x: jax.Array, n_q_heads: int) -> jax.Array:
@@ -153,7 +157,12 @@ def decode_attention_quant_blockwise(
 
     def body(carry, j):
         m, l, acc = carry
-        sl = (0, 0, j * blk, 0)
+        # dynamic_slice clamps an out-of-bounds start in-bounds; when blk
+        # does not divide s_max the last tile starts at s_max - blk, so
+        # label positions from the clamped start and mask the rows a
+        # previous tile already covered (pos < j * blk).
+        start = jnp.minimum(j * blk, s_max - blk)
+        sl = (0, 0, start, 0)
         kp = jax.lax.dynamic_slice(
             cache.k_packed, sl, (B, Hkv, blk, d // 2))
         ks = jax.lax.dynamic_slice(
@@ -164,9 +173,9 @@ def decode_attention_quant_blockwise(
             cache.v_scales, sl, (B, Hkv, blk, d // g))
         kj = deq(kp, ks)
         vj = deq(vp, vs)
-        kv_pos = j * blk + jnp.arange(blk)
+        kv_pos = start + jnp.arange(blk)
         logits = jnp.einsum("bhgqd,bhsd->bhgqs", qg, kj)
-        mask = kv_pos[None, :] < plen
+        mask = (kv_pos[None, :] < plen) & (kv_pos[None, :] >= j * blk)
         if sliding_window is not None:
             mask = mask & (kv_pos[None, :] > cache.length - 1 - sliding_window)
         logits = jnp.where(mask[None, None, None], logits, -1e30)
@@ -225,4 +234,61 @@ def decode_attention_bf16(
     logits = jnp.where(mask, logits, -jnp.inf)
     p = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bhgs,bhsd->bhgd", p, v).reshape(B, Hq, 1, d)
+    return out.astype(q.dtype)
+
+
+def decode_attention_bf16_blockwise(
+    q: jax.Array,  # (B, Hq, 1, d)
+    cache: BF16KVCache,
+    *,
+    scale: float | None = None,
+    sliding_window: int | None = None,
+    kv_block: int = 512,
+) -> jax.Array:
+    """Flash-decode over the dense bf16 cache: tile-by-tile online softmax.
+
+    Mirror of :func:`decode_attention_quant_blockwise` without the
+    dequant stage -- never materializes an O(S_max) logits row, so
+    backend sweeps (serve/benchmarks) run BLOCKWISE uniformly across
+    policies and the bf16 baseline is measured under the same tiling.
+    """
+    B, Hq, _, d = q.shape
+    Hkv = cache.k.shape[1]
+    G = Hq // Hkv
+    sm = scale if scale is not None else d ** -0.5
+    s_max = cache.k.shape[-2]
+    qg = q.astype(jnp.float32).reshape(B, Hkv, G, 1, d) * sm
+
+    blk = min(kv_block, s_max)
+    n_blk = -(-s_max // blk)
+
+    def body(carry, j):
+        m, l, acc = carry
+        # clamp the last tile's start (dynamic_slice clamps anyway) and
+        # mask rows a previous tile already covered -- s_max need not be
+        # a multiple of kv_block
+        start = jnp.minimum(j * blk, s_max - blk)
+        sl = (0, 0, start, 0)
+        kj = jax.lax.dynamic_slice(
+            cache.k, sl, (B, Hkv, blk, d)).astype(jnp.float32)
+        vj = jax.lax.dynamic_slice(
+            cache.v, sl, (B, Hkv, blk, d)).astype(jnp.float32)
+        kv_pos = start + jnp.arange(blk)
+        logits = jnp.einsum("bhgqd,bhsd->bhgqs", qg, kj)
+        mask = (kv_pos[None, :] < cache.length) & (kv_pos[None, :] >= j * blk)
+        if sliding_window is not None:
+            mask = mask & (kv_pos[None, :] > cache.length - 1 - sliding_window)
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum("bhgqs,bhsd->bhgqd", p, vj)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, G, 1), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, 1), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, 1, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), jnp.arange(n_blk))
+    out = (acc / jnp.maximum(l, 1e-30)[..., None]).reshape(B, Hq, 1, d)
     return out.astype(q.dtype)

@@ -16,6 +16,16 @@ Grid: (BH, S/blk) — TPU executes the minor axis sequentially per BH, so
 the online-softmax state lives in VMEM scratch across KV tiles; the fp32
 residual window is folded in at the last tile, then the accumulator is
 normalized and written once.
+
+Length-aware grid (DESIGN.md §8): block fetches happen for every grid
+step regardless of ``pl.when`` guards, so a naive index map streams all
+S_max/blk tiles from HBM even when the prefix is short.  The KV
+BlockSpec index maps instead read the scalar-prefetched ``packed_len``
+and clamp the tile index to the last tile holding valid tokens: grid
+steps past the prefix re-request the SAME block, Pallas elides the
+repeat DMA (the block revisiting rule), and per-step HBM traffic is
+O(prefix), not O(S_max).  Compute guards keep using the unclamped grid
+index, so masking is unchanged.
 """
 from __future__ import annotations
 
@@ -140,15 +150,25 @@ def quant_decode_attention_fwd(
         [packed_len.astype(jnp.int32), total_len.astype(jnp.int32)]
     )
 
+    def kv_tile(bh, s, scalars):
+        # Length-aware fetch: clamp to the last tile containing valid
+        # packed tokens.  Past-prefix grid steps re-request that tile;
+        # Pallas skips the DMA for an unchanged block index, so HBM
+        # traffic scales with packed_len, not S_max.  Compute for those
+        # steps is already skipped by the pl.when(s * blk < plen) guard
+        # (which uses the unclamped s).
+        n_valid = (scalars[0] + blk - 1) // blk
+        return (bh, jnp.minimum(s, jnp.maximum(n_valid - 1, 0)), 0)
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(BH, n_blocks),
         in_specs=[
             pl.BlockSpec((1, G, dh), lambda bh, s, _: (bh, 0, 0)),
-            pl.BlockSpec((1, blk, dh // 2), lambda bh, s, _: (bh, s, 0)),
-            pl.BlockSpec((1, blk, dh // group), lambda bh, s, _: (bh, s, 0)),
-            pl.BlockSpec((1, blk, dh // 2), lambda bh, s, _: (bh, s, 0)),
-            pl.BlockSpec((1, blk, dh // group), lambda bh, s, _: (bh, s, 0)),
+            pl.BlockSpec((1, blk, dh // 2), kv_tile),
+            pl.BlockSpec((1, blk, dh // group), kv_tile),
+            pl.BlockSpec((1, blk, dh // 2), kv_tile),
+            pl.BlockSpec((1, blk, dh // group), kv_tile),
             pl.BlockSpec((1, W, dh), lambda bh, s, _: (bh, 0, 0)),
             pl.BlockSpec((1, W, dh), lambda bh, s, _: (bh, 0, 0)),
         ],

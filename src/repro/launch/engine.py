@@ -1,0 +1,226 @@
+"""Fused generation engine: the whole decode loop in one device dispatch.
+
+The paper's mechanism is bandwidth (DESIGN.md §1): int4 wins because the
+decode hot loop streams ~3x fewer bytes than fp16.  A Python-driven
+``jit(decode_step)``-per-token loop throws that win away -- every step
+pays host round-trip latency and, without buffer donation, a full
+O(S_max) copy of the cache pytree.  This module is the serving analogue
+of the paper's ``model.generate``: prefill plus the *entire* decode loop
+run inside a single ``jax.jit`` via ``lax.scan``, with the cache pytree
+donated (``donate_argnums``) so each policy's ``update`` lowers to an
+in-place ``dynamic_update_slice`` instead of a per-token copy.
+
+Scan carry layout (DESIGN.md §8)::
+
+    carry = (token (B, 1) int32, cache pytree, prng key (2,) uint32)
+
+``cache`` is whatever ``model.init_cache`` built -- a dict whose "attn"
+entry is a layer-stacked :class:`~repro.core.cache_api.CacheState` (the
+policy rides in the treedef, so the carry is self-describing), plus any
+recurrent state (ssm/hybrid/xlstm) and the scalar "pos".  The carry
+treedef must be invariant under ``decode_step``; every model family
+guarantees that (tested by tests/test_engine.py).
+
+Donation invariants each policy's ``update`` must satisfy (audited in
+core/cache_api.py + core/kvcache.py; see DESIGN.md §8):
+
+  * same pytree structure, shapes and dtypes in and out (XLA can only
+    alias matching buffers);
+  * no read of a cache buffer *after* the write that replaces it -- all
+    reads happen as operands of the op producing the new buffer
+    (``dynamic_update_slice`` / ``select``), which XLA updates in place.
+
+Entry points:
+
+``generate(params, prompt, cache, n_tokens, *, model, backend, sampler)``
+    One dispatch for prefill + decode.  Greedy by default; pass a
+    :class:`Sampler` for temperature / top-k sampling (PRNG state is a
+    scan carry).  ``prompt`` may be a tuple (e.g. ``(frames, tokens)``
+    for the audio encoder-decoder).
+
+``Engine``
+    The reusable object behind :func:`generate`: jitted ``prefill`` /
+    ``decode`` / ``generate`` with per-``n_tokens`` compilation caching.
+    ``prefill`` + ``decode`` let serving report prefill latency and
+    decode-only throughput separately while keeping the decode loop a
+    single dispatch.
+
+CAUTION: donated caches are consumed -- after ``generate``/``decode``
+returns, the *input* cache buffers are invalid (that is the point: no
+per-token copy).  Pass ``donate=False`` to keep the functional
+semantics for debugging.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cache_api import AttendBackend
+
+__all__ = ["Sampler", "GREEDY", "Engine", "generate"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Sampler:
+    """Token-selection rule (static: hashable, part of the jit key).
+
+    temperature == 0 is greedy argmax (the PRNG key is split but unused,
+    keeping the scan carry layout identical across samplers).  top_k > 0
+    restricts sampling to the k highest logits.
+    """
+
+    temperature: float = 0.0
+    top_k: int = 0
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0, got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+
+    def sample(self, logits: jax.Array, key: jax.Array) -> jax.Array:
+        """logits (B, V) -> tokens (B,) int32."""
+        if self.temperature == 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        scaled = logits.astype(jnp.float32) / self.temperature
+        if self.top_k:
+            kth = jax.lax.top_k(scaled, self.top_k)[0][..., -1:]
+            scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
+        return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+
+
+GREEDY = Sampler()
+
+
+class Engine:
+    """Fused generation for one (model, backend, sampler) configuration.
+
+    Compiled callables are cached per ``n_tokens`` (the scan length is
+    static); everything else -- params, prompt, cache, key -- is traced.
+    """
+
+    def __init__(self, model, *, backend: "AttendBackend | str | None" = None,
+                 sampler: Optional[Sampler] = None, kv_block: int = 512,
+                 donate: bool = True):
+        self.model = model
+        self.backend = (
+            None if backend is None else AttendBackend.parse(backend)
+        )
+        self.sampler = sampler if sampler is not None else GREEDY
+        self.kv_block = kv_block
+        self.donate = donate
+        self._prefill = jax.jit(
+            self._prefill_impl, donate_argnums=(2,) if donate else ()
+        )
+        self._decode_fns: dict[int, Any] = {}
+        self._generate_fns: dict[int, Any] = {}
+
+    # ------------------------------------------------------------- internals
+    def _prefill_impl(self, params, prompt, cache):
+        if isinstance(prompt, tuple):
+            return self.model.prefill(params, *prompt, cache)
+        return self.model.prefill(params, prompt, cache)
+
+    def _decode_body(self, params):
+        """lax.scan body: one decode_step + one sample draw."""
+        step = self.model.decode_body(
+            params, kv_block=self.kv_block, backend=self.backend
+        )
+
+        def body(carry, _):
+            tok, cache, key = carry
+            cache, logits = step(cache, tok)
+            key, sub = jax.random.split(key)
+            nxt = self.sampler.sample(logits[:, -1], sub)[:, None]
+            return (nxt, cache, key), nxt[:, 0]
+
+        return body
+
+    def _decode_loop(self, n_steps, params, tok, cache, key):
+        (tok, cache, key), toks = jax.lax.scan(
+            self._decode_body(params), (tok, cache, key), None,
+            length=n_steps,
+        )
+        return jnp.moveaxis(toks, 0, 1), (tok, cache, key)  # (B, n_steps)
+
+    # ----------------------------------------------------------- public API
+    def prefill(self, params, prompt, cache):
+        """Jitted prefill.  Returns (last-token logits, cache).  The input
+        cache is donated when the engine donates (it is blank anyway)."""
+        return self._prefill(params, prompt, cache)
+
+    def decode(self, params, tok, cache, n_tokens: int, *,
+               key: Optional[jax.Array] = None):
+        """Fused decode loop: ONE dispatch for ``n_tokens`` steps.
+
+        ``tok`` (B, 1) is the last sampled token (cache does not yet
+        contain it).  Returns (tokens (B, n_tokens), cache).  The input
+        cache is donated -- invalid after the call.
+        """
+        fn = self._decode_fns.get(n_tokens)
+        if fn is None:
+            def run(params, tok, cache, key):
+                toks, (_, cache, _) = self._decode_loop(
+                    n_tokens, params, tok, cache, key
+                )
+                return toks, cache
+
+            fn = jax.jit(run, donate_argnums=(2,) if self.donate else ())
+            self._decode_fns[n_tokens] = fn
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        return fn(params, tok, cache, key)
+
+    def generate(self, params, prompt, cache, n_tokens: int, *,
+                 key: Optional[jax.Array] = None):
+        """Prefill + sample + (n_tokens - 1) decode steps, one dispatch.
+
+        Returns (tokens (B, n_tokens), cache).  Matches the conventional
+        per-step loop exactly: the first token is sampled from the
+        prefill logits; the final sampled token is returned but not
+        appended to the cache.  The input cache is donated.
+        """
+        fn = self._generate_fns.get(n_tokens)
+        if fn is None:
+            def run(params, prompt, cache, key):
+                logits, cache = self._prefill_impl(params, prompt, cache)
+                key, sub = jax.random.split(key)
+                tok0 = self.sampler.sample(logits[:, -1], sub)[:, None]
+                toks, (_, cache, _) = self._decode_loop(
+                    n_tokens - 1, params, tok0, cache, key
+                )
+                return jnp.concatenate([tok0, toks], axis=1), cache
+
+            fn = jax.jit(run, donate_argnums=(2,) if self.donate else ())
+            self._generate_fns[n_tokens] = fn
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        return fn(params, prompt, cache, key)
+
+
+@functools.lru_cache(maxsize=64)
+def _engine(model, backend, sampler, kv_block, donate) -> Engine:
+    return Engine(model, backend=backend, sampler=sampler,
+                  kv_block=kv_block, donate=donate)
+
+
+def generate(params, prompt, cache, n_tokens: int, *, model,
+             backend: "AttendBackend | str | None" = None,
+             sampler: Optional[Sampler] = None,
+             key: Optional[jax.Array] = None, kv_block: int = 512,
+             donate: bool = True):
+    """Fused generation (module-level convenience over :class:`Engine`).
+
+    One device dispatch for prefill + the whole decode loop; the cache is
+    donated (invalid afterwards) unless ``donate=False``.  Engines are
+    cached per (model, backend, sampler, kv_block, donate), compiled
+    callables per ``n_tokens``.
+    """
+    backend = None if backend is None else AttendBackend.parse(backend)
+    eng = _engine(model, backend, sampler if sampler is not None else GREEDY,
+                  kv_block, donate)
+    return eng.generate(params, prompt, cache, n_tokens, key=key)

@@ -258,6 +258,19 @@ class EncDec:
         x = common.layernorm(params["ln_dec_final"], x[:, -1:])
         return common.dense(params["unembed"], x).astype(jnp.float32), cache
 
+    def decode_body(self, params, *, kv_block: int = 512, backend=None):
+        """``lax.scan``-ready decode body (mirrors LM.decode_body): the
+        cache dict -- self KV (written), cross KV (read-only), pos -- is
+        the scan carry; treedef invariant under :meth:`decode_step`."""
+
+        def body(cache, token):
+            logits, cache = self.decode_step(
+                params, token, cache, kv_block=kv_block, backend=backend
+            )
+            return cache, logits
+
+        return body
+
     def decode_step(self, params, token, cache, *, kv_block: int = 512,
                     backend=None):
         cfg = self.cfg

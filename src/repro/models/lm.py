@@ -545,12 +545,30 @@ class LM:
         )
         return x, dict(cache, mlstm=new_m, slstm=new_s)
 
+    def decode_body(self, params, *, kv_block: int = 512, backend=None):
+        """``lax.scan``-ready decode body: ``(cache, token) -> (cache,
+        logits)`` with the static knobs closed over.  The fused engine
+        (launch/engine.py) scans this; the cache pytree is the carry and
+        its treedef is invariant under :meth:`decode_step` (same dict
+        keys, same CacheState policy aux) for every family.
+        """
+
+        def body(cache, token):
+            logits, cache = self.decode_step(
+                params, token, cache, kv_block=kv_block, backend=backend
+            )
+            return cache, logits
+
+        return body
+
     def decode_step(self, params, token, cache, *, kv_block: int = 512,
                     backend=None):
         """token (B, 1) int32 -> (logits (B,1,V), new cache).  O(1)/step.
 
         ``backend`` (cache_api.AttendBackend or its string value) selects
         the attention read path; None uses the policy default (gather).
+        Scan-compatible: the returned cache has the same treedef as the
+        input (decode_body packages this for lax.scan).
         """
         cfg = self.cfg
         pos = cache["pos"]

@@ -115,6 +115,62 @@ def test_int8_tracks_bf16_closely():
     )
 
 
+def test_bf16_blockwise_matches_gather():
+    """BF16 BLOCKWISE read path (backend-sweep satellite): the tiled
+    online-softmax mirror must match the dense one-shot read, with and
+    without a sliding window."""
+    pb, sb = _state("bf16")
+    assert AttendBackend.BLOCKWISE in pb.supported_backends
+    k = jax.random.normal(jax.random.PRNGKey(20), (2, 2, 40, D))
+    v = jax.random.normal(jax.random.PRNGKey(21), (2, 2, 40, D))
+    sb = pb.prefill(sb, k, v)
+    q = jax.random.normal(jax.random.PRNGKey(22), (2, 4, 1, D))
+    for sw in (None, 24):
+        # kv_block=16 divides s_max=64; 24 does not (clamped last tile)
+        for blk in (16, 24):
+            dense = pb.attend(q, sb, sliding_window=sw)
+            tiled = pb.attend(q, sb, backend=AttendBackend.BLOCKWISE,
+                              kv_block=blk, sliding_window=sw)
+            np.testing.assert_allclose(
+                np.asarray(dense), np.asarray(tiled), atol=1e-5
+            )
+    with pytest.raises(NotImplementedError, match="int4-only"):
+        pb.attend(q, sb, backend=AttendBackend.KERNEL)
+
+
+def test_int4_kernel_sliding_window_falls_back_to_blockwise():
+    """kernel + sliding_window must not crash mid-decode: it warns once
+    and serves through the blockwise path (identical numerics)."""
+    import repro.core.cache_api as mod
+
+    pol, state = _state("int4-srft")
+    k = jax.random.normal(jax.random.PRNGKey(23), (2, 2, 40, D))
+    state = pol.prefill(state, k, k)
+    q = jax.random.normal(jax.random.PRNGKey(24), (2, 4, 1, D))
+    mod._KERNEL_SLIDING_WINDOW_WARNED = False
+    with pytest.warns(RuntimeWarning, match="sliding_window"):
+        out = pol.attend(q, state, backend=AttendBackend.KERNEL,
+                         sliding_window=24, kv_block=16)
+    ref = pol.attend(q, state, backend=AttendBackend.BLOCKWISE,
+                     sliding_window=24, kv_block=16)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    # one-time: second windowed kernel read is silent
+    import warnings as _w
+
+    with _w.catch_warnings():
+        _w.simplefilter("error")
+        pol.attend(q, state, backend=AttendBackend.KERNEL,
+                   sliding_window=24, kv_block=16)
+
+
+def test_supported_backends_cover_registry():
+    """Every registered policy declares its read paths; GATHER is the
+    universal baseline (serve/benchmark sweeps iterate this)."""
+    for name in available_policies():
+        pol = get_policy(name)
+        assert AttendBackend.GATHER in pol.supported_backends, name
+
+
 def test_int8_unsupported_backend_raises():
     p8, s8 = _state("int8-per-token")
     k = jax.random.normal(jax.random.PRNGKey(9), (2, 2, 8, D))
@@ -145,6 +201,13 @@ def test_int4_backend_parity_same_state():
     )
     np.testing.assert_allclose(
         outs[AttendBackend.GATHER], outs[AttendBackend.KERNEL], atol=1e-4
+    )
+    # kv_block not dividing s_max: the clamped last tile must not
+    # double-count or drop tail tokens
+    ragged = pol.attend(q, state, backend=AttendBackend.BLOCKWISE,
+                        kv_block=24)
+    np.testing.assert_allclose(
+        outs[AttendBackend.GATHER], np.asarray(ragged), atol=1e-5
     )
 
 

@@ -1,0 +1,210 @@
+"""Fused generation engine (launch/engine.py, DESIGN.md §8).
+
+Parity: fused ``generate`` must produce bit-identical tokens AND final
+cache state vs the conventional per-step decode loop, for every
+registered policy x every backend that policy supports (kernel runs in
+interpret mode on CPU).  Donation: the jitted step must alias its cache
+input (no per-token O(S_max) copy).  Dispatch: the decode loop is a
+single lax.scan inside one jit -- the model's Python decode_step runs
+once (trace), not once per token.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.configs.paper_models import SMOL_D64
+from repro.core.cache_api import AttendBackend, available_policies, get_policy
+from repro.launch.engine import GREEDY, Engine, Sampler, generate
+from repro.models import build_model
+
+B, PROMPT, NEW = 2, 23, 12  # decode crosses the W=16 flush boundary
+
+
+@pytest.fixture(scope="module")
+def lm():
+    model = build_model(SMOL_D64)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(
+        jax.random.PRNGKey(1), (B, PROMPT), 0, SMOL_D64.vocab_size
+    )
+    return model, params, toks
+
+
+def _fresh_cache(model, policy):
+    return model.init_cache(B, 64, policy=policy, key=jax.random.PRNGKey(7))
+
+
+def _per_step_loop(model, params, toks, cache, n_tokens, *, backend=None,
+                   kv_block=32):
+    """The conventional loop the engine replaces: jit(decode_step)/token."""
+    logits, cache = jax.jit(model.prefill)(params, toks, cache)
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    out = [np.asarray(tok)]
+    step = jax.jit(
+        lambda p, t, c: model.decode_step(p, t, c, backend=backend,
+                                          kv_block=kv_block)
+    )
+    for _ in range(n_tokens - 1):
+        logits, cache = step(params, tok, cache)
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        out.append(np.asarray(tok))
+    return np.concatenate(out, axis=1), cache
+
+
+def _policy_backend_cases():
+    cases = []
+    for name in available_policies():
+        pol = get_policy(name)
+        for b in pol.supported_backends:
+            cases.append((name, b))
+    return cases
+
+
+@pytest.mark.parametrize("policy,backend", _policy_backend_cases())
+def test_generate_bit_identical_to_per_step_loop(lm, policy, backend):
+    """Fused scan decode == per-step loop: same tokens, same final cache
+    bits, for all registered policies x supported backends."""
+    model, params, toks = lm
+    gen, cache_fused = generate(
+        params, toks, _fresh_cache(model, policy), NEW, model=model,
+        backend=backend, kv_block=32,
+    )
+    ref, cache_ref = _per_step_loop(
+        model, params, toks, _fresh_cache(model, policy), NEW,
+        backend=backend,
+    )
+    np.testing.assert_array_equal(np.asarray(gen), ref)
+    flat_f, tree_f = jax.tree_util.tree_flatten(cache_fused)
+    flat_r, tree_r = jax.tree_util.tree_flatten(cache_ref)
+    assert tree_f == tree_r
+    for a, b in zip(flat_f, flat_r):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_decode_loop_is_single_dispatch(lm):
+    """The decode loop is lax.scan inside ONE jit: the Python-level
+    decode_step body runs once (tracing), not once per generated token."""
+    model, params, toks = lm
+    calls = {"n": 0}
+    orig = model.decode_step
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return orig(*a, **kw)
+
+    model.decode_step = counting
+    try:
+        eng = Engine(model)  # fresh engine: nothing compiled yet
+        gen, _ = eng.generate(params, toks, _fresh_cache(model, "int4-srft"),
+                              16)
+        jax.block_until_ready(gen)
+    finally:
+        model.decode_step = orig
+    assert gen.shape == (B, 16)
+    assert calls["n"] == 1, f"decode_step ran {calls['n']}x for 16 tokens"
+
+
+def test_jitted_step_donates_cache_buffers(lm):
+    """Donation satellite: the jitted step aliases its cache input.
+
+    Checked two ways: the compiled HLO carries input_output_alias
+    annotations, and the donated KV buffers are invalidated after the
+    call (XLA wrote in place -- no per-token copy of packed storage).
+    """
+    model, params, _ = lm
+    cache = _fresh_cache(model, "int4-srft")
+    tok = jnp.zeros((B, 1), jnp.int32)
+    step = jax.jit(model.decode_step, donate_argnums=(2,))
+    txt = step.lower(params, tok, cache).compile().as_text()
+    assert "input_output_alias" in txt
+
+    _, new_cache = step(params, tok, cache)
+    jax.block_until_ready(new_cache)
+    kv = cache["attn"].data.kv
+    for name in ("k_packed", "k_scales", "v_packed", "v_scales",
+                 "k_residual", "v_residual"):
+        assert getattr(kv, name).is_deleted(), f"{name} was copied"
+
+
+def test_engine_decode_donates_and_invalidates(lm):
+    """The fused decode loop donates too: after Engine.decode the input
+    cache's packed buffers are dead (and donate=False keeps them)."""
+    model, params, toks = lm
+    eng = Engine(model)
+    cache = _fresh_cache(model, "int4-srft")
+    _, cache = jax.jit(model.prefill)(params, toks, cache)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    gen, _ = eng.decode(params, tok, cache, 4)
+    assert gen.shape == (B, 4)
+    assert cache["attn"].data.kv.k_packed.is_deleted()
+
+    keep = Engine(model, donate=False)
+    cache2 = _fresh_cache(model, "int4-srft")
+    _, cache2 = jax.jit(model.prefill)(params, toks, cache2)
+    gen2, _ = keep.decode(params, tok, cache2, 4)
+    jax.block_until_ready(gen2)
+    assert not cache2["attn"].data.kv.k_packed.is_deleted()
+
+
+def test_sampler_modes(lm):
+    """top_k=1 sampling equals greedy at any temperature; temperature
+    sampling is deterministic in the key and in-vocabulary."""
+    model, params, toks = lm
+    g, _ = generate(params, toks, _fresh_cache(model, "bf16"), NEW,
+                    model=model)
+    t1, _ = generate(params, toks, _fresh_cache(model, "bf16"), NEW,
+                     model=model, sampler=Sampler(temperature=0.7, top_k=1))
+    np.testing.assert_array_equal(np.asarray(g), np.asarray(t1))
+
+    sampler = Sampler(temperature=1.0, top_k=8)
+    key = jax.random.PRNGKey(11)
+    a, _ = generate(params, toks, _fresh_cache(model, "bf16"), NEW,
+                    model=model, sampler=sampler, key=key)
+    b, _ = generate(params, toks, _fresh_cache(model, "bf16"), NEW,
+                    model=model, sampler=sampler, key=key)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert np.asarray(a).min() >= 0
+    assert np.asarray(a).max() < SMOL_D64.vocab_size
+
+    with pytest.raises(ValueError, match="temperature"):
+        Sampler(temperature=-1.0)
+    assert GREEDY.temperature == 0.0
+
+
+@pytest.mark.parametrize("arch", ["whisper-large-v3", "zamba2-7b"])
+def test_exotic_families_generate_fused(arch):
+    """EncDec (tuple prompt) and hybrid recurrent caches thread through
+    the scan carry: fused generate matches the per-step loop."""
+    cfg = reduced(get_config(arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, 16), 0,
+                              cfg.vocab_size)
+    if cfg.family == "audio":
+        frames = jax.random.normal(jax.random.PRNGKey(3), (B, 16, cfg.d_model))
+        prompt = (frames, toks)
+        mk = lambda: model.init_cache(B, 48, 16, key=jax.random.PRNGKey(1))
+    else:
+        prompt = toks
+        mk = lambda: model.init_cache(B, 48, key=jax.random.PRNGKey(1))
+
+    gen, cache = generate(params, prompt, mk(), 6, model=model)
+    assert gen.shape == (B, 6)
+    assert int(cache["pos"]) == 16 + 5  # last sampled token not appended
+
+    # per-step reference
+    c = mk()
+    if cfg.family == "audio":
+        logits, c = jax.jit(model.prefill)(params, frames, toks, c)
+    else:
+        logits, c = jax.jit(model.prefill)(params, toks, c)
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    out = [np.asarray(tok)]
+    step = jax.jit(model.decode_step)
+    for _ in range(5):
+        logits, c = step(params, tok, c)
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        out.append(np.asarray(tok))
+    np.testing.assert_array_equal(np.asarray(gen), np.concatenate(out, 1))

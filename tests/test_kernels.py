@@ -102,6 +102,9 @@ ATTN_SWEEP = [
     (64, 32, 4, 2, 96, 70), (64, 16, 8, 8, 64, 64),
     (128, 32, 8, 2, 128, 100), (128, 32, 16, 4, 256, 17),
     (112, 28, 4, 4, 64, 33), (256, 32, 4, 1, 512, 480),
+    # length-aware grid: prefix far below capacity (tiles past packed_len
+    # clamp to the last valid tile) and an all-residual prefix (plen = 0)
+    (128, 32, 4, 4, 512, 40), (64, 32, 4, 2, 128, 7),
 ]
 
 
