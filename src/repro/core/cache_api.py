@@ -21,6 +21,15 @@ Pieces (DESIGN.md §6):
         out   = pol.attend(q, state, backend=AttendBackend.GATHER)
         bytes_, ratio = pol.nbytes(state), pol.compression_ratio(state)
 
+    Ragged continuous batching (DESIGN.md §9) adds a second lifecycle on
+    the SAME state type: ``init_state(..., ragged=True)`` makes
+    ``length`` a per-row (B,) vector; ``update(state, k, v, active=m)``
+    appends row i at its own L_i and only advances lengths where the
+    mask is True; ``attend`` masks per row; ``insert_row`` /
+    ``reset_rows`` admit and retire requests in a fixed-capacity slot
+    cache.  Raggedness is a shape property (``length.ndim``), so the
+    two lifecycles share one pytree structure and one dispatch.
+
 ``CacheState``
     Pytree wrapper pairing a policy (static aux data, hashable) with its
     array state.  Because the policy rides in the treedef, a cache pytree
@@ -133,6 +142,17 @@ class CacheState:
     def length(self) -> jax.Array:
         return self.data.length
 
+    @property
+    def lengths(self) -> jax.Array:
+        """Alias for ragged callers: per-row (B,) lengths (or scalar)."""
+        return self.data.length
+
+    @property
+    def is_ragged(self) -> bool:
+        """True when ``length`` carries one entry per batch row (shape
+        (B,)); static under tracing, so code may branch on it."""
+        return self.data.length.ndim == 1
+
     def nbytes(self, *, persistent_only: bool = True) -> int:
         return self.policy.nbytes(self, persistent_only=persistent_only)
 
@@ -143,6 +163,17 @@ class KVCachePolicy(Protocol):
 
     ``supported_backends`` lets serve/benchmark sweeps enumerate the read
     paths a scheme implements instead of catching NotImplementedError.
+
+    Ragged slot semantics (DESIGN.md §9): with ``init_state(...,
+    ragged=True)`` the state's ``length`` is a per-row (B,) vector and
+    every row is an independent request slot.  ``update`` takes an
+    optional ``active`` mask (rows where it is False keep their length;
+    any bytes they write land at positions ≥ their length and are
+    masked by ``attend``).  ``insert_row`` copies a freshly prefilled
+    batch-1 ragged state into slot ``slot`` of a capacity-B state
+    (leaving shared non-per-row leaves -- e.g. rotations -- untouched:
+    both states MUST have been built with the same rotations).
+    ``reset_rows`` zeroes the lengths of retired slots for reuse.
 
     Donation invariant (DESIGN.md §8): ``prefill`` and ``update`` must
     return a state with the SAME pytree structure, shapes and dtypes,
@@ -157,14 +188,14 @@ class KVCachePolicy(Protocol):
     supported_backends: tuple[AttendBackend, ...]
 
     def init_state(self, batch: int, n_kv_heads: int, s_max: int,
-                   head_dim: int, *, key: Optional[jax.Array] = None
-                   ) -> CacheState: ...
+                   head_dim: int, *, key: Optional[jax.Array] = None,
+                   ragged: bool = False) -> CacheState: ...
 
     def prefill(self, state: CacheState, k: jax.Array, v: jax.Array
                 ) -> CacheState: ...
 
-    def update(self, state: CacheState, k: jax.Array, v: jax.Array
-               ) -> CacheState: ...
+    def update(self, state: CacheState, k: jax.Array, v: jax.Array,
+               *, active: Optional[jax.Array] = None) -> CacheState: ...
 
     def attend(self, q: jax.Array, state: CacheState, *,
                scale: Optional[float] = None,
@@ -174,6 +205,12 @@ class KVCachePolicy(Protocol):
 
     def with_rotations(self, state: CacheState, rot_k: Rotation,
                        rot_v: Rotation) -> CacheState: ...
+
+    def insert_row(self, state: CacheState, row: CacheState, slot
+                   ) -> CacheState: ...
+
+    def reset_rows(self, state: CacheState, mask: jax.Array
+                   ) -> CacheState: ...
 
     def nbytes(self, state: CacheState, *, persistent_only: bool = True
                ) -> int: ...
@@ -247,6 +284,17 @@ def _leaf_bytes(*leaves) -> int:
     return sum(x.size * jnp.dtype(x.dtype).itemsize for x in leaves)
 
 
+def _insert_row_leaf(batched: jax.Array, row: jax.Array, slot) -> jax.Array:
+    """Write a batch-1 leaf into row ``slot`` of a capacity-B leaf.
+
+    Both leaves must lead with the batch axis (lengths included: ragged
+    states carry (B,) lengths).  ``slot`` may be traced -- admission
+    does not recompile per slot."""
+    idx = (slot,) + (0,) * (batched.ndim - 1)
+    return jax.lax.dynamic_update_slice(batched, row.astype(batched.dtype),
+                                        idx)
+
+
 # ---------------------------------------------------------------------------
 # bf16 baseline
 # ---------------------------------------------------------------------------
@@ -269,16 +317,35 @@ class BF16Policy:
 
     supported_backends = (AttendBackend.GATHER, AttendBackend.BLOCKWISE)
 
-    def init_state(self, batch, n_kv_heads, s_max, head_dim, *, key=None):
+    def init_state(self, batch, n_kv_heads, s_max, head_dim, *, key=None,
+                   ragged=False):
         return CacheState(
-            self, kvcache.init_bf16_cache(batch, n_kv_heads, s_max, head_dim)
+            self, kvcache.init_bf16_cache(batch, n_kv_heads, s_max, head_dim,
+                                          ragged=ragged)
         )
 
     def prefill(self, state, k, v):
         return CacheState(self, kvcache.bf16_prefill(state.data, k, v))
 
-    def update(self, state, k, v):
+    def update(self, state, k, v, *, active=None):
+        if state.is_ragged:
+            return CacheState(self, kvcache.bf16_decode_update_ragged(
+                state.data, k, v, active
+            ))
+        if active is not None:
+            raise ValueError("active masks need a ragged cache "
+                             "(init_state(..., ragged=True))")
         return CacheState(self, kvcache.bf16_decode_update(state.data, k, v))
+
+    def insert_row(self, state, row, slot):
+        return CacheState(self, jax.tree.map(
+            lambda b, r: _insert_row_leaf(b, r, slot), state.data, row.data
+        ))
+
+    def reset_rows(self, state, mask):
+        return CacheState(self, state.data._replace(
+            length=jnp.where(mask, 0, state.data.length)
+        ))
 
     def attend(self, q, state, *, scale=None, backend=None, kv_block=512,
                sliding_window=None):
@@ -352,14 +419,15 @@ class Int4SRFTPolicy:
     window: int = 16
     rotation: str = "srft"  # srft | srht | identity
 
-    def init_state(self, batch, n_kv_heads, s_max, head_dim, *, key=None):
+    def init_state(self, batch, n_kv_heads, s_max, head_dim, *, key=None,
+                   ragged=False):
         if key is None:
             key = jax.random.PRNGKey(0)
         kk, kv_ = jax.random.split(key)
         return CacheState(self, Int4State(
             kv=kvcache.init_cache(
                 batch, n_kv_heads, s_max, head_dim,
-                group=self.group, window=self.window,
+                group=self.group, window=self.window, ragged=ragged,
             ),
             rot_k=make_rotation(self.rotation, kk, head_dim),
             rot_v=make_rotation(self.rotation, kv_, head_dim),
@@ -376,11 +444,35 @@ class Int4SRFTPolicy:
             kv=kvcache.prefill(d.kv, d.rot_k, d.rot_v, k, v)
         ))
 
-    def update(self, state, k, v):
+    def update(self, state, k, v, *, active=None):
         d = state.data
+        if state.is_ragged:
+            return CacheState(self, d._replace(
+                kv=kvcache.decode_update_ragged(d.kv, d.rot_k, d.rot_v, k, v,
+                                                active)
+            ))
+        if active is not None:
+            raise ValueError("active masks need a ragged cache "
+                             "(init_state(..., ragged=True))")
         return CacheState(self, d._replace(
             kv=kvcache.decode_update(d.kv, d.rot_k, d.rot_v, k, v)
         ))
+
+    def insert_row(self, state, row, slot):
+        # per-row KV storage is copied; the rotations are shared model
+        # constants and stay the batched state's (the row cache MUST
+        # have been built with the same rotations -- BatchEngine
+        # guarantees this by reusing one init key / calibrated rots).
+        d = state.data
+        return CacheState(self, d._replace(kv=jax.tree.map(
+            lambda b, r: _insert_row_leaf(b, r, slot), d.kv, row.data.kv
+        )))
+
+    def reset_rows(self, state, mask):
+        d = state.data
+        return CacheState(self, d._replace(kv=d.kv._replace(
+            length=jnp.where(mask, 0, d.kv.length)
+        )))
 
     def attend(self, q, state, *, scale=None, backend=None, kv_block=512,
                sliding_window=None):
@@ -475,7 +567,8 @@ class Int8PerTokenPolicy:
         q = quant.quantize_per_token(x, 8)
         return q.codes, q.scales  # codes (...,d) int8, scales (...,1) f32
 
-    def init_state(self, batch, n_kv_heads, s_max, head_dim, *, key=None):
+    def init_state(self, batch, n_kv_heads, s_max, head_dim, *, key=None,
+                   ragged=False):
         shape_c = (batch, n_kv_heads, s_max, head_dim)
         shape_s = (batch, n_kv_heads, s_max, 1)
         return CacheState(self, Int8State(
@@ -483,7 +576,7 @@ class Int8PerTokenPolicy:
             k_scales=jnp.zeros(shape_s, jnp.float32),
             v_codes=jnp.zeros(shape_c, jnp.int8),
             v_scales=jnp.zeros(shape_s, jnp.float32),
-            length=jnp.zeros((), jnp.int32),
+            length=jnp.zeros((batch,) if ragged else (), jnp.int32),
         ))
 
     def with_rotations(self, state, rot_k, rot_v):
@@ -502,14 +595,52 @@ class Int8PerTokenPolicy:
             length=d.length,
         )
 
+    def _write_ragged(self, state, k, v, offsets):
+        """Per-row writes at per-row offsets (vmapped DUS = scatter)."""
+        d = state.data
+        kc, ks = self._quant(k)
+        vc, vs = self._quant(v)
+
+        def put(buf, val, off):  # (H,S,·), (H,1,·), ()
+            return jax.lax.dynamic_update_slice(buf, val, (0, off, 0))
+
+        return Int8State(
+            k_codes=jax.vmap(put)(d.k_codes, kc, offsets),
+            k_scales=jax.vmap(put)(d.k_scales, ks, offsets),
+            v_codes=jax.vmap(put)(d.v_codes, vc, offsets),
+            v_scales=jax.vmap(put)(d.v_scales, vs, offsets),
+            length=d.length,
+        )
+
     def prefill(self, state, k, v):
         S = k.shape[-2]
         new = self._write(state, k, v, 0)
-        return CacheState(self, new._replace(length=jnp.asarray(S, jnp.int32)))
+        return CacheState(self, new._replace(
+            length=jnp.full_like(state.data.length, S)
+        ))
 
-    def update(self, state, k, v):
-        new = self._write(state, k, v, state.data.length)
-        return CacheState(self, new._replace(length=state.data.length + 1))
+    def update(self, state, k, v, *, active=None):
+        lengths = state.data.length
+        if state.is_ragged:
+            new = self._write_ragged(state, k, v, lengths)
+            new_len = lengths + 1 if active is None \
+                else jnp.where(active, lengths + 1, lengths)
+            return CacheState(self, new._replace(length=new_len))
+        if active is not None:
+            raise ValueError("active masks need a ragged cache "
+                             "(init_state(..., ragged=True))")
+        new = self._write(state, k, v, lengths)
+        return CacheState(self, new._replace(length=lengths + 1))
+
+    def insert_row(self, state, row, slot):
+        return CacheState(self, jax.tree.map(
+            lambda b, r: _insert_row_leaf(b, r, slot), state.data, row.data
+        ))
+
+    def reset_rows(self, state, mask):
+        return CacheState(self, state.data._replace(
+            length=jnp.where(mask, 0, state.data.length)
+        ))
 
     def attend(self, q, state, *, scale=None, backend=None, kv_block=512,
                sliding_window=None):

@@ -21,6 +21,15 @@ model code dispatches through that protocol, not these functions):
 All state is a pytree of arrays with static shapes, so the cache threads
 through jax.jit / scan-over-layers (leading layer axis) unchanged.
 
+Ragged batching (DESIGN.md §9): ``length`` may be a scalar (every row at
+the same position -- the single-request fast path) or a per-row vector
+``(B,)`` (continuous batching: row i holds a live request with its own
+prefix length L_i).  Raggedness is a *shape* property, so Python code can
+branch on ``length.ndim`` statically under tracing.  The ragged decode
+updates below write each row at ITS OWN offset via vmapped
+``dynamic_update_slice`` (lowered to a scatter -- still in-place under
+donation, still O(1)/O(W) HBM traffic per step, never O(S_max)).
+
 Donation audit (DESIGN.md §8; the fused engine donates the cache):
 every update path here preserves buffer shape/dtype and reads old
 buffers only as operands of the op that produces their replacement --
@@ -39,7 +48,14 @@ import jax.numpy as jnp
 from repro.core import packing, quant
 from repro.core.transforms import Rotation
 
-__all__ = ["QuantKVCache", "BF16KVCache", "init_cache", "init_bf16_cache"]
+__all__ = [
+    "QuantKVCache",
+    "BF16KVCache",
+    "init_cache",
+    "init_bf16_cache",
+    "decode_update_ragged",
+    "bf16_decode_update_ragged",
+]
 
 
 class QuantKVCache(NamedTuple):
@@ -92,6 +108,7 @@ def init_cache(
     group: int = 32,
     window: int = 16,
     dtype_scales=jnp.float32,
+    ragged: bool = False,
 ) -> QuantKVCache:
     if head_dim % 2 or head_dim % group:
         raise ValueError(f"head_dim={head_dim} must divide 2 and group={group}")
@@ -105,18 +122,19 @@ def init_cache(
         v_scales=jnp.zeros(shape_s, dtype_scales),
         k_residual=jnp.zeros(shape_r, jnp.float32),
         v_residual=jnp.zeros(shape_r, jnp.float32),
-        length=jnp.zeros((), jnp.int32),
+        length=jnp.zeros((batch,) if ragged else (), jnp.int32),
     )
 
 
 def init_bf16_cache(
-    batch: int, n_kv_heads: int, s_max: int, head_dim: int
+    batch: int, n_kv_heads: int, s_max: int, head_dim: int,
+    *, ragged: bool = False
 ) -> BF16KVCache:
     shape = (batch, n_kv_heads, s_max, head_dim)
     return BF16KVCache(
         k=jnp.zeros(shape, jnp.bfloat16),
         v=jnp.zeros(shape, jnp.bfloat16),
-        length=jnp.zeros((), jnp.int32),
+        length=jnp.zeros((batch,) if ragged else (), jnp.int32),
     )
 
 
@@ -182,7 +200,7 @@ def prefill(
         )
     return QuantKVCache(
         k_packed, k_scales, v_packed, v_scales, k_res, v_res,
-        jnp.asarray(S, jnp.int32),
+        jnp.full_like(cache.length, S),  # ragged: every row at S
     )
 
 
@@ -247,6 +265,67 @@ def decode_update(
     )
 
 
+def decode_update_ragged(
+    cache: QuantKVCache,
+    rot_k: Rotation,
+    rot_v: Rotation,
+    k: jax.Array,  # (B, Hkv, 1, d)
+    v: jax.Array,  # (B, Hkv, 1, d)
+    active: jax.Array | None = None,  # (B,) bool; None = all rows append
+) -> QuantKVCache:
+    """Ragged batched append: row i writes at its own length L_i.
+
+    ``cache.length`` is (B,).  Inactive rows write too (into residual
+    slot L_i mod W, and -- when that slot is W-1 -- an idempotent
+    re-flush of their window), but their length does not advance, so the
+    written position stays ≥ L_i and is masked by every read path
+    (DESIGN.md §9: finished rows are masked, never re-traced).  Per-row
+    writes are vmapped ``dynamic_slice``/``dynamic_update_slice`` pairs
+    (gather + scatter): O(1) residual traffic plus an O(W) slab per
+    step, never O(S_max).
+    """
+    W = cache.window
+    g = cache.group
+    lengths = cache.length  # (B,)
+    kr = rot_k.forward(k)  # (B,H,1,d)
+    vr = rot_v.forward(v)
+    idx = lengths % W  # (B,) this token's residual slot
+
+    def slot_write(buf, val, off):  # (H,W,d), (H,1,d), ()
+        return jax.lax.dynamic_update_slice(buf, val, (0, off, 0))
+
+    k_res = jax.vmap(slot_write)(cache.k_residual, kr, idx)
+    v_res = jax.vmap(slot_write)(cache.v_residual, vr, idx)
+    if active is None:
+        new_len = lengths + 1
+    else:
+        new_len = jnp.where(active, lengths + 1, lengths)
+
+    # Per-row flush: rows whose window just filled (idx == W-1) pack
+    # their W-slab into storage at [L_i+1-W, L_i+1).  The quantize is
+    # computed for every row (O(W), cheap); non-flushing rows write
+    # their CURRENT slab back (gather-select-scatter), so the buffer is
+    # bit-unchanged for them and the whole update stays donation-safe.
+    flush = idx == W - 1  # (B,)
+    kp, ks = _quantize_rotated(k_res, g)
+    vp, vs = _quantize_rotated(v_res, g)
+    off = jnp.maximum(lengths + 1 - W, 0)  # (B,) slab start
+
+    def slab_write(buf, slab, off, do):  # buf (H,S,c), slab (H,W,c)
+        cur = jax.lax.dynamic_slice(buf, (0, off, 0), slab.shape)
+        return jax.lax.dynamic_update_slice(
+            buf, jnp.where(do, slab, cur), (0, off, 0)
+        )
+
+    k_packed = jax.vmap(slab_write)(cache.k_packed, kp, off, flush)
+    k_scales = jax.vmap(slab_write)(cache.k_scales, ks, off, flush)
+    v_packed = jax.vmap(slab_write)(cache.v_packed, vp, off, flush)
+    v_scales = jax.vmap(slab_write)(cache.v_scales, vs, off, flush)
+    return QuantKVCache(
+        k_packed, k_scales, v_packed, v_scales, k_res, v_res, new_len
+    )
+
+
 # ---------------------------------------------------------------------------
 # Read path (reference; the Pallas flash-decode kernel mirrors this)
 # ---------------------------------------------------------------------------
@@ -260,6 +339,9 @@ def packed_len(cache: QuantKVCache) -> jax.Array:
     n_residual = length mod W -- including 0 right after a flush or an
     exact-multiple prefill (the flushed tokens are then read from packed
     storage; the residual copies are masked out).
+
+    Elementwise: for a ragged cache (``length`` of shape (B,)) this is
+    the per-row packed length.
     """
     return cache.length - cache.length % cache.window
 
@@ -281,7 +363,7 @@ def bf16_prefill(cache: BF16KVCache, k: jax.Array, v: jax.Array) -> BF16KVCache:
     return BF16KVCache(
         jax.lax.dynamic_update_slice(cache.k, k.astype(jnp.bfloat16), (0, 0, 0, 0)),
         jax.lax.dynamic_update_slice(cache.v, v.astype(jnp.bfloat16), (0, 0, 0, 0)),
-        jnp.asarray(S, jnp.int32),
+        jnp.full_like(cache.length, S),  # ragged: every row at S
     )
 
 
@@ -295,4 +377,25 @@ def bf16_decode_update(cache: BF16KVCache, k: jax.Array, v: jax.Array) -> BF16KV
             cache.v, v.astype(jnp.bfloat16), (0, 0, off, 0)
         ),
         cache.length + 1,
+    )
+
+
+def bf16_decode_update_ragged(
+    cache: BF16KVCache, k: jax.Array, v: jax.Array,
+    active: jax.Array | None = None,
+) -> BF16KVCache:
+    """Ragged batched append: row i writes at offset L_i (vmapped DUS =
+    scatter; in-place under donation).  Inactive rows write at L_i too
+    -- beyond their unchanged length, hence masked (DESIGN.md §9)."""
+    lengths = cache.length  # (B,)
+
+    def row_write(buf, val, off):  # (H,S,d), (H,1,d), ()
+        return jax.lax.dynamic_update_slice(buf, val, (0, off, 0))
+
+    new_len = lengths + 1 if active is None \
+        else jnp.where(active, lengths + 1, lengths)
+    return BF16KVCache(
+        jax.vmap(row_write)(cache.k, k.astype(jnp.bfloat16), lengths),
+        jax.vmap(row_write)(cache.v, v.astype(jnp.bfloat16), lengths),
+        new_len,
     )

@@ -38,6 +38,17 @@ def _gqa_repeat(x: jax.Array, n_q_heads: int) -> jax.Array:
     return jnp.repeat(x, rep, axis=1)
 
 
+def _per_row(x: jax.Array, rank: int) -> jax.Array:
+    """Broadcast a scalar-or-(B,) length against rank-``rank`` logits.
+
+    Ragged caches carry per-row lengths (DESIGN.md §9): reshape (B,) to
+    (B, 1, ..., 1) so every mask below is per-row; a scalar passes
+    through untouched (bit-identical to the pre-ragged code)."""
+    if x.ndim == 0:
+        return x
+    return x.reshape((-1,) + (1,) * (rank - 1))
+
+
 def decode_attention_quant(
     q: jax.Array,  # (B, Hq, 1, d) raw query (post-RoPE)
     cache: QuantKVCache,
@@ -68,6 +79,8 @@ def decode_attention_quant(
     yk, yv, plen = kvcache.gather_rotated(cache)  # rotated+lam space
     s_max = yk.shape[-2]
     W = cache.window
+    plen = _per_row(plen, 4)  # (B,1,1,1) when ragged
+    length = _per_row(cache.length, 4)
 
     # Two-part online-softmax combine.  The packed cache's seq axis may be
     # sharded over 'model' (split-K flash decode, cache_specs); the fp32
@@ -83,7 +96,7 @@ def decode_attention_quant(
     pos_p = jnp.arange(s_max)[None, None, None, :]
     mask_p = pos_p < plen
     if sliding_window is not None:
-        mask_p &= pos_p >= (cache.length - sliding_window)
+        mask_p &= pos_p >= (length - sliding_window)
     logits_p = jnp.where(mask_p, logits_p, NEG)
     m_p = jnp.max(logits_p, axis=-1)  # (B,Hkv,G): tiny cross-shard reduce
     e_p = jnp.exp(logits_p - m_p[..., None])
@@ -95,9 +108,9 @@ def decode_attention_quant(
         "bhgd,bhsd->bhgs", qg, cache.k_residual
     ) * sm_scale
     pos_r = plen + jnp.arange(W)[None, None, None, :]
-    mask_r = pos_r < cache.length
+    mask_r = pos_r < length
     if sliding_window is not None:
-        mask_r &= pos_r >= (cache.length - sliding_window)
+        mask_r &= pos_r >= (length - sliding_window)
     logits_r = jnp.where(mask_r, logits_r, NEG)
     m_r = jnp.max(logits_r, axis=-1)
     e_r = jnp.exp(logits_r - m_r[..., None])
@@ -139,7 +152,10 @@ def decode_attention_quant_blockwise(
     G = Hq // Hkv
     g = cache.group
     sm = scale if scale is not None else d ** -0.5
-    plen = kvcache.packed_len(cache)
+    # rank-5 broadcast (logits are (B,Hkv,G,1,blk)); scalar lengths pass
+    # through bit-identically, ragged (B,) lengths mask per row
+    plen = _per_row(kvcache.packed_len(cache), 5)
+    length = _per_row(cache.length, 5)
     W = cache.window
     s_max = cache.s_max
 
@@ -175,10 +191,10 @@ def decode_attention_quant_blockwise(
         vj = deq(vp, vs)
         kv_pos = start + jnp.arange(blk)
         logits = jnp.einsum("bhgqd,bhsd->bhgqs", qg, kj)
-        mask = (kv_pos[None, :] < plen) & (kv_pos[None, :] >= j * blk)
+        mask = (kv_pos < plen) & (kv_pos >= j * blk)
         if sliding_window is not None:
-            mask = mask & (kv_pos[None, :] > cache.length - 1 - sliding_window)
-        logits = jnp.where(mask[None, None, None], logits, -1e30)
+            mask = mask & (kv_pos > length - 1 - sliding_window)
+        logits = jnp.where(mask, logits, -1e30)
         m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
         p = jnp.exp(logits - m_new[..., None])
         corr = jnp.exp(m - m_new)
@@ -196,10 +212,10 @@ def decode_attention_quant_blockwise(
     rv = cache.v_residual.reshape(B, Hkv, 1, W, d)
     pos_r = plen + jnp.arange(W)
     logits = jnp.einsum("bhgqd,bhgsd->bhgqs", qg, rk)
-    mask = pos_r < cache.length
+    mask = pos_r < length
     if sliding_window is not None:
-        mask = mask & (pos_r > cache.length - 1 - sliding_window)
-    logits = jnp.where(mask[None, None, None, None], logits, -1e30)
+        mask = mask & (pos_r > length - 1 - sliding_window)
+    logits = jnp.where(mask, logits, -1e30)
     m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
     p = jnp.exp(logits - m_new[..., None])
     corr = jnp.exp(m - m_new)
@@ -225,12 +241,13 @@ def decode_attention_bf16(
     sm_scale = scale if scale is not None else d ** -0.5
     k = cache.k.astype(jnp.float32)
     v = cache.v.astype(jnp.float32)
+    length = _per_row(cache.length, 4)
     qg = q.astype(jnp.float32).reshape(B, Hkv, G, d)
     logits = jnp.einsum("bhgd,bhsd->bhgs", qg, k) * sm_scale
     pos = jnp.arange(k.shape[-2])[None, None, None, :]
-    mask = pos < cache.length
+    mask = pos < length
     if sliding_window is not None:
-        mask &= pos >= (cache.length - sliding_window)
+        mask &= pos >= (length - sliding_window)
     logits = jnp.where(mask, logits, -jnp.inf)
     p = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bhgs,bhsd->bhgd", p, v).reshape(B, Hq, 1, d)
@@ -257,6 +274,7 @@ def decode_attention_bf16_blockwise(
     G = Hq // Hkv
     sm = scale if scale is not None else d ** -0.5
     s_max = cache.k.shape[-2]
+    length = _per_row(cache.length, 5)  # per-row when ragged
     qg = q.astype(jnp.float32).reshape(B, Hkv, G, 1, d) * sm
 
     blk = min(kv_block, s_max)
@@ -275,10 +293,10 @@ def decode_attention_bf16_blockwise(
             cache.v, sl, (B, Hkv, blk, d)).astype(jnp.float32)
         kv_pos = start + jnp.arange(blk)
         logits = jnp.einsum("bhgqd,bhsd->bhgqs", qg, kj)
-        mask = (kv_pos[None, :] < cache.length) & (kv_pos[None, :] >= j * blk)
+        mask = (kv_pos < length) & (kv_pos >= j * blk)
         if sliding_window is not None:
-            mask = mask & (kv_pos[None, :] > cache.length - 1 - sliding_window)
-        logits = jnp.where(mask[None, None, None], logits, -1e30)
+            mask = mask & (kv_pos > length - 1 - sliding_window)
+        logits = jnp.where(mask, logits, -1e30)
         m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
         p = jnp.exp(logits - m_new[..., None])
         corr = jnp.exp(m - m_new)

@@ -40,12 +40,17 @@ def decode_attention_kernel(
     def flat(x):
         return x.reshape((B * Hkv,) + x.shape[2:])
 
+    plen, tlen = kvc.packed_len(cache), cache.length
+    if tlen.ndim == 1:  # ragged (B,) lengths -> one pair per (b, h) row
+        plen = jnp.repeat(plen, Hkv)
+        tlen = jnp.repeat(tlen, Hkv)
+
     out_rot = quant_decode_attention_fwd(
         q_eff,
         flat(cache.k_packed), flat(cache.k_scales),
         flat(cache.v_packed), flat(cache.v_scales),
         flat(cache.k_residual), flat(cache.v_residual),
-        kvc.packed_len(cache), cache.length,
+        plen, tlen,
         group=cache.group, blk=blk, interpret=interpret,
     )  # (B*Hkv, G, d)
     out_rot = out_rot.reshape(B, Hq, 1, d)

@@ -26,6 +26,14 @@ steps past the prefix re-request the SAME block, Pallas elides the
 repeat DMA (the block revisiting rule), and per-step HBM traffic is
 O(prefix), not O(S_max).  Compute guards keep using the unclamped grid
 index, so masking is unchanged.
+
+Ragged batching (DESIGN.md §9): the prefetched scalars are PER ROW --
+shape (2, BH), one (packed_len, total_len) pair per batch*head slice --
+so the grid clamp is per sequence.  A batch of requests with mixed
+prefix lengths streams O(sum_i L_i) packed bytes per step, not
+O(batch x max_i L_i): the short rows' grid steps collapse onto their
+own last valid tile.  Single-request callers pass scalars; the wrapper
+broadcasts them, so the uniform case is unchanged.
 """
 from __future__ import annotations
 
@@ -56,7 +64,7 @@ def _unpack_dequant(p, scales, group):
 
 
 def _kernel(
-    scalars_ref,  # SMEM (2,): [packed_len, total_len]
+    scalars_ref,  # SMEM (2, BH): per-row [packed_len, total_len]
     q_ref,  # (1, G, d) f32 — q_eff, rotation/lam/scale folded
     kp_ref,  # (1, blk, d//2) uint8
     ks_ref,  # (1, blk, d//group) f32
@@ -73,9 +81,10 @@ def _kernel(
     group: int,
     n_blocks: int,
 ):
+    bh = pl.program_id(0)
     s = pl.program_id(1)
-    plen = scalars_ref[0]
-    length = scalars_ref[1]
+    plen = scalars_ref[0, bh]
+    length = scalars_ref[1, bh]
 
     @pl.when(s == 0)
     def _init():
@@ -130,8 +139,8 @@ def quant_decode_attention_fwd(
     v_scales: jax.Array,
     k_residual: jax.Array,  # (BH, W, d) f32
     v_residual: jax.Array,
-    packed_len: jax.Array,  # () int32
-    total_len: jax.Array,  # () int32
+    packed_len: jax.Array,  # () or (BH,) int32 -- per-row when ragged
+    total_len: jax.Array,  # () or (BH,) int32
     *,
     group: int = 32,
     blk: int = 256,
@@ -146,18 +155,20 @@ def quant_decode_attention_fwd(
     blk = min(blk, S)
     assert S % blk == 0, f"S={S} % blk={blk}"
     n_blocks = S // blk
-    scalars = jnp.stack(
-        [packed_len.astype(jnp.int32), total_len.astype(jnp.int32)]
-    )
+    scalars = jnp.stack([
+        jnp.broadcast_to(packed_len.astype(jnp.int32).reshape(-1), (BH,)),
+        jnp.broadcast_to(total_len.astype(jnp.int32).reshape(-1), (BH,)),
+    ])  # (2, BH): one (packed_len, total_len) pair per row
 
     def kv_tile(bh, s, scalars):
-        # Length-aware fetch: clamp to the last tile containing valid
-        # packed tokens.  Past-prefix grid steps re-request that tile;
-        # Pallas skips the DMA for an unchanged block index, so HBM
-        # traffic scales with packed_len, not S_max.  Compute for those
-        # steps is already skipped by the pl.when(s * blk < plen) guard
-        # (which uses the unclamped s).
-        n_valid = (scalars[0] + blk - 1) // blk
+        # Length-aware fetch, PER ROW: clamp to this row's last tile
+        # containing valid packed tokens.  Past-prefix grid steps
+        # re-request that tile; Pallas skips the DMA for an unchanged
+        # block index, so HBM traffic scales with each row's own
+        # packed_len (O(sum of prefixes) across a ragged batch), not
+        # S_max.  Compute for those steps is already skipped by the
+        # pl.when(s * blk < plen) guard (which uses the unclamped s).
+        n_valid = (scalars[0, bh] + blk - 1) // blk
         return (bh, jnp.minimum(s, jnp.maximum(n_valid - 1, 0)), 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(

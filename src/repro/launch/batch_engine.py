@@ -1,0 +1,336 @@
+"""Continuous batching: ragged multi-request serving over a slot cache.
+
+The fused engine (launch/engine.py) decodes ONE request stream per
+dispatch.  Serving "heavy traffic" means decoding many requests of
+different lengths together -- and the paper's bandwidth argument only
+survives batching if each row streams bytes proportional to ITS OWN
+prefix, not the batch max (DESIGN.md §9).  This module is that layer:
+
+``BatchEngine``
+    A fixed-capacity slot cache (one ragged ``CacheState`` per layer:
+    per-row ``lengths``) plus a host-side scheduler.
+
+    * **admit**: a queued request is prefilled alone (batch-1 ragged
+      cache sharing the slot cache's rotations), then copied into a free
+      slot with ``policy.insert_row`` -- one donated-buffer scatter, no
+      re-trace, the rest of the batch keeps decoding.
+    * **decode**: the whole batch advances ``chunk`` tokens in ONE
+      donated-buffer ``lax.scan`` dispatch.  Finished rows are masked by
+      an in-carry ``active`` vector (their lengths stand still, their
+      lane output is discarded); masks are data, so admissions and
+      retirements never recompile.
+    * **retire**: completed slots get ``policy.reset_rows`` (lengths to
+      zero) and go back into the free list; the scheduler then admits
+      from the queue.
+
+    Per-request sampling keys are split off the engine key at admission,
+    and each row's token stream is bit-identical to running that request
+    alone through ``launch.engine.Engine`` with a greedy sampler (the
+    ragged-parity oracle in tests/test_engine.py asserts this for every
+    policy x backend).
+
+Typical use::
+
+    eng = BatchEngine(model, params, capacity=8, s_max=2048,
+                      policy="int4-srft", backend="kernel")
+    eng.submit(Request(rid=0, prompt=toks_a, max_new_tokens=128))
+    eng.submit(Request(rid=1, prompt=toks_b, max_new_tokens=64))
+    for completion in eng.run():
+        ...  # Completion(rid, tokens, ...) as each request finishes
+
+or drive ``step()`` directly for token-level streaming.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cache_api import AttendBackend
+from repro.launch.engine import GREEDY, Sampler
+
+__all__ = ["Request", "Completion", "BatchEngine"]
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.  ``max_new_tokens`` counts every sampled
+    token, including the one drawn from the prefill logits (the same
+    convention as ``Engine.generate``'s ``n_tokens``)."""
+
+    rid: int
+    prompt: Any  # (S,) int array
+    max_new_tokens: int
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    prompt_len: int
+    tokens: np.ndarray  # (n_generated,) int32
+    finish_reason: str  # "length" | "eos"
+
+
+class BatchEngine:
+    """Continuous-batching engine for one (model, policy, backend,
+    sampler) configuration.
+
+    Compiled callables are cached per prompt length (prefill) and per
+    chunk size (decode); slot churn is pure data.  ``eos_id`` is a
+    static early-stop token (None = length-only).  The decode chunk is
+    the scheduling quantum: smaller chunks admit waiting requests
+    sooner, larger chunks amortize dispatch overhead.
+    """
+
+    def __init__(self, model, params, *, capacity: int, s_max: int,
+                 policy=None, backend: "AttendBackend | str | None" = None,
+                 sampler: Optional[Sampler] = None, kv_block: int = 512,
+                 chunk: int = 8, eos_id: Optional[int] = None,
+                 rots=None, key: Optional[jax.Array] = None,
+                 donate: bool = True):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        if chunk < 1:
+            raise ValueError(f"chunk must be >= 1, got {chunk}")
+        self.model = model
+        self.params = params
+        self.capacity = capacity
+        self.s_max = s_max
+        self.policy = model.cache_policy(policy)
+        self.backend = (
+            None if backend is None else AttendBackend.parse(backend)
+        )
+        self.sampler = sampler if sampler is not None else GREEDY
+        self.kv_block = kv_block
+        self.chunk = chunk
+        self.eos_id = eos_id
+        self.donate = donate
+        self._rots = rots
+        self._init_key = key if key is not None else jax.random.PRNGKey(0)
+
+        # the slot cache: one ragged CacheState per layer, plus per-row
+        # pos.  Row caches built at admission reuse _init_key/_rots so
+        # their rotations are bit-identical to the slot cache's (an
+        # insert_row requirement).  Rotations are embedded as COPIES:
+        # every cache here is eventually donated, and donating a buffer
+        # that aliases the caller's ``rots`` would delete it out from
+        # under the next admission.
+        self.cache = model.init_cache(
+            capacity, s_max, policy=self.policy, rots=self._rots_copy(),
+            key=self._init_key, ragged=True,
+        )
+        self.tok = jnp.zeros((capacity, 1), jnp.int32)  # last sampled
+        self.active = np.zeros((capacity,), bool)  # host mirror
+        self.budget = np.zeros((capacity,), np.int32)  # decode steps left
+        self._slot_req: list[Optional[Request]] = [None] * capacity
+        self._slot_toks: list[list[int]] = [[] for _ in range(capacity)]
+        self._queue: deque[Request] = deque()
+        self._sample_key = jax.random.fold_in(self._init_key, 0x5A5A)
+
+        # jit specializes per prompt-length shape on its own; one wrapper
+        self._prefill_fn = jax.jit(
+            lambda p, t, c: self.model.prefill(p, t, c),
+            donate_argnums=(2,) if donate else (),
+        )
+        self._chunk_fns: dict[int, Any] = {}
+        self._insert_fn = jax.jit(
+            self._insert_impl, donate_argnums=(0,) if donate else ()
+        )
+        self._reset_fn = jax.jit(
+            self._reset_impl, donate_argnums=(0,) if donate else ()
+        )
+
+    def _rots_copy(self):
+        return None if self._rots is None \
+            else jax.tree.map(jnp.copy, self._rots)
+
+    # ------------------------------------------------------------ jit bodies
+    def _insert_impl(self, batched, row, slot, tok_buf, tok0):
+        pol = self.policy
+        attn = jax.vmap(pol.insert_row, in_axes=(0, 0, None))(
+            batched["attn"], row["attn"], slot
+        )
+        pos = jax.lax.dynamic_update_slice(batched["pos"], row["pos"],
+                                           (slot,))
+        tok_buf = jax.lax.dynamic_update_slice(tok_buf, tok0, (slot, 0))
+        return dict(batched, attn=attn, pos=pos), tok_buf
+
+    def _reset_impl(self, batched, mask):
+        pol = self.policy
+        attn = jax.vmap(pol.reset_rows, in_axes=(0, None))(
+            batched["attn"], mask
+        )
+        pos = jnp.where(mask, 0, batched["pos"])
+        return dict(batched, attn=attn, pos=pos)
+
+    def _chunk_fn(self, n_steps: int):
+        fn = self._chunk_fns.get(n_steps)
+        if fn is None:
+            def run(params, tok, cache, active, budget, key):
+                def body(carry, _):
+                    tok, cache, active, budget, key = carry
+                    logits, cache = self.model.decode_step(
+                        params, tok, cache, kv_block=self.kv_block,
+                        backend=self.backend, active=active,
+                    )
+                    key, sub = jax.random.split(key)
+                    nxt = self.sampler.sample(logits[:, -1], sub)[:, None]
+                    valid = active  # rows live when this token was drawn
+                    budget = budget - active.astype(budget.dtype)
+                    alive = active & (budget > 0)
+                    if self.eos_id is not None:
+                        alive = alive & (nxt[:, 0] != self.eos_id)
+                    return ((nxt, cache, alive, budget, key),
+                            (nxt[:, 0], valid))
+
+                carry, (toks, valid) = jax.lax.scan(
+                    body, (tok, cache, active, budget, key), None,
+                    length=n_steps,
+                )
+                tok, cache, active, budget, key = carry
+                return (tok, cache, active, budget,
+                        jnp.moveaxis(toks, 0, 1),  # (capacity, n_steps)
+                        jnp.moveaxis(valid, 0, 1))
+
+            fn = jax.jit(run, donate_argnums=(2,) if self.donate else ())
+            self._chunk_fns[n_steps] = fn
+        return fn
+
+    # -------------------------------------------------------------- schedule
+    def submit(self, req: Request) -> None:
+        n = int(np.asarray(req.prompt).shape[-1])
+        if n < 1:
+            raise ValueError(f"request {req.rid}: empty prompt")
+        if req.max_new_tokens < 1:
+            raise ValueError(
+                f"request {req.rid}: max_new_tokens must be >= 1"
+            )
+        if n + req.max_new_tokens > self.s_max:
+            raise ValueError(
+                f"request {req.rid}: prompt ({n}) + max_new_tokens "
+                f"({req.max_new_tokens}) exceeds s_max={self.s_max}"
+            )
+        self._queue.append(req)
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    @property
+    def n_active(self) -> int:
+        return int(self.active.sum())
+
+    def _admit(self, req: Request, slot: int) -> Optional[Completion]:
+        """Prefill alone, copy into ``slot``, draw the first token."""
+        prompt = jnp.asarray(np.asarray(req.prompt)[None, :], jnp.int32)
+        row = self.model.init_cache(
+            1, self.s_max, policy=self.policy, rots=self._rots_copy(),
+            key=self._init_key, ragged=True,
+        )
+        logits, row = self._prefill_fn(self.params, prompt, row)
+        self._sample_key, sub = jax.random.split(self._sample_key)
+        tok0 = self.sampler.sample(logits[:, -1], sub)[:, None]
+        self.cache, self.tok = self._insert_fn(
+            self.cache, row, jnp.asarray(slot), self.tok, tok0
+        )
+        t0 = int(tok0[0, 0])
+        self._slot_req[slot] = req
+        self._slot_toks[slot] = [t0]
+        self.budget[slot] = req.max_new_tokens - 1
+        done = self.budget[slot] <= 0 or (
+            self.eos_id is not None and t0 == self.eos_id
+        )
+        self.active[slot] = not done
+        if done:
+            return self._retire(slot)
+        return None
+
+    def _retire(self, slot: int) -> Completion:
+        req = self._slot_req[slot]
+        toks = np.asarray(self._slot_toks[slot], np.int32)
+        reason = (
+            "eos" if self.eos_id is not None and len(toks)
+            and toks[-1] == self.eos_id
+            and len(toks) < req.max_new_tokens else "length"
+        )
+        self._slot_req[slot] = None
+        self._slot_toks[slot] = []
+        self.active[slot] = False
+        self.budget[slot] = 0
+        return Completion(
+            rid=req.rid, prompt_len=int(np.asarray(req.prompt).shape[-1]),
+            tokens=toks, finish_reason=reason,
+        )
+
+    def step(self) -> tuple[list[tuple[int, list[int]]], list[Completion]]:
+        """One scheduler quantum: admit into free slots, decode one
+        chunk.  Returns (events, completions) -- ``events`` is the token
+        stream, one ``(rid, new_tokens)`` per live request."""
+        events: list[tuple[int, list[int]]] = []
+        completions: list[Completion] = []
+        newly_retired = np.zeros((self.capacity,), bool)
+
+        # admit from the queue into free slots
+        for slot in range(self.capacity):
+            if not self._queue:
+                break
+            if self._slot_req[slot] is None:
+                req = self._queue.popleft()
+                done = self._admit(req, slot)
+                if done is not None:  # finished at admission (eos / n=1)
+                    events.append((req.rid, [int(done.tokens[-1])]))
+                    completions.append(done)
+                    newly_retired[slot] = True  # length back to 0 below
+                else:
+                    events.append((req.rid, [self._slot_toks[slot][0]]))
+
+        if not self.active.any():
+            if newly_retired.any():
+                self.cache = self._reset_fn(self.cache,
+                                            jnp.asarray(newly_retired))
+            return events, completions
+
+        # one fused dispatch: the whole batch advances up to `chunk`
+        # tokens (clipped to the longest remaining budget -- no masked
+        # tail steps when every live request is nearly done)
+        n_steps = int(min(self.chunk, self.budget[self.active].max()))
+        fn = self._chunk_fn(n_steps)
+        self._sample_key, sub = jax.random.split(self._sample_key)
+        (self.tok, self.cache, active_dev, budget_dev, toks,
+         valid) = fn(self.params, self.tok, self.cache,
+                     jnp.asarray(self.active), jnp.asarray(self.budget),
+                     sub)
+        toks = np.asarray(toks)
+        valid = np.asarray(valid)
+        self.budget = np.asarray(budget_dev).copy()
+        still_active = np.asarray(active_dev)
+
+        for slot in range(self.capacity):
+            req = self._slot_req[slot]
+            if req is None or not self.active[slot]:
+                continue
+            new = [int(t) for t, ok in zip(toks[slot], valid[slot]) if ok]
+            self._slot_toks[slot].extend(new)
+            events.append((req.rid, new))
+            if not still_active[slot]:
+                completions.append(self._retire(slot))
+                newly_retired[slot] = True
+        self.active = still_active.copy()
+        if newly_retired.any():  # free the rows: lengths back to zero
+            self.cache = self._reset_fn(self.cache,
+                                        jnp.asarray(newly_retired))
+        return events, completions
+
+    def run(self, requests: Optional[list[Request]] = None
+            ) -> Iterator[Completion]:
+        """Drain the queue (plus ``requests``), yielding completions as
+        they finish -- the streaming-response loop serve.py sits on."""
+        for r in requests or ():
+            self.submit(r)
+        while self._queue or self.active.any():
+            _, completions = self.step()
+            yield from completions

@@ -1,24 +1,31 @@
-"""Batched serving driver over the ``KVCachePolicy`` registry.
+"""Continuous-batching serving driver over the ``KVCachePolicy`` registry.
 
     PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
-        --smoke --batch 4 --prompt-len 64 --new-tokens 32 \
+        --smoke --max-batch 4 --requests 8 \
+        --prompt-len 64 --new-tokens 32 \
         [--policy {bf16,int4-srft,int8-per-token,...}] \
         [--backend {gather,blockwise,kernel}] \
-        [--temperature T] [--top-k K] \
+        [--temperature T] [--top-k K] [--chunk N] \
         [--calibrate] [--ckpt-dir DIR]
 
 The serving analogue of launch/train.py: builds the arch (optionally
 smoke-reduced), loads params from a checkpoint or initializes them,
 optionally calibrates per-channel lambda from a short prompt stream (the
-paper's ~2 s one-forward-pass recipe, §7.3), then serves a batch through
-the fused generation engine (launch/engine.py): prefill is one dispatch,
-the WHOLE decode loop is one more (lax.scan with the cache donated --
-no per-token host round-trip, no per-token cache copy).  Reports prefill
-latency and decode-only throughput separately (a single folded tok/s
-number hides the prefill/decode asymmetry the paper's bandwidth argument
-is about), plus the measured persistent-cache compression ratio straight
-from the policy API -- serving and benchmarks share one byte-accounting
-method and cannot drift.
+paper's ~2 s one-forward-pass recipe, §7.3), then serves a queue of
+requests with MIXED prompt lengths through the continuous-batching
+engine (launch/batch_engine.py): up to ``--max-batch`` requests share
+one ragged slot cache, every decode chunk is one donated-buffer
+``lax.scan`` dispatch, finished rows are masked (never re-traced) and
+their slots are immediately refilled from the queue.  Responses stream
+per chunk.  Reports per-request prefill latency and aggregate decode
+throughput separately (a single folded tok/s number hides the
+prefill/decode asymmetry the paper's bandwidth argument is about), plus
+the measured persistent-cache compression ratio straight from the
+policy API -- serving and benchmarks share one byte-accounting method
+and cannot drift.
+
+Families with recurrent state (ssm/hybrid/audio) have no ragged slot
+semantics yet and are served single-stream through launch/engine.py.
 """
 from __future__ import annotations
 
@@ -35,6 +42,7 @@ from repro.core import calibrate as C
 from repro.core.cache_api import AttendBackend, available_policies
 from repro.core.transforms import Rotation
 from repro.data import DataIterator, SyntheticCorpus
+from repro.launch.batch_engine import BatchEngine, Request
 from repro.launch.engine import Engine, Sampler
 from repro.launch.train import smoke_config
 from repro.models import build_model
@@ -63,8 +71,18 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="internlm2-1.8b")
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--max-batch", type=int, default=4,
+                    help="slot-cache capacity: max requests decoding "
+                         "together in one dispatch")
+    ap.add_argument("--requests", type=int, default=8,
+                    help="number of queued requests (mixed prompt "
+                         "lengths) to serve")
+    ap.add_argument("--chunk", type=int, default=8,
+                    help="decode tokens per scheduler quantum (one "
+                         "fused dispatch each)")
+    ap.add_argument("--prompt-len", type=int, default=64,
+                    help="longest prompt; the queue mixes this with "
+                         "shorter ones (ragged batching)")
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--policy", default=None,
                     help=f"cache policy name (default: config; "
@@ -104,7 +122,7 @@ def main():
             print(f"[load] checkpoint step {last}")
 
     it = DataIterator(SyntheticCorpus(args.seed + 1),
-                      batch_per_shard=args.batch,
+                      batch_per_shard=max(args.requests, 1),
                       seq_len=args.prompt_len)
     prompt = jnp.asarray(it.next()["tokens"])
 
@@ -115,27 +133,92 @@ def main():
     rots = None
     if args.calibrate and policy is not None \
             and hasattr(policy, "rotation"):
-        rots = model.init_rotations(jax.random.PRNGKey(7))
-        t0 = time.time()
-        rots = calibrate_lambdas(model, params, prompt, rots)
-        print(f"[calibrate] per-channel lambda in {time.time()-t0:.1f}s")
+        if cfg.family not in ("dense", "moe", "vlm"):
+            # collect_kv (the calibration forward pass) only exists for
+            # pure-attention families
+            print(f"[calibrate] skipped: family={cfg.family} has no "
+                  f"KV-collection pass")
+        else:
+            rots = model.init_rotations(jax.random.PRNGKey(7))
+            t0 = time.time()
+            rots = calibrate_lambdas(model, params, prompt[:4], rots)
+            print(f"[calibrate] per-channel lambda in "
+                  f"{time.time()-t0:.1f}s")
 
-    # headroom + round up to the policy's residual-window multiple (1 for
-    # window-free policies), derived instead of a hardcoded 16
+    sampler = Sampler(temperature=args.temperature, top_k=args.top_k)
+    key = jax.random.PRNGKey(args.seed + 2)
+    ragged_ok = cfg.kv_applicable and cfg.family in ("dense", "moe", "vlm")
+    if not ragged_ok:
+        return _serve_single_stream(cfg, model, params, prompt, policy,
+                                    backend, sampler, args, key, rots)
+
+    # ragged queue: a few prompt-length buckets so prefill compiles once
+    # per bucket, not per request; decode is length-oblivious (masks)
     window = getattr(policy, "window", 1) if policy is not None else 1
     s_max = args.prompt_len + args.new_tokens + window
     s_max += (-s_max) % max(window, 1)
-    cache = model.init_cache(args.batch, s_max, policy=policy, rots=rots,
-                             key=jax.random.PRNGKey(7))
+    buckets = sorted({args.prompt_len, max(args.prompt_len // 2, 1),
+                      max(3 * args.prompt_len // 4, 1)})
+    requests = [
+        Request(rid=i,
+                prompt=np.asarray(prompt[i % prompt.shape[0],
+                                         :buckets[i % len(buckets)]]),
+                max_new_tokens=args.new_tokens)
+        for i in range(args.requests)
+    ]
 
-    # fused engine: prefill = one dispatch, decode loop = one dispatch
-    # (scan; cache donated).  Prefill and decode are driven separately so
-    # their costs are reported separately.
-    engine = Engine(
-        model, backend=backend,
-        sampler=Sampler(temperature=args.temperature, top_k=args.top_k),
+    engine = BatchEngine(
+        model, params, capacity=args.max_batch, s_max=s_max,
+        policy=policy, backend=backend, sampler=sampler,
+        chunk=args.chunk, rots=rots, key=jax.random.PRNGKey(7),
     )
-    key = jax.random.PRNGKey(args.seed + 2)
+    pname = policy.name if policy is not None else "-"
+    print(f"[serve] arch={cfg.name} policy={pname} "
+          f"backend={backend.value} max-batch={args.max_batch} "
+          f"requests={args.requests} prompts={buckets} "
+          f"new={args.new_tokens} chunk={args.chunk} "
+          f"(continuous batching: ragged slot cache, donated scan chunks)")
+
+    for r in requests:
+        engine.submit(r)
+    t0 = time.time()
+    n_tok = 0
+    done = []
+    while engine.pending or engine.n_active:
+        events, completions = engine.step()
+        for rid, toks in events:  # streaming responses, chunk granularity
+            n_tok += len(toks)
+        for comp in completions:
+            done.append(comp)
+            text = "".join(chr(c) if 32 <= c < 127 else "?"
+                           for c in comp.tokens[:24].tolist())
+            print(f"  [done] rid={comp.rid} prompt={comp.prompt_len} "
+                  f"+{len(comp.tokens)} tok ({comp.finish_reason}) "
+                  f"{text!r}")
+    t_total = time.time() - t0
+
+    print(f"  served {len(done)} requests, {n_tok} tokens in "
+          f"{t_total:.2f}s -> {n_tok / max(t_total, 1e-9):.1f} tok/s "
+          f"aggregate (CPU; incl. one-time compile)")
+    if policy is not None:
+        state = engine.cache["attn"]
+        print(f"  slot cache persistent KV: {policy.nbytes(state)/1e3:.1f}"
+              f" KB ({policy.compression_ratio(state):.2f}x vs bf16, "
+              f"policy API)")
+
+
+def _serve_single_stream(cfg, model, params, prompt, policy, backend,
+                         sampler, args, key, rots=None):
+    """Recurrent-state families: fused single-stream engine (no ragged
+    slot semantics for ssm/hybrid caches yet)."""
+    window = getattr(policy, "window", 1) if policy is not None else 1
+    s_max = args.prompt_len + args.new_tokens + window
+    s_max += (-s_max) % max(window, 1)
+    batch = min(args.max_batch, prompt.shape[0])
+    prompt = prompt[:batch]
+    cache = model.init_cache(batch, s_max, policy=policy, rots=rots,
+                             key=jax.random.PRNGKey(7))
+    engine = Engine(model, backend=backend, sampler=sampler)
 
     t0 = time.time()
     logits, cache = engine.prefill(params, prompt, cache)
@@ -154,13 +237,13 @@ def main():
     pname = policy.name if policy is not None else "-"
     ms_tok = t_decode * 1e3 / max(n_steps, 1)
     print(f"[serve] arch={cfg.name} policy={pname} "
-          f"backend={backend.value} batch={args.batch} "
+          f"backend={backend.value} batch={batch} "
           f"prompt={args.prompt_len} new={args.new_tokens} "
-          f"(fused scan decode, donated cache)")
+          f"(fused scan decode, donated cache; single-stream family)")
     print(f"  prefill: {t_prefill*1e3:.0f} ms "
-          f"({args.batch * args.prompt_len / t_prefill:.0f} prompt tok/s)")
+          f"({batch * args.prompt_len / t_prefill:.0f} prompt tok/s)")
     print(f"  decode:  {ms_tok:.1f} ms/tok   "
-          f"{args.batch * n_steps / max(t_decode, 1e-9):.1f} tok/s "
+          f"{batch * n_steps / max(t_decode, 1e-9):.1f} tok/s "
           f"decode-only (CPU; incl. one-time compile)")
     if policy is not None and "attn" in cache:
         state = cache["attn"]

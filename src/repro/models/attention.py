@@ -119,25 +119,31 @@ def attention_decode(
     cfg,
     cache: CacheState,
     *,
-    position: jax.Array,  # () absolute position of this token
+    position: jax.Array,  # () shared -- or (B,) per-row (ragged batch)
     cross: bool = False,
     kv_block: int = 512,
     backend: AttendBackend | str | None = None,
+    active: jax.Array | None = None,  # (B,) bool, ragged caches only
 ):
     """One-token decode against the cache.  Returns (y, new_cache).
 
     The cache state's policy owns both the append (``update``) and the
     read (``attend``); ``backend`` picks the read path (defaults to
     AttendBackend.GATHER, the GSPMD-friendly multi-chip serve path).
+    With a ragged cache, ``position`` is the per-row (B,) position (each
+    row RoPE-rotates at its own offset) and ``active`` masks rows whose
+    requests have finished (their cache length does not advance).
     """
     if cross:
         # cross-attention decode: read-only cache (filled at prefill)
         q = common.dense(p["wq"], x).transpose(0, 2, 1, 3)
         new_cache = cache
     else:
-        pos = position[None] if position.ndim == 0 else position
+        # scalar -> (1,) shared positions; ragged (B,) -> (B, 1) so
+        # apply_rope rotates each row at its own absolute position
+        pos = position[None] if position.ndim == 0 else position[:, None]
         q, k, v = _project_qkv(p, x, cfg, pos)
-        new_cache = cache.policy.update(cache, k, v)
+        new_cache = cache.policy.update(cache, k, v, active=active)
 
     o = new_cache.policy.attend(
         q, new_cache, scale=cfg.head_dim ** -0.5, backend=backend,

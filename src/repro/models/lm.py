@@ -155,14 +155,28 @@ class LM:
     def init_cache(self, batch: int, s_max: int, *,
                    policy: "cache_api.KVCachePolicy | str | None" = None,
                    rots: Optional[Rotations] = None,
-                   key: Optional[jax.Array] = None):
+                   key: Optional[jax.Array] = None,
+                   ragged: bool = False):
         """Build the serving cache.  Rotation state (for policies that
         rotate) lives INSIDE the per-layer cache state: pass ``key`` for
         fresh rotations or ``rots`` (e.g. lambda-calibrated) to embed
         existing ones; prefill/decode_step then need no rotation args.
+
+        ``ragged=True`` builds a continuous-batching slot cache: ``pos``
+        and every policy state's length become per-row (B,) vectors, so
+        each row can hold an independent request at its own prefix
+        length (DESIGN.md §9; attention families only).
         """
         cfg = self.cfg
-        cache: dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+        if ragged and cfg.family not in ("dense", "moe", "vlm"):
+            raise NotImplementedError(
+                f"ragged slot caches need a pure-attention family "
+                f"(got {cfg.family}: recurrent state has no per-row "
+                f"length semantics yet)"
+            )
+        cache: dict[str, Any] = {
+            "pos": jnp.zeros((batch,) if ragged else (), jnp.int32)
+        }
         n_attn = self.n_attn_layers
 
         if n_attn:
@@ -172,7 +186,8 @@ class LM:
             )
             attn = jax.vmap(
                 lambda k: pol.init_state(
-                    batch, cfg.n_kv_heads, s_max, cfg.head_dim, key=k
+                    batch, cfg.n_kv_heads, s_max, cfg.head_dim, key=k,
+                    ragged=ragged,
                 )
             )(keys)
             if rots is not None:
@@ -262,13 +277,13 @@ class LM:
         return x + h, new_cache
 
     def _block_decode(self, p, x, cache, *, position, kv_block=512,
-                      backend=None):
+                      backend=None, active=None):
         cfg = self.cfg
         h, new_cache = attention.attention_decode(
             p["attn"],
             common.rmsnorm(p["ln_attn"], x, eps=cfg.norm_eps),
             cfg, cache, position=position, kv_block=kv_block,
-            backend=backend,
+            backend=backend, active=active,
         )
         x = x + h
         h_in = common.rmsnorm(p["ln_ffn"], x, eps=cfg.norm_eps)
@@ -473,14 +488,16 @@ class LM:
             x, new_attn = common.scan(
                 body, x, (params["blocks"], cache["attn"])
             )
-            cache = dict(cache, attn=new_attn, pos=jnp.asarray(S, jnp.int32))
+            # full_like keeps ragged caches ragged: every row is at S
+            cache = dict(cache, attn=new_attn,
+                         pos=jnp.full_like(cache["pos"], S))
 
         elif cfg.family == "hybrid":
             x, cache = self._hybrid_prefill(params, x, cache, kv_block)
-            cache["pos"] = jnp.asarray(S, jnp.int32)
+            cache["pos"] = jnp.full_like(cache["pos"], S)
         elif cfg.family == "ssm":
             x, cache = self._xlstm_prefill(params, x, cache)
-            cache["pos"] = jnp.asarray(S, jnp.int32)
+            cache["pos"] = jnp.full_like(cache["pos"], S)
 
         logits = self._unembed(params, x[:, -1:])
         return logits, cache
@@ -562,30 +579,44 @@ class LM:
         return body
 
     def decode_step(self, params, token, cache, *, kv_block: int = 512,
-                    backend=None):
+                    backend=None, active=None):
         """token (B, 1) int32 -> (logits (B,1,V), new cache).  O(1)/step.
 
         ``backend`` (cache_api.AttendBackend or its string value) selects
         the attention read path; None uses the policy default (gather).
         Scan-compatible: the returned cache has the same treedef as the
         input (decode_body packages this for lax.scan).
+
+        Ragged caches (``pos`` of shape (B,)) decode every row at its
+        own position; ``active`` (B,) bool masks finished rows -- their
+        cache length and position stand still, their logits are computed
+        but meaningless (the batch engine discards them).  Masking is
+        data, not shape: no re-trace when requests come and go.
         """
         cfg = self.cfg
         pos = cache["pos"]
+        if active is not None and cfg.family not in ("dense", "moe", "vlm"):
+            raise NotImplementedError(
+                f"active masking needs a ragged slot cache "
+                f"(family={cfg.family} has recurrent state)"
+            )
         x = self._embed(params, token)
 
         if cfg.family in ("dense", "moe", "vlm"):
             def body(x, inp):
                 p, c = inp
                 y, new_c = self._block_decode(
-                    p, x, c, position=pos, kv_block=kv_block, backend=backend
+                    p, x, c, position=pos, kv_block=kv_block,
+                    backend=backend, active=active,
                 )
                 return y, new_c
 
             x, new_attn = common.scan(
                 body, x, (params["blocks"], cache["attn"])
             )
-            cache = dict(cache, attn=new_attn, pos=pos + 1)
+            new_pos = pos + 1 if active is None \
+                else jnp.where(active, pos + 1, pos)
+            cache = dict(cache, attn=new_attn, pos=new_pos)
 
         elif cfg.family == "hybrid":
             def mamba_body(x, inp):

@@ -1,4 +1,5 @@
-"""Fused generation engine (launch/engine.py, DESIGN.md §8).
+"""Fused generation engine (launch/engine.py, DESIGN.md §8) and the
+continuous-batching layer on top of it (launch/batch_engine.py, §9).
 
 Parity: fused ``generate`` must produce bit-identical tokens AND final
 cache state vs the conventional per-step decode loop, for every
@@ -7,6 +8,17 @@ interpret mode on CPU).  Donation: the jitted step must alias its cache
 input (no per-token O(S_max) copy).  Dispatch: the decode loop is a
 single lax.scan inside one jit -- the model's Python decode_step runs
 once (trace), not once per token.
+
+Ragged-parity oracle (ISSUE-3): batched decode over a slot cache with
+MIXED per-row lengths must be bit-identical PER ROW to N independent
+single-sequence Engine runs, for every policy x supported backend --
+the scalar path (validated above against the per-step loop) is the
+oracle for the whole ragged stack.  The oracle runs width-matched
+(each request replicated to the engine's capacity through the classic
+scalar-length cache): XLA CPU matmuls are bit-deterministic per row
+only at a fixed batch width, so width is pinned and everything else --
+cache layout, masking, per-row offsets, chunked scan vs one fused scan
+-- must cancel exactly.
 """
 import jax
 import jax.numpy as jnp
@@ -16,6 +28,7 @@ import pytest
 from repro.configs import get_config, reduced
 from repro.configs.paper_models import SMOL_D64
 from repro.core.cache_api import AttendBackend, available_policies, get_policy
+from repro.launch.batch_engine import BatchEngine, Request
 from repro.launch.engine import GREEDY, Engine, Sampler, generate
 from repro.models import build_model
 
@@ -62,6 +75,7 @@ def _policy_backend_cases():
     return cases
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("policy,backend", _policy_backend_cases())
 def test_generate_bit_identical_to_per_step_loop(lm, policy, backend):
     """Fused scan decode == per-step loop: same tokens, same final cache
@@ -173,6 +187,222 @@ def test_sampler_modes(lm):
     assert GREEDY.temperature == 0.0
 
 
+# ---------------------------------------------------------------------------
+# continuous batching (launch/batch_engine.py, DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+S_MAX = 64
+# mixed prompt lengths straddling the W=16 flush boundary; budgets chosen
+# so rows retire at different chunks (slot reuse mid-decode)
+RAGGED_PROMPTS = (9, 17, 23)
+RAGGED_NEW = (12, 20, 7)
+
+
+def _single_run_tokens(model, params, policy, backend, prompt, n_tokens,
+                       key, width=1):
+    """Oracle: this request alone through the scalar-cache Engine.
+
+    ``width`` replicates the request that many times (classic uniform
+    cache, all rows identical) so the oracle runs at the same batch
+    width as the ragged engine under test: XLA's CPU matmul kernels are
+    only bit-deterministic per row at a FIXED width (a B=1 projection
+    may round a bf16 write differently than the same row inside a B=3
+    gemm), so width-matching is what makes bit-identity a well-posed
+    claim (DESIGN.md §9).  The replicated rows must agree among
+    themselves -- asserted -- making this still a single-sequence
+    decode, just vectorized."""
+    cache = model.init_cache(width, S_MAX, policy=policy, key=key)
+    eng = Engine(model, backend=backend, kv_block=32)
+    toks, _ = eng.generate(
+        params, jnp.asarray(np.tile(prompt[None], (width, 1))), cache,
+        n_tokens,
+    )
+    toks = np.asarray(toks)
+    assert (toks == toks[0]).all()
+    return toks[0]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("policy,backend", _policy_backend_cases())
+def test_batched_ragged_decode_matches_single_runs(lm, policy, backend):
+    """The ISSUE-3 acceptance oracle: a slot cache decoding requests of
+    mixed lengths in one dispatch yields bit-identical per-row token
+    streams to independent single-sequence runs, for every policy x
+    supported backend (kernel in interpret mode: the per-row grid clamp
+    must not change numerics)."""
+    model, params, _ = lm
+    key = jax.random.PRNGKey(7)
+    prompts = [np.asarray(jax.random.randint(
+        jax.random.PRNGKey(40 + i), (L,), 0, SMOL_D64.vocab_size))
+        for i, L in enumerate(RAGGED_PROMPTS)]
+
+    eng = BatchEngine(model, params, capacity=len(prompts), s_max=S_MAX,
+                      policy=policy, backend=backend, kv_block=32,
+                      chunk=4, key=key)
+    for i, (p, n) in enumerate(zip(prompts, RAGGED_NEW)):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=n))
+    got = {c.rid: c for c in eng.run()}
+
+    assert sorted(got) == list(range(len(prompts)))
+    for i, (p, n) in enumerate(zip(prompts, RAGGED_NEW)):
+        ref = _single_run_tokens(model, params, policy, backend,
+                                 p, n, key, width=len(prompts))
+        np.testing.assert_array_equal(
+            got[i].tokens, ref,
+            err_msg=f"{policy}/{backend.value} row {i} diverged from "
+                    f"its single-sequence run",
+        )
+        assert got[i].finish_reason == "length"
+    # per-row lengths account for every admitted token (prompt + all
+    # generated-but-last, which is sampled and returned, not appended)
+    # -- retired slots are reset to zero for reuse
+    np.testing.assert_array_equal(
+        np.asarray(eng.cache["attn"].lengths[0]), 0
+    )
+
+
+@pytest.mark.slow
+def test_slot_scheduler_reuses_slots_and_preserves_parity(lm):
+    """More requests than slots: the queue drains through slot reuse
+    (retire -> reset -> admit) and EVERY request still matches its
+    single-sequence oracle -- mid-flight admissions must not perturb
+    live rows."""
+    model, params, _ = lm
+    key = jax.random.PRNGKey(7)
+    lens = (9, 17, 23, 12, 30)
+    news = (12, 20, 7, 1, 15)
+    prompts = [np.asarray(jax.random.randint(
+        jax.random.PRNGKey(40 + i), (L,), 0, SMOL_D64.vocab_size))
+        for i, L in enumerate(lens)]
+
+    eng = BatchEngine(model, params, capacity=2, s_max=S_MAX,
+                      policy="int4-srft", backend="blockwise",
+                      kv_block=32, chunk=4, key=key)
+    got = {c.rid: c for c in eng.run(
+        [Request(rid=i, prompt=p, max_new_tokens=n)
+         for i, (p, n) in enumerate(zip(prompts, news))]
+    )}
+    assert sorted(got) == list(range(5))
+    for i, (p, n) in enumerate(zip(prompts, news)):
+        ref = _single_run_tokens(model, params, "int4-srft", "blockwise",
+                                 p, n, key, width=2)
+        np.testing.assert_array_equal(got[i].tokens, ref,
+                                      err_msg=f"request {i}")
+
+
+@pytest.mark.slow
+def test_batch_engine_eos_stops_row_without_perturbing_others(lm):
+    """An eos hit retires ONE row mid-chunk; its stream truncates at the
+    eos token and the other rows' streams are untouched."""
+    model, params, _ = lm
+    key = jax.random.PRNGKey(7)
+    prompts = [np.asarray(jax.random.randint(
+        jax.random.PRNGKey(40 + i), (L,), 0, SMOL_D64.vocab_size))
+        for i, L in enumerate((11, 15, 19))]
+    refs = [_single_run_tokens(model, params, "bf16", None, p, 16, key,
+                               width=3)
+            for p in prompts]
+    eos = int(refs[0][len(refs[0]) // 2])  # fires mid-stream in row 0
+
+    eng = BatchEngine(model, params, capacity=3, s_max=S_MAX,
+                      policy="bf16", chunk=4, eos_id=eos, key=key)
+    got = {c.rid: c for c in eng.run(
+        [Request(rid=i, prompt=p, max_new_tokens=16)
+         for i, p in enumerate(prompts)]
+    )}
+    for i, ref in enumerate(refs):
+        hit = np.where(ref == eos)[0]
+        want = ref[:hit[0] + 1] if len(hit) else ref
+        np.testing.assert_array_equal(got[i].tokens, want)
+        assert got[i].finish_reason == (
+            "eos" if len(hit) and hit[0] + 1 < 16 else "length"
+        )
+
+
+def test_batch_engine_masks_without_retracing(lm):
+    """Admissions and retirements are data: the whole serve of 4
+    requests through 2 slots compiles the decode chunk for at most a
+    handful of chunk sizes, never per admission."""
+    model, params, _ = lm
+    eng = BatchEngine(model, params, capacity=2, s_max=S_MAX,
+                      policy="bf16", chunk=4, key=jax.random.PRNGKey(7))
+    prompts = [np.asarray(jax.random.randint(
+        jax.random.PRNGKey(60 + i), (9 + 2 * i,), 0, SMOL_D64.vocab_size))
+        for i in range(4)]
+    list(eng.run([Request(rid=i, prompt=p, max_new_tokens=9)
+                  for i, p in enumerate(prompts)]))
+    assert len(eng._chunk_fns) <= 3, sorted(eng._chunk_fns)
+
+
+def test_batched_ragged_step_donates_cache(lm):
+    """The ragged decode step aliases its slot cache in place: the
+    bandwidth argument must survive batching (no O(capacity x S_max)
+    copy per step)."""
+    model, params, _ = lm
+    cache = model.init_cache(3, S_MAX, policy="int4-srft",
+                             key=jax.random.PRNGKey(7), ragged=True)
+    tok = jnp.zeros((3, 1), jnp.int32)
+    active = jnp.asarray([True, False, True])
+    step = jax.jit(
+        lambda p, t, c, a: model.decode_step(p, t, c, active=a),
+        donate_argnums=(2,),
+    )
+    txt = step.lower(params, tok, cache, active).compile().as_text()
+    assert "input_output_alias" in txt
+    _, new_cache = step(params, tok, cache, active)
+    jax.block_until_ready(new_cache)
+    kv = cache["attn"].data.kv
+    for name in ("k_packed", "k_scales", "v_packed", "v_scales",
+                 "k_residual", "v_residual"):
+        assert getattr(kv, name).is_deleted(), f"{name} was copied"
+    # and the masked row's length did not advance
+    np.testing.assert_array_equal(
+        np.asarray(new_cache["attn"].lengths[0]), [1, 0, 1]
+    )
+
+
+def test_batch_engine_with_calibrated_rotations(lm):
+    """Externally calibrated rotations survive the donation lifecycle:
+    every cache the engine builds embeds a COPY, so donating slot/row
+    caches never deletes the caller's rotation buffers (regression:
+    second admission crashed with 'Array has been deleted'), and the
+    calibrated lambdas demonstrably reach the cache state."""
+    model, params, _ = lm
+    rots = model.init_rotations(jax.random.PRNGKey(3))
+    assert rots is not None
+    eng = BatchEngine(model, params, capacity=1, s_max=S_MAX,
+                      policy="int4-srft", chunk=4, rots=rots,
+                      key=jax.random.PRNGKey(7))
+    prompts = [np.asarray(jax.random.randint(
+        jax.random.PRNGKey(70 + i), (10,), 0, SMOL_D64.vocab_size))
+        for i in range(3)]  # 3 admissions through 1 slot: rots reused
+    got = list(eng.run([Request(rid=i, prompt=p, max_new_tokens=6)
+                        for i, p in enumerate(prompts)]))
+    assert len(got) == 3
+    np.testing.assert_array_equal(
+        np.asarray(eng.cache["attn"].data.rot_k.matrix),
+        np.asarray(rots.k.matrix),
+    )
+    assert not rots.k.matrix.is_deleted()
+
+
+def test_batch_engine_rejects_oversized_and_empty_requests(lm):
+    model, params, _ = lm
+    eng = BatchEngine(model, params, capacity=1, s_max=32, policy="bf16")
+    with pytest.raises(ValueError, match="exceeds s_max"):
+        eng.submit(Request(rid=0, prompt=np.zeros(30, np.int32),
+                           max_new_tokens=8))
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        eng.submit(Request(rid=1, prompt=np.zeros(4, np.int32),
+                           max_new_tokens=0))
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit(Request(rid=2, prompt=np.zeros(0, np.int32),
+                           max_new_tokens=8))
+    with pytest.raises(ValueError, match="capacity"):
+        BatchEngine(model, params, capacity=0, s_max=32, policy="bf16")
+
+
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["whisper-large-v3", "zamba2-7b"])
 def test_exotic_families_generate_fused(arch):
     """EncDec (tuple prompt) and hybrid recurrent caches thread through

@@ -1,0 +1,234 @@
+"""Property-based suite for the quantization/rotation primitives the
+ragged batching engine leans on (ISSUE-3 satellite).
+
+Three invariant families, each written as a ``_check_*`` helper driven
+two ways:
+
+* with ``hypothesis`` installed (the CI full lane), ``test_property_*``
+  explores random shapes/group sizes/magnitudes;
+* without it (the fast lane, bare containers), those tests skip cleanly
+  through tests/_hypothesis_stub.py while ``test_grid_*`` still sweeps a
+  small fixed grid of the same helpers -- the invariants stay covered
+  everywhere, hypothesis only widens the net.
+
+Invariants:
+
+* int4 nibble pack/unpack is a lossless bijection on [-8, 7] codes for
+  any shape with an even last dim (and byte-side: unpack o pack == id);
+* per-group abs-max scales dominate their block (scale >= |x| / qmax,
+  so codes never clip past the representable range), dequant error is
+  bounded by scale/2, and all-zero blocks are safe (positive scale,
+  zero codes, exact-zero dequant, no NaN/inf);
+* SRFT/SRHT rotations are orthonormal at every power-of-two width and
+  stay invertible under calibrated per-channel lambda, so rotated-space
+  attention scores are exact inner products (DESIGN.md §5).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # pragma: no cover - exercised by the fast CI lane
+    from _hypothesis_stub import given, settings, st
+
+from repro.core import packing, quant
+from repro.core.transforms import Rotation, make_rotation, transform_matrix
+
+MAX_EXAMPLES = 25
+
+
+# ---------------------------------------------------------------------------
+# int4 nibble packing
+# ---------------------------------------------------------------------------
+
+def _check_pack_unpack_roundtrip(lead, rows, d_half, seed):
+    """pack o unpack == id for int4 code tensors of any rank-3 shape."""
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(-8, 8, size=(lead, rows, 2 * d_half), dtype=np.int64)
+    packed = packing.pack_int4(jnp.asarray(codes))
+    assert packed.shape == (lead, rows, d_half)
+    assert packed.dtype == jnp.uint8
+    out = packing.unpack_int4(packed)
+    np.testing.assert_array_equal(np.asarray(out), codes)
+
+
+def _check_pack_bijection_on_bytes(d_half, seed):
+    """unpack o pack == id from the byte side: no two code pairs share
+    a byte."""
+    rng = np.random.default_rng(seed)
+    raw = rng.integers(0, 256, size=(3, d_half), dtype=np.uint8)
+    codes = packing.unpack_int4(jnp.asarray(raw))
+    back = packing.pack_int4(codes)
+    np.testing.assert_array_equal(np.asarray(back), raw)
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(
+    lead=st.integers(1, 6),
+    rows=st.integers(1, 9),
+    d_half=st.integers(1, 96),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_property_pack_unpack_roundtrip_any_shape(lead, rows, d_half, seed):
+    _check_pack_unpack_roundtrip(lead, rows, d_half, seed)
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(d_half=st.integers(1, 128), seed=st.integers(0, 2 ** 16))
+def test_property_pack_is_bijection_on_bytes(d_half, seed):
+    _check_pack_bijection_on_bytes(d_half, seed)
+
+
+@pytest.mark.parametrize("lead,rows,d_half,seed",
+                         [(1, 1, 1, 0), (2, 7, 32, 1), (6, 3, 96, 2)])
+def test_grid_pack_unpack_roundtrip(lead, rows, d_half, seed):
+    _check_pack_unpack_roundtrip(lead, rows, d_half, seed)
+    _check_pack_bijection_on_bytes(d_half, seed)
+
+
+# ---------------------------------------------------------------------------
+# per-group abs-max scale invariants
+# ---------------------------------------------------------------------------
+
+def _check_per_group_scale_dominates_block(n, groups, group, bits,
+                                           scale_exp, seed):
+    """scale >= |x| / qmax coordinate-wise (int4: scale >= |x|/7), codes
+    stay in [-qmax, qmax], dequant error <= scale/2 (round-half-even)."""
+    d = groups * group
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, d)).astype(np.float32) * (2.0 ** scale_exp)
+    q = quant.quantize_per_group(jnp.asarray(x), bits, group)
+    qm = quant.qmax(bits)
+    scales = np.asarray(q.scales)  # (n, d//group)
+    codes = np.asarray(q.codes)
+    assert scales.shape == (n, groups)
+    assert (scales > 0).all()
+    xg = np.abs(x.reshape(n, groups, group))
+    # abs-max definition: qmax * scale >= every |x| in the block
+    assert (scales[..., None] * qm >= xg - 1e-6 * xg).all()
+    assert (np.abs(codes) <= qm).all()
+    deq = np.asarray(quant.dequantize_per_group(q, group))
+    err = np.abs(deq - x).reshape(n, groups, group)
+    assert (err <= scales[..., None] * 0.5 * (1 + 1e-5) + 1e-12).all()
+
+
+def _check_zero_block_safety(group, zero_blocks, seed):
+    """All-zero groups (zero-initialized slot rows of a ragged batch)
+    quantize to zero codes with a positive scale and dequantize to
+    EXACT zero -- no NaN/inf anywhere downstream."""
+    rng = np.random.default_rng(seed)
+    d = 4 * group
+    x = rng.standard_normal((2, d)).astype(np.float32)
+    for b in range(zero_blocks):
+        x[:, b * group:(b + 1) * group] = 0.0
+    q = quant.quantize_per_group(jnp.asarray(x), 4, group)
+    scales = np.asarray(q.scales)
+    codes = np.asarray(q.codes).reshape(2, 4, group)
+    assert (scales > 0).all()  # EPS floor, never a 0/0
+    for b in range(zero_blocks):
+        np.testing.assert_array_equal(codes[:, b], 0)
+    deq = np.asarray(quant.dequantize_per_group(q, group))
+    assert np.isfinite(deq).all()
+    np.testing.assert_array_equal(deq[:, :zero_blocks * group], 0.0)
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(
+    n=st.integers(1, 12),
+    groups=st.integers(1, 8),
+    group=st.sampled_from([4, 8, 16, 32]),
+    bits=st.sampled_from([4, 8]),
+    scale_exp=st.integers(-6, 6),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_property_per_group_scale_dominates_block(n, groups, group, bits,
+                                                  scale_exp, seed):
+    _check_per_group_scale_dominates_block(n, groups, group, bits,
+                                           scale_exp, seed)
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(
+    group=st.sampled_from([8, 16, 32]),
+    zero_blocks=st.integers(1, 3),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_property_zero_block_safety(group, zero_blocks, seed):
+    _check_zero_block_safety(group, zero_blocks, seed)
+
+
+@pytest.mark.parametrize("group", [4, 16, 32])
+@pytest.mark.parametrize("bits", [4, 8])
+def test_grid_scale_invariants(group, bits):
+    for scale_exp in (-6, 0, 6):
+        _check_per_group_scale_dominates_block(3, 4, group, bits,
+                                               scale_exp, seed=7)
+    if group >= 8:
+        _check_zero_block_safety(group, 2, seed=7)
+
+
+# ---------------------------------------------------------------------------
+# SRFT rotation orthogonality
+# ---------------------------------------------------------------------------
+
+def _check_rotation_orthonormal(d_exp, kind, seed):
+    """B B^T = I at every power-of-two width, and the materialized
+    matrix agrees with the functional transform."""
+    d = 2 ** d_exp
+    rot = make_rotation(kind, jax.random.PRNGKey(seed), d)
+    M = np.asarray(rot.matrix)
+    np.testing.assert_allclose(M @ M.T, np.eye(d), atol=5e-5)
+    np.testing.assert_allclose(
+        np.asarray(transform_matrix(kind, rot.signs)), M, atol=1e-6
+    )
+
+
+def _check_rotation_roundtrip(d_exp, n, lam_exp, seed):
+    """forward o inverse == id for random shapes AND calibrated
+    per-channel lambda; Parseval holds for the pure (lam=1) rotation."""
+    d = 2 ** d_exp
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    rot = make_rotation("srft", k1, d)
+    lam = jnp.exp(float(lam_exp) * 0.3 * jax.random.normal(k2, (d,)))
+    rot = Rotation(rot.matrix, lam, rot.signs, rot.kind)
+    x = jax.random.normal(k3, (n, 3, d))
+    back = rot.inverse(rot.forward(x))
+    np.testing.assert_allclose(np.asarray(back), np.asarray(x),
+                               atol=2e-4, rtol=2e-4)
+    rot1 = make_rotation("srft", k1, d)
+    y1 = rot1.forward(x)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(y1), axis=-1),
+        np.linalg.norm(np.asarray(x), axis=-1), rtol=1e-4,
+    )
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(
+    d_exp=st.integers(2, 8),
+    kind=st.sampled_from(["srft", "srht"]),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_property_rotation_matrix_orthonormal(d_exp, kind, seed):
+    _check_rotation_orthonormal(d_exp, kind, seed)
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(
+    d_exp=st.integers(2, 7),
+    n=st.integers(1, 16),
+    lam_exp=st.integers(-2, 2),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_property_rotation_roundtrip_random_shapes(d_exp, n, lam_exp, seed):
+    _check_rotation_roundtrip(d_exp, n, lam_exp, seed)
+
+
+@pytest.mark.parametrize("d_exp", [2, 5, 7])
+@pytest.mark.parametrize("kind", ["srft", "srht"])
+def test_grid_rotation_orthonormal(d_exp, kind):
+    _check_rotation_orthonormal(d_exp, kind, seed=11)
+    _check_rotation_roundtrip(d_exp, n=4, lam_exp=1, seed=11)

@@ -14,6 +14,11 @@ import numpy as np
 import pytest
 
 from repro.configs.paper_models import SMOL_D64
+
+# the trained-model fixture alone costs ~100 s: this whole module is an
+# end-to-end oracle sweep, run by the full lane (tier-1) but not the
+# fast -m "not slow" lane
+pytestmark = pytest.mark.slow
 from repro.data import DataIterator, SyntheticCorpus
 from repro.launch.steps import init_train_state, make_train_step
 from repro.models import build_model
