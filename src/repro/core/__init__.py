@@ -9,10 +9,12 @@ Public API:
                  decode_update (the int4 policy's engine)
     cache_api:   KVCachePolicy protocol, CacheState, AttendBackend,
                  register_policy / get_policy registry (DESIGN.md §6)
+    paged:       PagePool block allocator + PagedData page-table cache
+                 state (COW shared prefixes; DESIGN.md §10)
     calibrate:   static_lambda, calibrate (learned lambda/Cayley/Householder)
     quant_attention_ref: rotated-space decode attention oracle
 """
-from repro.core import calibrate, kvcache, packing, quant, transforms
+from repro.core import calibrate, kvcache, packing, paged, quant, transforms
 from repro.core.quant_attention_ref import (
     decode_attention_bf16,
     decode_attention_quant,
@@ -31,6 +33,7 @@ __all__ = [
     "calibrate",
     "kvcache",
     "packing",
+    "paged",
     "quant",
     "transforms",
     "cache_api",

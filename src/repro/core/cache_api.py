@@ -69,8 +69,9 @@ from typing import Any, NamedTuple, Optional, Protocol, runtime_checkable
 import jax
 import jax.numpy as jnp
 
-from repro.core import kvcache, quant
+from repro.core import kvcache, paged, quant
 from repro.core.kvcache import BF16KVCache, QuantKVCache
+from repro.core.paged import PagedData
 from repro.core.quant_attention_ref import (
     decode_attention_bf16,
     decode_attention_bf16_blockwise,
@@ -153,6 +154,14 @@ class CacheState:
         (B,)); static under tracing, so code may branch on it."""
         return self.data.length.ndim == 1
 
+    @property
+    def is_paged(self) -> bool:
+        """True when K/V live in a page pool behind a per-row page
+        table (core/paged.py; DESIGN.md §10).  A type property --
+        static under tracing.  Paged states are always ragged."""
+        return isinstance(self.data, PagedData) \
+            or isinstance(getattr(self.data, "kv", None), PagedData)
+
     def nbytes(self, *, persistent_only: bool = True) -> int:
         return self.policy.nbytes(self, persistent_only=persistent_only)
 
@@ -191,6 +200,10 @@ class KVCachePolicy(Protocol):
                    head_dim: int, *, key: Optional[jax.Array] = None,
                    ragged: bool = False) -> CacheState: ...
 
+    def init_paged(self, batch: int, n_kv_heads: int, s_max: int,
+                   head_dim: int, *, n_pages: int, page_size: int,
+                   key: Optional[jax.Array] = None) -> CacheState: ...
+
     def prefill(self, state: CacheState, k: jax.Array, v: jax.Array
                 ) -> CacheState: ...
 
@@ -208,6 +221,10 @@ class KVCachePolicy(Protocol):
 
     def insert_row(self, state: CacheState, row: CacheState, slot
                    ) -> CacheState: ...
+
+    def insert_row_paged(self, state: CacheState, row: CacheState, slot,
+                         shared_pages: jax.Array, n_shared: jax.Array,
+                         n_new: jax.Array) -> CacheState: ...
 
     def reset_rows(self, state: CacheState, mask: jax.Array
                    ) -> CacheState: ...
@@ -324,10 +341,27 @@ class BF16Policy:
                                           ragged=ragged)
         )
 
+    def init_paged(self, batch, n_kv_heads, s_max, head_dim, *, n_pages,
+                   page_size, key=None):
+        return CacheState(self, paged.init_paged(
+            batch, s_max, page_size=page_size, n_pages=n_pages,
+            leaf_specs=((n_kv_heads, head_dim, jnp.bfloat16),) * 2,
+        ))
+
     def prefill(self, state, k, v):
+        if state.is_paged:
+            raise NotImplementedError(
+                "paged states are filled per row: prefill a dense batch-1 "
+                "ragged state and admit it with insert_row_paged"
+            )
         return CacheState(self, kvcache.bf16_prefill(state.data, k, v))
 
     def update(self, state, k, v, *, active=None):
+        if state.is_paged:
+            return CacheState(self, paged.append_token(
+                state.data,
+                (k.astype(jnp.bfloat16), v.astype(jnp.bfloat16)), active,
+            ))
         if state.is_ragged:
             return CacheState(self, kvcache.bf16_decode_update_ragged(
                 state.data, k, v, active
@@ -338,11 +372,26 @@ class BF16Policy:
         return CacheState(self, kvcache.bf16_decode_update(state.data, k, v))
 
     def insert_row(self, state, row, slot):
+        if state.is_paged:
+            raise NotImplementedError(
+                "paged admission goes through insert_row_paged (the engine "
+                "supplies the COW page plan)"
+            )
         return CacheState(self, jax.tree.map(
             lambda b, r: _insert_row_leaf(b, r, slot), state.data, row.data
         ))
 
+    def insert_row_paged(self, state, row, slot, shared_pages, n_shared,
+                         n_new):
+        rd = row.data  # dense batch-1 ragged BF16KVCache
+        return CacheState(self, paged.insert_row(
+            state.data, (rd.k, rd.v), (), rd.length, slot,
+            shared_pages, n_shared, n_new,
+        ))
+
     def reset_rows(self, state, mask):
+        if state.is_paged:
+            return CacheState(self, paged.reset_rows(state.data, mask))
         return CacheState(self, state.data._replace(
             length=jnp.where(mask, 0, state.data.length)
         ))
@@ -350,9 +399,13 @@ class BF16Policy:
     def attend(self, q, state, *, scale=None, backend=None, kv_block=512,
                sliding_window=None):
         backend = AttendBackend.parse(backend)
+        data = state.data
+        if state.is_paged:
+            kview, vview = paged.gather_view(data)
+            data = BF16KVCache(k=kview, v=vview, length=data.length)
         if backend is AttendBackend.BLOCKWISE:
             return decode_attention_bf16_blockwise(
-                q, state.data, scale=scale, sliding_window=sliding_window,
+                q, data, scale=scale, sliding_window=sliding_window,
                 kv_block=kv_block,
             )
         if backend is not AttendBackend.GATHER:
@@ -361,13 +414,18 @@ class BF16Policy:
                 f"(got {backend.value}); the Pallas kernel is int4-only"
             )
         return decode_attention_bf16(
-            q, state.data, scale=scale, sliding_window=sliding_window
+            q, data, scale=scale, sliding_window=sliding_window
         )
 
     def with_rotations(self, state, rot_k, rot_v):
         return state  # no rotation state
 
     def nbytes(self, state, *, persistent_only=True):
+        if state.is_paged:
+            n = _leaf_bytes(*state.data.pools)
+            if not persistent_only:
+                n += paged.meta_nbytes(state.data)
+            return n
         return _leaf_bytes(state.data.k, state.data.v)
 
     def compression_ratio(self, state) -> float:
@@ -433,6 +491,40 @@ class Int4SRFTPolicy:
             rot_v=make_rotation(self.rotation, kv_, head_dim),
         ))
 
+    def init_paged(self, batch, n_kv_heads, s_max, head_dim, *, n_pages,
+                   page_size, key=None):
+        if head_dim % 2 or head_dim % self.group:
+            raise ValueError(
+                f"head_dim={head_dim} must divide 2 and group={self.group}"
+            )
+        if page_size % self.window:
+            raise ValueError(
+                f"page_size={page_size} must be a multiple of the int4 "
+                f"flush window W={self.window}: a residual flush writes a "
+                f"W-token slab at a W-aligned offset, and the multiple "
+                f"guarantees the slab lands inside one (tail) page "
+                f"(DESIGN.md §10)"
+            )
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        kk, kv_ = jax.random.split(key)
+        return CacheState(self, Int4State(
+            kv=paged.init_paged(
+                batch, s_max, page_size=page_size, n_pages=n_pages,
+                leaf_specs=(
+                    (n_kv_heads, head_dim // 2, jnp.uint8),
+                    (n_kv_heads, head_dim // self.group, jnp.float32),
+                    (n_kv_heads, head_dim // 2, jnp.uint8),
+                    (n_kv_heads, head_dim // self.group, jnp.float32),
+                ),
+                residual_specs=(
+                    (n_kv_heads, self.window, head_dim, jnp.float32),
+                ) * 2,
+            ),
+            rot_k=make_rotation(self.rotation, kk, head_dim),
+            rot_v=make_rotation(self.rotation, kv_, head_dim),
+        ))
+
     def with_rotations(self, state, rot_k, rot_v):
         return CacheState(
             self, state.data._replace(rot_k=rot_k, rot_v=rot_v)
@@ -440,12 +532,22 @@ class Int4SRFTPolicy:
 
     def prefill(self, state, k, v):
         d = state.data
+        if state.is_paged:
+            raise NotImplementedError(
+                "paged states are filled per row: prefill a dense batch-1 "
+                "ragged state and admit it with insert_row_paged"
+            )
         return CacheState(self, d._replace(
             kv=kvcache.prefill(d.kv, d.rot_k, d.rot_v, k, v)
         ))
 
     def update(self, state, k, v, *, active=None):
         d = state.data
+        if state.is_paged:
+            return CacheState(self, d._replace(
+                kv=paged.int4_update_paged(d.kv, d.rot_k, d.rot_v, k, v,
+                                           active)
+            ))
         if state.is_ragged:
             return CacheState(self, d._replace(
                 kv=kvcache.decode_update_ragged(d.kv, d.rot_k, d.rot_v, k, v,
@@ -464,60 +566,106 @@ class Int4SRFTPolicy:
         # have been built with the same rotations -- BatchEngine
         # guarantees this by reusing one init key / calibrated rots).
         d = state.data
+        if state.is_paged:
+            raise NotImplementedError(
+                "paged admission goes through insert_row_paged (the engine "
+                "supplies the COW page plan)"
+            )
         return CacheState(self, d._replace(kv=jax.tree.map(
             lambda b, r: _insert_row_leaf(b, r, slot), d.kv, row.data.kv
         )))
 
+    def insert_row_paged(self, state, row, slot, shared_pages, n_shared,
+                         n_new):
+        d = state.data
+        rkv = row.data.kv  # dense batch-1 ragged QuantKVCache
+        return CacheState(self, d._replace(kv=paged.insert_row(
+            d.kv,
+            (rkv.k_packed, rkv.k_scales, rkv.v_packed, rkv.v_scales),
+            (rkv.k_residual, rkv.v_residual),
+            rkv.length, slot, shared_pages, n_shared, n_new,
+        )))
+
     def reset_rows(self, state, mask):
         d = state.data
+        if state.is_paged:
+            return CacheState(self, d._replace(
+                kv=paged.reset_rows(d.kv, mask)
+            ))
         return CacheState(self, d._replace(kv=d.kv._replace(
             length=jnp.where(mask, 0, d.kv.length)
         )))
+
+    def _dense_kv_view(self, d) -> QuantKVCache:
+        """Per-row dense view of a paged int4 state (jnp read paths
+        gather through the page table; the kernel walks pages)."""
+        kp, ks, vp, vs = paged.gather_view(d.kv)
+        k_res, v_res = d.kv.residual
+        return QuantKVCache(kp, ks, vp, vs, k_res, v_res, d.kv.length)
 
     def attend(self, q, state, *, scale=None, backend=None, kv_block=512,
                sliding_window=None):
         backend = AttendBackend.parse(backend)
         d = state.data
+        is_paged = state.is_paged
+        if backend is AttendBackend.KERNEL and sliding_window is not None:
+            # Mid-request backend/feature mismatch must not kill the
+            # request: serve the step through the blockwise mirror
+            # (same tiling, same numerics) and say so once.
+            global _KERNEL_SLIDING_WINDOW_WARNED
+            if not _KERNEL_SLIDING_WINDOW_WARNED:
+                _KERNEL_SLIDING_WINDOW_WARNED = True
+                warnings.warn(
+                    "int4-srft: the Pallas kernel path does not "
+                    "implement sliding_window; falling back to the "
+                    "BLOCKWISE read path for this and subsequent "
+                    "windowed reads",
+                    RuntimeWarning,
+                    stacklevel=2,
+                )
+            backend = AttendBackend.BLOCKWISE
+        if backend is AttendBackend.KERNEL and is_paged:
+            # paged kernel: the page table rides the scalar prefetch and
+            # the grid walks physical pages (one tile per page) -- the
+            # dense view is never materialized.
+            from repro.kernels.quant_attention import (
+                decode_attention_kernel_paged,
+            )
+
+            return decode_attention_kernel_paged(
+                q, d.kv, d.rot_k, d.rot_v, scale=scale
+            )
+        kv = self._dense_kv_view(d) if is_paged else d.kv
         if backend is AttendBackend.BLOCKWISE:
             return decode_attention_quant_blockwise(
-                q, d.kv, d.rot_k, d.rot_v, scale=scale,
+                q, kv, d.rot_k, d.rot_v, scale=scale,
                 sliding_window=sliding_window, kv_block=kv_block,
             )
         if backend is AttendBackend.KERNEL:
-            if sliding_window is not None:
-                # Mid-request backend/feature mismatch must not kill the
-                # request: serve the step through the blockwise mirror
-                # (same tiling, same numerics) and say so once.
-                global _KERNEL_SLIDING_WINDOW_WARNED
-                if not _KERNEL_SLIDING_WINDOW_WARNED:
-                    _KERNEL_SLIDING_WINDOW_WARNED = True
-                    warnings.warn(
-                        "int4-srft: the Pallas kernel path does not "
-                        "implement sliding_window; falling back to the "
-                        "BLOCKWISE read path for this and subsequent "
-                        "windowed reads",
-                        RuntimeWarning,
-                        stacklevel=2,
-                    )
-                return decode_attention_quant_blockwise(
-                    q, d.kv, d.rot_k, d.rot_v, scale=scale,
-                    sliding_window=sliding_window, kv_block=kv_block,
-                )
             from repro.kernels.quant_attention import decode_attention_kernel
 
             return decode_attention_kernel(
-                q, d.kv, d.rot_k, d.rot_v, scale=scale, blk=kv_block
+                q, kv, d.rot_k, d.rot_v, scale=scale, blk=kv_block
             )
         return decode_attention_quant(
-            q, d.kv, d.rot_k, d.rot_v, scale=scale,
+            q, kv, d.rot_k, d.rot_v, scale=scale,
             sliding_window=sliding_window,
         )
 
     def nbytes(self, state, *, persistent_only=True):
         """Cache bytes.  ``persistent_only`` counts the O(S) packed codes +
-        scales; otherwise the O(W) fp32 residual window is included.  The
-        rotation matrices are excluded either way: they are O(d^2) model
-        constants (parameters), not per-token cache."""
+        scales (for paged states: the whole page pool -- that is the
+        allocation, mirroring how dense states count their full
+        capacity); otherwise the O(W) fp32 residual window and, for
+        paged states, the page-table + allocator metadata are included.
+        The rotation matrices are excluded either way: they are O(d^2)
+        model constants (parameters), not per-token cache."""
+        if state.is_paged:
+            pd = state.data.kv
+            n = _leaf_bytes(*pd.pools)
+            if not persistent_only:
+                n += _leaf_bytes(*pd.residual) + paged.meta_nbytes(pd)
+            return n
         kv = state.data.kv
         n = _leaf_bytes(kv.k_packed, kv.k_scales, kv.v_packed, kv.v_scales)
         if not persistent_only:
@@ -527,8 +675,9 @@ class Int4SRFTPolicy:
     def compression_ratio(self, state) -> float:
         """bf16-equivalent bytes / persistent bytes (paper §4.5)."""
         kv = state.data.kv
-        d = kv.k_packed.shape[-1] * 2
-        n_vectors = kv.k_packed.size // (d // 2)  # K vectors incl. layer axis
+        k_packed = kv.pools[0] if state.is_paged else kv.k_packed
+        d = k_packed.shape[-1] * 2
+        n_vectors = k_packed.size // (d // 2)  # K vectors incl. layer axis
         bf16 = 2 * 2 * n_vectors * d  # K and V at 2 B/coord
         return bf16 / self.nbytes(state)
 
@@ -579,6 +728,18 @@ class Int8PerTokenPolicy:
             length=jnp.zeros((batch,) if ragged else (), jnp.int32),
         ))
 
+    def init_paged(self, batch, n_kv_heads, s_max, head_dim, *, n_pages,
+                   page_size, key=None):
+        return CacheState(self, paged.init_paged(
+            batch, s_max, page_size=page_size, n_pages=n_pages,
+            leaf_specs=(
+                (n_kv_heads, head_dim, jnp.int8),
+                (n_kv_heads, 1, jnp.float32),
+                (n_kv_heads, head_dim, jnp.int8),
+                (n_kv_heads, 1, jnp.float32),
+            ),
+        ))
+
     def with_rotations(self, state, rot_k, rot_v):
         return state  # rotation-free scheme
 
@@ -613,6 +774,11 @@ class Int8PerTokenPolicy:
         )
 
     def prefill(self, state, k, v):
+        if state.is_paged:
+            raise NotImplementedError(
+                "paged states are filled per row: prefill a dense batch-1 "
+                "ragged state and admit it with insert_row_paged"
+            )
         S = k.shape[-2]
         new = self._write(state, k, v, 0)
         return CacheState(self, new._replace(
@@ -620,6 +786,12 @@ class Int8PerTokenPolicy:
         ))
 
     def update(self, state, k, v, *, active=None):
+        if state.is_paged:
+            kc, ks = self._quant(k)
+            vc, vs = self._quant(v)
+            return CacheState(self, paged.append_token(
+                state.data, (kc, ks, vc, vs), active
+            ))
         lengths = state.data.length
         if state.is_ragged:
             new = self._write_ragged(state, k, v, lengths)
@@ -633,11 +805,26 @@ class Int8PerTokenPolicy:
         return CacheState(self, new._replace(length=lengths + 1))
 
     def insert_row(self, state, row, slot):
+        if state.is_paged:
+            raise NotImplementedError(
+                "paged admission goes through insert_row_paged (the engine "
+                "supplies the COW page plan)"
+            )
         return CacheState(self, jax.tree.map(
             lambda b, r: _insert_row_leaf(b, r, slot), state.data, row.data
         ))
 
+    def insert_row_paged(self, state, row, slot, shared_pages, n_shared,
+                         n_new):
+        rd = row.data  # dense batch-1 ragged Int8State
+        return CacheState(self, paged.insert_row(
+            state.data, (rd.k_codes, rd.k_scales, rd.v_codes, rd.v_scales),
+            (), rd.length, slot, shared_pages, n_shared, n_new,
+        ))
+
     def reset_rows(self, state, mask):
+        if state.is_paged:
+            return CacheState(self, paged.reset_rows(state.data, mask))
         return CacheState(self, state.data._replace(
             length=jnp.where(mask, 0, state.data.length)
         ))
@@ -651,6 +838,10 @@ class Int8PerTokenPolicy:
                 f"(got {backend.value}); tiled dequant is int4-only"
             )
         d = state.data
+        if state.is_paged:
+            kc, ks, vc, vs = paged.gather_view(d)
+            d = Int8State(k_codes=kc, k_scales=ks, v_codes=vc, v_scales=vs,
+                          length=d.length)
         k = quant.dequantize_per_token(
             quant.Quantized(d.k_codes, d.k_scales, 8)
         )
@@ -665,9 +856,15 @@ class Int8PerTokenPolicy:
 
     def nbytes(self, state, *, persistent_only=True):
         d = state.data
+        if state.is_paged:
+            n = _leaf_bytes(*d.pools)
+            if not persistent_only:
+                n += paged.meta_nbytes(d)
+            return n
         return _leaf_bytes(d.k_codes, d.k_scales, d.v_codes, d.v_scales)
 
     def compression_ratio(self, state) -> float:
         d = state.data
-        bf16 = 2 * (d.k_codes.size + d.v_codes.size)
+        k_codes = d.pools[0] if state.is_paged else d.k_codes
+        bf16 = 2 * 2 * k_codes.size
         return bf16 / self.nbytes(state)

@@ -1,0 +1,418 @@
+"""Paged KV-cache pool: block allocator, page tables, COW prefix sharing.
+
+PR 3's slot cache gives every row a dense ``(capacity, H, s_max, ·)``
+stripe, so HBM residency is O(capacity x s_max) even when most rows are
+short.  This module is the memory-management layer that removes that:
+K/V live in fixed-size *pools* of ``(n_pages, H, page_size, ·)`` blocks,
+each request maps logical token positions to physical pages through a
+per-row *page table*, and a refcounted allocator lets admissions that
+share a prompt prefix map the *same* physical pages (one copy in
+memory, vLLM/PagedAttention style).  Because int4 pages hold ~3.2x the
+tokens of bf16 pages at equal bytes, the paper's free-quantization win
+becomes a free *capacity* win: ~3x more resident sequences per pool
+(DESIGN.md §10).
+
+Layout invariants (DESIGN.md §10):
+
+  * ``page_table[b, j]`` is the physical page holding row ``b``'s
+    tokens ``[j*page_size, (j+1)*page_size)``; unmapped entries hold
+    ``NULL_PAGE`` (page 0, permanently reserved as a scratch/garbage
+    page -- inactive rows' masked writes land there harmlessly).
+  * ``s_max % page_size == 0`` so a row's logical extent is a whole
+    number of table entries (``max_pages = s_max // page_size``).
+  * For the int4 policy, ``page_size % window == 0``: a residual-window
+    flush writes a W-token slab at an offset that is a multiple of W,
+    so the constraint guarantees every slab lands inside ONE page (the
+    tail page) -- paged decode writes exactly one page per step.
+  * Shared (COW) pages are always *full* pages of a prompt prefix and
+    are immutable: decode appends/flushes target positions at or past
+    the packed prefix, which live in later, private pages.  The only
+    writes that can touch a shared page are the int4 non-flush
+    write-backs, which store back the exact bytes they gathered.
+  * ``refcount[p]`` counts the page-table references to page ``p``;
+    free pages are exactly ``refcount == 0`` (the free list is derived
+    from the refcount vector -- one array, no stack to corrupt), and
+    ``pool_alloc`` hands out the lowest-indexed free pages
+    deterministically.
+
+Everything here is pure jnp on static shapes: alloc/free/refcount are
+scatter-adds, the free-list scan is a stable argsort, so the allocator
+threads through jit/vmap (layer stacking replicates the pool state per
+layer; identical ops keep the replicas identical) and is property-
+tested in tests/test_paged.py.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "NULL_PAGE",
+    "PagePool",
+    "PagedData",
+    "pool_init",
+    "pool_n_free",
+    "pool_used",
+    "pool_alloc",
+    "pool_incref",
+    "pool_free",
+    "init_paged",
+    "gather_view",
+    "append_token",
+    "write_slab",
+    "insert_row",
+    "reset_rows",
+    "int4_update_paged",
+    "meta_nbytes",
+]
+
+NULL_PAGE = 0  # reserved scratch page: never allocated, never meaningfully read
+
+
+# ---------------------------------------------------------------------------
+# Block allocator
+# ---------------------------------------------------------------------------
+
+class PagePool(NamedTuple):
+    """Refcounting block allocator over ``n_pages`` physical pages.
+
+    The free list is *derived*: page ``p`` is free iff
+    ``refcount[p] == 0``.  Page 0 (``NULL_PAGE``) is pinned at refcount
+    1 from init so it can never be allocated or freed.
+    """
+
+    refcount: jax.Array  # (n_pages,) int32
+
+
+def pool_init(n_pages: int) -> PagePool:
+    if n_pages < 2:
+        raise ValueError(
+            f"n_pages must be >= 2 (page 0 is the reserved null page), "
+            f"got {n_pages}"
+        )
+    return PagePool(
+        refcount=jnp.zeros((n_pages,), jnp.int32).at[NULL_PAGE].set(1)
+    )
+
+
+def pool_n_free(pool: PagePool) -> jax.Array:
+    """Number of allocatable pages (int32 scalar)."""
+    return jnp.sum((pool.refcount == 0).astype(jnp.int32))
+
+
+def pool_used(pool: PagePool) -> jax.Array:
+    """Pages currently referenced, excluding the pinned null page."""
+    return jnp.sum((pool.refcount > 0).astype(jnp.int32)) - 1
+
+
+def pool_alloc(pool: PagePool, n: jax.Array, max_pages: int
+               ) -> tuple[PagePool, jax.Array]:
+    """Allocate ``n`` pages (traced), returning ``(pool, pages)``.
+
+    ``pages`` has static shape ``(max_pages,)``: the first ``n`` entries
+    are freshly allocated page ids (lowest free index first --
+    deterministic, so host-side mirrors can predict the device's
+    choice), the rest are ``NULL_PAGE``.  Callers must ensure
+    ``n <= pool_n_free(pool)`` (the batch engine's admission control
+    does); the allocator itself clamps to the free supply so it can
+    never hand out an in-use page.
+    """
+    rc = pool.refcount
+    n_pages = rc.shape[0]
+    # stable argsort of the "in use" flag: free ids first, ascending
+    order = jnp.argsort(rc != 0, stable=True)
+    i = jnp.arange(max_pages)
+    valid = (i < n) & (i < pool_n_free(pool))
+    pages = jnp.where(valid, order[jnp.minimum(i, n_pages - 1)], NULL_PAGE)
+    refcount = rc.at[pages].add(valid.astype(jnp.int32))
+    return PagePool(refcount), pages
+
+
+def pool_incref(pool: PagePool, pages: jax.Array) -> PagePool:
+    """Add one reference to every non-null page id in ``pages``."""
+    pages = pages.reshape(-1)
+    valid = pages != NULL_PAGE
+    return PagePool(pool.refcount.at[pages].add(valid.astype(jnp.int32)))
+
+
+def pool_free(pool: PagePool, pages: jax.Array,
+              valid: jax.Array | None = None) -> PagePool:
+    """Drop one reference per (non-null, valid) page id; refcounts are
+    clamped at zero so a double free cannot wrap a live page negative
+    (the property suite asserts the clamp and that counts hit zero
+    exactly once under balanced use)."""
+    pages = pages.reshape(-1)
+    mask = pages != NULL_PAGE
+    if valid is not None:
+        mask = mask & valid.reshape(-1)
+    dec = pool.refcount.at[pages].add(-mask.astype(jnp.int32))
+    return PagePool(jnp.maximum(dec, 0))
+
+
+# ---------------------------------------------------------------------------
+# Paged cache state
+# ---------------------------------------------------------------------------
+
+class PagedData(NamedTuple):
+    """Policy-agnostic paged cache state.
+
+    ``pools`` is an ordered tuple of ``(n_pages, H, page_size, c_i)``
+    arrays -- the paged counterparts of a policy's dense seq-major
+    leaves, in the policy's own order (bf16: ``(k, v)``; int8:
+    ``(k_codes, k_scales, v_codes, v_scales)``; int4: ``(k_packed,
+    k_scales, v_packed, v_scales)``).  ``residual`` holds per-row
+    leaves that are NOT paged (the int4 fp32 window, O(W) per row).
+    ``page_table`` is ``(B, max_pages)`` int32 and ``length`` is the
+    ragged per-row ``(B,)`` vector every ragged read path masks with.
+    """
+
+    pools: tuple
+    residual: tuple
+    page_table: jax.Array  # (B, max_pages) int32
+    length: jax.Array      # (B,) int32
+    pool: PagePool
+
+    @property
+    def page_size(self) -> int:
+        return self.pools[0].shape[-2]
+
+    @property
+    def n_pages(self) -> int:
+        return self.pools[0].shape[0]
+
+    @property
+    def max_pages(self) -> int:
+        return self.page_table.shape[-1]
+
+    @property
+    def s_max(self) -> int:
+        return self.max_pages * self.page_size
+
+
+def init_paged(batch: int, s_max: int, *, page_size: int, n_pages: int,
+               leaf_specs: tuple, residual_specs: tuple = ()) -> PagedData:
+    """Build a zeroed paged state.
+
+    ``leaf_specs`` is a tuple of ``(H, c, dtype)`` per pooled leaf;
+    ``residual_specs`` a tuple of ``(H, W, d, dtype)`` per per-row
+    leaf.  ``s_max`` must divide into whole pages.
+    """
+    if page_size < 1:
+        raise ValueError(f"page_size must be >= 1, got {page_size}")
+    if s_max % page_size:
+        raise ValueError(
+            f"s_max={s_max} must be a multiple of page_size={page_size}"
+        )
+    max_pages = s_max // page_size
+    return PagedData(
+        pools=tuple(
+            jnp.zeros((n_pages, h, page_size, c), dtype)
+            for h, c, dtype in leaf_specs
+        ),
+        residual=tuple(
+            jnp.zeros((batch, h, w, d), dtype)
+            for h, w, d, dtype in residual_specs
+        ),
+        page_table=jnp.full((batch, max_pages), NULL_PAGE, jnp.int32),
+        length=jnp.zeros((batch,), jnp.int32),
+        pool=pool_init(n_pages),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Reads: gather the per-row dense view through the page table
+# ---------------------------------------------------------------------------
+
+def gather_view(pd: PagedData) -> tuple:
+    """Dense per-row views ``(B, H, s_max, c_i)`` of every pool.
+
+    This is how the jnp read paths "gather through the page table":
+    the gathered view is bit-identical to the dense slot cache's buffer
+    at every valid position (positions >= length read whatever page the
+    table maps -- including the null page -- and are masked by every
+    attention path exactly as dense garbage is).  The Pallas kernel
+    never materializes this view; it walks physical pages directly.
+    """
+    pt = pd.page_table  # (B, MP)
+
+    def g(pool_leaf):
+        t = jnp.take(pool_leaf, pt, axis=0)  # (B, MP, H, ps, c)
+        B, MP, H, ps, c = t.shape
+        return t.transpose(0, 2, 1, 3, 4).reshape(B, H, MP * ps, c)
+
+    return tuple(g(p) for p in pd.pools)
+
+
+# ---------------------------------------------------------------------------
+# Writes: tail-page only
+# ---------------------------------------------------------------------------
+
+def _tail_page(pd: PagedData, pos: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(page ids (B,), in-page offsets (B,)) for per-row positions."""
+    ps = pd.page_size
+    page = jnp.take_along_axis(pd.page_table, (pos // ps)[:, None],
+                               axis=1)[:, 0]
+    return page, pos % ps
+
+
+def append_token(pd: PagedData, vals: tuple,
+                 active: jax.Array | None = None) -> PagedData:
+    """Ragged paged append: row ``b`` writes one token at position
+    ``L_b`` of its own tail page (a scatter: in-place under donation,
+    O(1) HBM traffic per row).  Inactive rows write too -- at a
+    position >= their unchanged length, or into the null page once
+    retired -- and are masked by every read (DESIGN.md §9 invariant 2
+    carries over unchanged)."""
+    page, off = _tail_page(pd, pd.length)
+    pools = tuple(
+        p.at[page, :, off, :].set(v[:, :, 0, :].astype(p.dtype))
+        for p, v in zip(pd.pools, vals)
+    )
+    new_len = pd.length + 1 if active is None \
+        else jnp.where(active, pd.length + 1, pd.length)
+    return pd._replace(pools=pools, length=new_len)
+
+
+def write_slab(pd: PagedData, slabs: tuple, starts: jax.Array,
+               do: jax.Array) -> PagedData:
+    """Write a W-token slab per row at absolute position ``starts[b]``
+    (the int4 flush).  ``starts`` must be in-page-aligned such that the
+    slab never straddles a page boundary (guaranteed by
+    ``page_size % W == 0`` + W-aligned flush offsets).  Rows with
+    ``do[b]`` False write back the bytes they gathered -- bit-unchanged
+    content, donation-safe, and harmless even on a COW-shared page."""
+    W = slabs[0].shape[2]
+    page, off0 = _tail_page(pd, starts)
+    off = off0[:, None] + jnp.arange(W)[None, :]  # (B, W)
+    pidx = page[:, None]  # (B, 1)
+
+    def put(pool_leaf, slab):
+        cur = pool_leaf[pidx, :, off, :]  # (B, W, H, c)
+        new = jnp.where(do[:, None, None, None],
+                        slab.transpose(0, 2, 1, 3).astype(pool_leaf.dtype),
+                        cur)
+        return pool_leaf.at[pidx, :, off, :].set(new)
+
+    return pd._replace(
+        pools=tuple(put(p, s) for p, s in zip(pd.pools, slabs))
+    )
+
+
+# ---------------------------------------------------------------------------
+# Admission / retirement
+# ---------------------------------------------------------------------------
+
+def insert_row(pd: PagedData, dense_leaves: tuple, residual_rows: tuple,
+               row_length: jax.Array, slot, shared_pages: jax.Array,
+               n_shared: jax.Array, n_new: jax.Array) -> PagedData:
+    """Admit a freshly prefilled dense batch-1 row into slot ``slot``.
+
+    ``shared_pages`` is a ``(max_pages,)`` id vector whose first
+    ``n_shared`` entries are COW prefix pages found by the engine's
+    prefix index (refcounts are bumped, bytes untouched); ``n_new``
+    fresh pages are allocated for the remainder and the row's dense
+    tiles are scattered into them.  Copy-on-write happens *here*, at
+    fork time: the first non-shared page (the partial prefix tail, if
+    any) is a fresh private copy, so later decode writes can never
+    reach a shared page.  All of ``slot``/``shared_pages``/counts may
+    be traced -- admission never recompiles.
+    """
+    MP = pd.max_pages
+    ps = pd.page_size
+    pool, fresh = pool_alloc(pd.pool, n_new, MP)
+    pool = pool_incref(pool, shared_pages)
+    i = jnp.arange(MP)
+    fresh_for_i = fresh[jnp.clip(i - n_shared, 0, MP - 1)]
+    row_pages = jnp.where(i < n_shared, shared_pages, fresh_for_i)
+    write = (i >= n_shared) & (i < n_shared + n_new)
+    # non-written tiles are routed to the null page (garbage dump)
+    tgt = jnp.where(write, row_pages, NULL_PAGE)
+
+    def put(pool_leaf, dense):
+        H, c = dense.shape[1], dense.shape[3]
+        tiles = dense[0].reshape(H, MP, ps, c).transpose(1, 0, 2, 3)
+        return pool_leaf.at[tgt].set(tiles.astype(pool_leaf.dtype))
+
+    residual = tuple(
+        jax.lax.dynamic_update_slice(
+            b, r.astype(b.dtype), (slot,) + (0,) * (b.ndim - 1)
+        )
+        for b, r in zip(pd.residual, residual_rows)
+    )
+    page_table = jax.lax.dynamic_update_slice(
+        pd.page_table, row_pages[None].astype(jnp.int32), (slot, 0)
+    )
+    length = jax.lax.dynamic_update_slice(
+        pd.length, row_length.reshape(1).astype(jnp.int32), (slot,)
+    )
+    return PagedData(
+        pools=tuple(put(p, d) for p, d in zip(pd.pools, dense_leaves)),
+        residual=residual, page_table=page_table, length=length, pool=pool,
+    )
+
+
+def reset_rows(pd: PagedData, mask: jax.Array) -> PagedData:
+    """Retire masked rows: drop one reference per mapped page (shared
+    prefix pages survive while other rows still reference them), null
+    the page-table rows, zero the lengths.  Retired rows keep riding in
+    the decode dispatch; their writes land in the null page."""
+    pages = pd.page_table  # (B, MP)
+    valid = jnp.broadcast_to(mask[:, None], pages.shape)
+    pool = pool_free(pd.pool, pages, valid)
+    page_table = jnp.where(mask[:, None], NULL_PAGE, pages)
+    length = jnp.where(mask, 0, pd.length)
+    return pd._replace(page_table=page_table, length=length, pool=pool)
+
+
+# ---------------------------------------------------------------------------
+# int4 paged decode update (rotate + residual ring + paged flush)
+# ---------------------------------------------------------------------------
+
+def int4_update_paged(pd: PagedData, rot_k, rot_v, k: jax.Array,
+                      v: jax.Array, active: jax.Array | None = None
+                      ) -> PagedData:
+    """Paged mirror of ``kvcache.decode_update_ragged``: the residual
+    ring write is per-row dense (unchanged -- the window is O(W) and
+    never paged), and the W-token flush slab lands in the row's tail
+    page via :func:`write_slab`.  ``page_size % W == 0`` guarantees the
+    slab never straddles pages; flush offsets are >= the admission-time
+    packed length, so they never touch a COW-shared page."""
+    from repro.core.kvcache import _quantize_rotated
+
+    k_res0, v_res0 = pd.residual
+    W = k_res0.shape[-2]
+    d = k_res0.shape[-1]
+    g = d // pd.pools[1].shape[-1]  # scales pool: (..., d // group)
+    L = pd.length
+    kr = rot_k.forward(k)  # (B, H, 1, d)
+    vr = rot_v.forward(v)
+    idx = L % W
+
+    def slot_write(buf, val, off):  # (H, W, d), (H, 1, d), ()
+        return jax.lax.dynamic_update_slice(buf, val, (0, off, 0))
+
+    k_res = jax.vmap(slot_write)(k_res0, kr, idx)
+    v_res = jax.vmap(slot_write)(v_res0, vr, idx)
+
+    flush = idx == W - 1
+    kp, ks = _quantize_rotated(k_res, g)
+    vp, vs = _quantize_rotated(v_res, g)
+    off = jnp.maximum(L + 1 - W, 0)  # W-aligned slab start per row
+    pd = pd._replace(residual=(k_res, v_res))
+    pd = write_slab(pd, (kp, ks, vp, vs), off, flush)
+    new_len = L + 1 if active is None else jnp.where(active, L + 1, L)
+    return pd._replace(length=new_len)
+
+
+# ---------------------------------------------------------------------------
+# Accounting
+# ---------------------------------------------------------------------------
+
+def meta_nbytes(pd: PagedData) -> int:
+    """Bytes of paging metadata: page table + allocator refcounts.
+    Counted under ``persistent_only=False`` so reported compression for
+    paged states is honest about the bookkeeping overhead."""
+    return (pd.page_table.size * pd.page_table.dtype.itemsize
+            + pd.pool.refcount.size * pd.pool.refcount.dtype.itemsize)

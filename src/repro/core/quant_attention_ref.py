@@ -249,7 +249,20 @@ def decode_attention_bf16(
     if sliding_window is not None:
         mask &= pos >= (length - sliding_window)
     logits = jnp.where(mask, logits, -jnp.inf)
-    p = jax.nn.softmax(logits, axis=-1)
+    # Empty-row-safe softmax: a fully-masked row (a retired slot in a
+    # ragged batch, length 0) must yield a FINITE output, not NaN.
+    # jax.nn.softmax gives NaN there (exp(-inf - -inf)); the other read
+    # paths stay finite via their -1e30 sentinel + 1e-30 denominator
+    # floor (they produce a garbage-mean on such rows, which is fine --
+    # the lane is discarded).  With a paged pool finiteness stops being
+    # cosmetic: a NaN lane would write NaN K/V into the shared null
+    # page, and 0 * NaN = NaN would then poison every live row's
+    # masked-position reads (DESIGN.md §10).  This path yields exactly
+    # zero weights on empty rows; for rows with any valid position it
+    # is bit-identical to jax.nn.softmax (same max/exp/sum ops).
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - jnp.where(jnp.isfinite(m), m, 0.0))
+    p = e / jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1e-30)
     out = jnp.einsum("bhgs,bhsd->bhgd", p, v).reshape(B, Hq, 1, d)
     return out.astype(q.dtype)
 

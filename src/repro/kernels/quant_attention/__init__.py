@@ -1,3 +1,6 @@
-from repro.kernels.quant_attention.ops import decode_attention_kernel
+from repro.kernels.quant_attention.ops import (
+    decode_attention_kernel,
+    decode_attention_kernel_paged,
+)
 
-__all__ = ["decode_attention_kernel"]
+__all__ = ["decode_attention_kernel", "decode_attention_kernel_paged"]

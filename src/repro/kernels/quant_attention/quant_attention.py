@@ -34,6 +34,18 @@ prefix lengths streams O(sum_i L_i) packed bytes per step, not
 O(batch x max_i L_i): the short rows' grid steps collapse onto their
 own last valid tile.  Single-request callers pass scalars; the wrapper
 broadcasts them, so the uniform case is unchanged.
+
+Paged KV (DESIGN.md §10): ``quant_decode_attention_paged_fwd`` adds a
+SECOND scalar-prefetch operand -- the per-row page table (B, MP) -- and
+the K/V pools arrive as ``(n_pages*H, page_size, c)`` arrays.  The
+prefetch contract is one grid tile per physical page (blk ==
+page_size): tile ``s`` of row ``b`` fetches block ``page_table[b,
+s_eff] * H + h`` where ``s_eff`` is the same per-row length clamp as
+the dense path, so HBM traffic stays O(sum prefixes) while residency
+is O(allocated pages), not O(batch x s_max).  The kernel BODY is
+byte-identical to the dense one (same tile contents arrive, whatever
+page they were fetched from), which is what makes paged decode
+bit-identical to the dense slot path.
 """
 from __future__ import annotations
 
@@ -44,7 +56,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["quant_decode_attention_fwd"]
+__all__ = ["quant_decode_attention_fwd", "quant_decode_attention_paged_fwd"]
 
 _NEG_INF = -1e30
 
@@ -63,7 +75,7 @@ def _unpack_dequant(p, scales, group):
     return (y * scales[..., None]).reshape(blk, d)
 
 
-def _kernel(
+def _kernel_impl(
     scalars_ref,  # SMEM (2, BH): per-row [packed_len, total_len]
     q_ref,  # (1, G, d) f32 — q_eff, rotation/lam/scale folded
     kp_ref,  # (1, blk, d//2) uint8
@@ -126,6 +138,17 @@ def _kernel(
         pos_r = plen + jax.lax.broadcasted_iota(jnp.int32, (w,), 0)
         online_update(kr_ref[0], vr_ref[0], pos_r < length)
         out_ref[0] = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+
+
+def _kernel(scalars_ref, *rest, blk, group, n_blocks):
+    _kernel_impl(scalars_ref, *rest, blk=blk, group=group, n_blocks=n_blocks)
+
+
+def _kernel_paged(scalars_ref, ptab_ref, *rest, blk, group, n_blocks):
+    # ptab_ref is consumed by the BlockSpec index maps only; the body is
+    # the dense body (identical tile contents => identical numerics).
+    del ptab_ref
+    _kernel_impl(scalars_ref, *rest, blk=blk, group=group, n_blocks=n_blocks)
 
 
 @functools.partial(
@@ -197,3 +220,88 @@ def quant_decode_attention_fwd(
         interpret=interpret,
     )(scalars, q_eff, k_packed, k_scales, v_packed, v_scales,
       k_residual, v_residual)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("group", "page_size", "n_kv_heads", "interpret")
+)
+def quant_decode_attention_paged_fwd(
+    q_eff: jax.Array,  # (BH, G, d) f32 — folded query (see module doc)
+    k_packed: jax.Array,  # (n_pages*H, page_size, d//2) uint8 pool
+    k_scales: jax.Array,  # (n_pages*H, page_size, d//group) f32 pool
+    v_packed: jax.Array,
+    v_scales: jax.Array,
+    k_residual: jax.Array,  # (BH, W, d) f32 (per row, not paged)
+    v_residual: jax.Array,
+    packed_len: jax.Array,  # (BH,) int32 per-row
+    total_len: jax.Array,  # (BH,) int32 per-row
+    page_table: jax.Array,  # (B, MP) int32 physical page per logical tile
+    *,
+    group: int = 32,
+    page_size: int = 16,
+    n_kv_heads: int = 1,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Paged flash-decode: the grid walks physical pages.
+
+    Prefetch contract (DESIGN.md §10): one grid tile per page (blk ==
+    page_size).  Both the per-row length scalars AND the page table are
+    scalar-prefetched; the KV BlockSpec index maps resolve logical tile
+    ``s`` of row ``b`` to pool block ``page_table[b, s_eff] * H + h``,
+    with ``s_eff`` the dense path's per-row length clamp -- steps past a
+    row's prefix re-request its last valid page and Pallas elides the
+    DMA, so per-step HBM traffic is O(sum of prefixes) while pool
+    residency is O(allocated pages).  Returns out_rot (BH, G, d) f32.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    H = n_kv_heads
+    BH, G, dh = q_eff.shape
+    MP = page_table.shape[-1]
+    W = k_residual.shape[1]
+    blk = page_size
+    assert k_packed.shape[1] == blk, (k_packed.shape, blk)
+    n_blocks = MP
+    scalars = jnp.stack([
+        packed_len.astype(jnp.int32).reshape(-1),
+        total_len.astype(jnp.int32).reshape(-1),
+    ])  # (2, BH)
+
+    def kv_tile(bh, s, scalars, ptab):
+        # per-row length clamp (as the dense path), then page-table
+        # indirection: the block index is the PHYSICAL page
+        n_valid = (scalars[0, bh] + blk - 1) // blk
+        s_eff = jnp.minimum(s, jnp.maximum(n_valid - 1, 0))
+        page = ptab[bh // H, s_eff]
+        return (page * H + bh % H, 0, 0)
+
+    def per_row(bh, s, scalars, ptab):
+        return (bh, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(BH, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, G, dh), per_row),
+            pl.BlockSpec((1, blk, dh // 2), kv_tile),
+            pl.BlockSpec((1, blk, dh // group), kv_tile),
+            pl.BlockSpec((1, blk, dh // 2), kv_tile),
+            pl.BlockSpec((1, blk, dh // group), kv_tile),
+            pl.BlockSpec((1, W, dh), per_row),
+            pl.BlockSpec((1, W, dh), per_row),
+        ],
+        out_specs=pl.BlockSpec((1, G, dh), per_row),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, dh), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel_paged, blk=blk, group=group,
+                          n_blocks=n_blocks),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((BH, G, dh), jnp.float32),
+        interpret=interpret,
+    )(scalars, page_table.astype(jnp.int32), q_eff,
+      k_packed, k_scales, v_packed, v_scales, k_residual, v_residual)

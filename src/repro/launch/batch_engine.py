@@ -29,6 +29,21 @@ prefix, not the batch max (DESIGN.md §9).  This module is that layer:
     ragged-parity oracle in tests/test_engine.py asserts this for every
     policy x backend).
 
+Paged mode (``paged=True``; DESIGN.md §10) swaps the dense slot stripes
+for a page pool (core/paged.py): each slot maps its tokens through a
+page table, admission allocates only the pages a request actually
+needs, and requests whose prompts share a page-aligned prefix map the
+SAME physical pages copy-on-write (the engine keeps a host-side prefix
+index keyed by page-aligned token prefixes; hits bump refcounts instead
+of allocating).  Admission control is on free pages: when the pool
+cannot fit the next request, the least-recently-admitted live slot is
+*preempted to the queue* -- its pages are released and a continuation
+request (prompt + generated-so-far, recompute-style) is requeued at the
+front.  Because every cache write is deterministic, recompute rebuilds
+bit-identical pages; ``Completion``s stitch carried tokens back
+together so callers never see the preemption (greedy streams are
+unchanged; temperature streams resample from re-admission).
+
 Typical use::
 
     eng = BatchEngine(model, params, capacity=8, s_max=2048,
@@ -51,6 +66,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.cache_api import AttendBackend
+from repro.core.paged import NULL_PAGE, PagedData
 from repro.launch.engine import GREEDY, Sampler
 
 __all__ = ["Request", "Completion", "BatchEngine"]
@@ -60,11 +76,20 @@ __all__ = ["Request", "Completion", "BatchEngine"]
 class Request:
     """One generation request.  ``max_new_tokens`` counts every sampled
     token, including the one drawn from the prefill logits (the same
-    convention as ``Engine.generate``'s ``n_tokens``)."""
+    convention as ``Engine.generate``'s ``n_tokens``).
+
+    ``resume_tok`` is engine-internal (paged preemption): a preempted
+    request is requeued with its generated-so-far tokens folded into
+    the prompt EXCEPT the last sampled one, which resumes in the token
+    buffer -- re-admission then recomputes the cache bit-identically
+    and draws no admission token, so the continued stream is produced
+    by the same full-width decode dispatch as an unpreempted run
+    (bit-parity survives preemption)."""
 
     rid: int
     prompt: Any  # (S,) int array
     max_new_tokens: int
+    resume_tok: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -91,7 +116,8 @@ class BatchEngine:
                  sampler: Optional[Sampler] = None, kv_block: int = 512,
                  chunk: int = 8, eos_id: Optional[int] = None,
                  rots=None, key: Optional[jax.Array] = None,
-                 donate: bool = True):
+                 donate: bool = True, paged: bool = False,
+                 page_size: int = 16, n_pages: Optional[int] = None):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         if chunk < 1:
@@ -99,7 +125,6 @@ class BatchEngine:
         self.model = model
         self.params = params
         self.capacity = capacity
-        self.s_max = s_max
         self.policy = model.cache_policy(policy)
         self.backend = (
             None if backend is None else AttendBackend.parse(backend)
@@ -112,6 +137,24 @@ class BatchEngine:
         self._rots = rots
         self._init_key = key if key is not None else jax.random.PRNGKey(0)
 
+        self.paged = paged
+        if paged:
+            # logical extent is whole pages; the pool defaults to the
+            # dense slot footprint (capacity x max_pages) + null page --
+            # pass a smaller n_pages to actually oversubscribe (LRU
+            # preemption kicks in when it runs dry)
+            s_max += (-s_max) % page_size
+            self.page_size = page_size
+            self.max_pages = s_max // page_size
+            self.n_pages = (capacity * self.max_pages + 1
+                            if n_pages is None else n_pages)
+            if self.n_pages < self.max_pages + 1:
+                raise ValueError(
+                    f"n_pages={self.n_pages} cannot hold even one full "
+                    f"row ({self.max_pages} pages + the null page)"
+                )
+        self.s_max = s_max
+
         # the slot cache: one ragged CacheState per layer, plus per-row
         # pos.  Row caches built at admission reuse _init_key/_rots so
         # their rotations are bit-identical to the slot cache's (an
@@ -122,6 +165,8 @@ class BatchEngine:
         self.cache = model.init_cache(
             capacity, s_max, policy=self.policy, rots=self._rots_copy(),
             key=self._init_key, ragged=True,
+            n_pages=self.n_pages if paged else None,
+            page_size=page_size if paged else None,
         )
         self.tok = jnp.zeros((capacity, 1), jnp.int32)  # last sampled
         self.active = np.zeros((capacity,), bool)  # host mirror
@@ -131,6 +176,25 @@ class BatchEngine:
         self._queue: deque[Request] = deque()
         self._sample_key = jax.random.fold_in(self._init_key, 0x5A5A)
 
+        if paged:
+            # host-side pool bookkeeping: a refcount mirror drives
+            # admission control, a prefix index maps page-aligned token
+            # prefixes to resident physical pages (COW sharing), and
+            # per-slot admission sequence numbers pick the LRU
+            # preemption victim.  ``_carried``/``_orig`` stitch
+            # preempted requests' token streams back together.
+            self._refcount_host = np.zeros((self.n_pages,), np.int32)
+            self._refcount_host[NULL_PAGE] = 1
+            self._ptab_host = np.full((capacity, self.max_pages),
+                                      NULL_PAGE, np.int32)
+            self._prefix_pages: dict[bytes, int] = {}
+            self._slot_seq = [0] * capacity
+            self._admit_seq = 0
+            self._carried: dict[int, list[int]] = {}
+            self._orig: dict[int, tuple[int, int]] = {}  # rid -> (plen, max_new)
+            self.n_preemptions = 0
+            self.peak_pages = 0
+
         # jit specializes per prompt-length shape on its own; one wrapper
         self._prefill_fn = jax.jit(
             lambda p, t, c: self.model.prefill(p, t, c),
@@ -139,6 +203,9 @@ class BatchEngine:
         self._chunk_fns: dict[int, Any] = {}
         self._insert_fn = jax.jit(
             self._insert_impl, donate_argnums=(0,) if donate else ()
+        )
+        self._insert_paged_fn = jax.jit(
+            self._insert_paged_impl, donate_argnums=(0,) if donate else ()
         )
         self._reset_fn = jax.jit(
             self._reset_impl, donate_argnums=(0,) if donate else ()
@@ -159,6 +226,21 @@ class BatchEngine:
         tok_buf = jax.lax.dynamic_update_slice(tok_buf, tok0, (slot, 0))
         return dict(batched, attn=attn, pos=pos), tok_buf
 
+    def _insert_paged_impl(self, batched, row, slot, tok_buf, tok0,
+                           shared_pages, n_shared, n_new):
+        """Paged admission: COW-share ``n_shared`` prefix pages, allocate
+        ``n_new`` fresh ones (pure pool ops inside the jit), scatter the
+        dense row's tiles into them.  All page arguments are traced --
+        admission never recompiles."""
+        pol = self.policy
+        attn = jax.vmap(
+            pol.insert_row_paged, in_axes=(0, 0, None, None, None, None)
+        )(batched["attn"], row["attn"], slot, shared_pages, n_shared, n_new)
+        pos = jax.lax.dynamic_update_slice(batched["pos"], row["pos"],
+                                           (slot,))
+        tok_buf = jax.lax.dynamic_update_slice(tok_buf, tok0, (slot, 0))
+        return dict(batched, attn=attn, pos=pos), tok_buf
+
     def _reset_impl(self, batched, mask):
         pol = self.policy
         attn = jax.vmap(pol.reset_rows, in_axes=(0, None))(
@@ -166,6 +248,147 @@ class BatchEngine:
         )
         pos = jnp.where(mask, 0, batched["pos"])
         return dict(batched, attn=attn, pos=pos)
+
+    # ------------------------------------------------------- paged pool state
+    def _pd(self) -> PagedData:
+        """Layer-stacked PagedData of the slot cache (leaves lead with
+        the layer axis; layer 0 is the host bookkeeping view -- every
+        layer's pool state is identical by construction)."""
+        d = self.cache["attn"].data
+        return d if isinstance(d, PagedData) else d.kv
+
+    def _sync_pool(self) -> None:
+        """Refresh the host mirrors (refcounts, page table) from layer 0
+        of the device pool, track peak residency, and prune prefix-index
+        entries whose page was freed (a freed page may be reallocated
+        with different content; a stale hit would alias wrong bytes).
+
+        This is a blocking readback, but only at admission/retire time
+        (never per token), the arrays are tiny (one int32 per page +
+        the table), and the caller already blocks on the device there
+        anyway (``_admit`` pulls the sampled token to host).  The
+        allocator's determinism would let the mirror be predicted
+        host-side instead if admission rate ever makes this matter."""
+        pd = self._pd()
+        self._refcount_host = np.asarray(pd.pool.refcount)[0]
+        self._ptab_host = np.asarray(pd.page_table)[0]
+        used = int((self._refcount_host > 0).sum()) - 1  # null pinned
+        self.peak_pages = max(self.peak_pages, used)
+        dead = [k for k, p in self._prefix_pages.items()
+                if self._refcount_host[p] == 0]
+        for k in dead:
+            del self._prefix_pages[k]
+
+    def _pages_needed(self, prompt_len: int, max_new: int) -> int:
+        return -(-(prompt_len + max_new) // self.page_size)
+
+    def _plan_pages(self, req: Request):
+        """Host-side admission plan: walk the prefix index page by page
+        (COW hits must be prefix-contiguous), then check the remainder
+        against the free supply.  Returns (shared_page_ids, n_new) or
+        None when the pool cannot fit the request right now."""
+        prompt = np.asarray(req.prompt, np.int32)
+        ps = self.page_size
+        total = self._pages_needed(prompt.shape[-1], req.max_new_tokens)
+        shared: list[int] = []
+        for i in range(prompt.shape[-1] // ps):
+            page = self._prefix_pages.get(prompt[:(i + 1) * ps].tobytes())
+            if page is None or self._refcount_host[page] == 0:
+                break
+            shared.append(page)
+        n_new = total - len(shared)
+        if n_new > int((self._refcount_host == 0).sum()):
+            return None
+        return shared, n_new
+
+    def _register_prefix(self, req: Request, slot: int) -> None:
+        """Index this row's full prompt pages for future COW admissions.
+        Only *full* prompt pages are registered: they are immutable
+        (decode appends and int4 flushes target positions at or past
+        the admission-time packed length, which live in later pages)."""
+        prompt = np.asarray(req.prompt, np.int32)
+        ps = self.page_size
+        row = self._ptab_host[slot]
+        for i in range(prompt.shape[-1] // ps):
+            self._prefix_pages[prompt[:(i + 1) * ps].tobytes()] = int(row[i])
+
+    def _preempt_one(self, protect_from_seq: int) -> bool:
+        """Preempt the least-recently-admitted live slot to the FRONT of
+        the queue as a recompute continuation (prompt + generated so
+        far, remaining budget).  Frees its pages immediately.  Slots
+        admitted during the CURRENT admission round (seq >=
+        ``protect_from_seq``) are never victims -- preempting work that
+        has not decoded since admission makes no progress and would
+        livelock the admission loop.  Returns False when nothing is
+        eligible."""
+        live = [s for s in range(self.capacity)
+                if self._slot_req[s] is not None
+                and self._slot_seq[s] < protect_from_seq]
+        if not live:
+            return False
+        slot = min(live, key=lambda s: self._slot_seq[s])
+        req = self._slot_req[slot]
+        toks = self._slot_toks[slot]
+        self._carried[req.rid] = self._carried.get(req.rid, []) + list(toks)
+        # prompt absorbs every token the cache has appended: the original
+        # prompt, a still-pending resume token from an earlier
+        # preemption, and all but the last newly sampled token -- which
+        # is sampled-but-not-yet-appended (exactly the dense engine's
+        # state) and resumes in the token buffer at re-admission
+        gen = ([] if req.resume_tok is None else [req.resume_tok]) \
+            + list(toks)
+        cont = Request(
+            rid=req.rid,
+            prompt=np.concatenate([np.asarray(req.prompt, np.int32),
+                                   np.asarray(gen[:-1], np.int32)]),
+            max_new_tokens=req.max_new_tokens - len(toks),
+            resume_tok=int(gen[-1]),
+        )
+        self._queue.appendleft(cont)
+        self._slot_req[slot] = None
+        self._slot_toks[slot] = []
+        self.active[slot] = False
+        self.budget[slot] = 0
+        mask = np.zeros((self.capacity,), bool)
+        mask[slot] = True
+        self.cache = self._reset_fn(self.cache, jnp.asarray(mask))
+        self._sync_pool()
+        self.n_preemptions += 1
+        return True
+
+    def pool_stats(self) -> Optional[dict]:
+        """Pool utilization snapshot (None for dense engines): page
+        counts, live per-request page spans and COW sharing, plus byte
+        accounting (pool bytes from the policy's own nbytes, so serving
+        and benchmarks cannot drift)."""
+        if not self.paged:
+            return None
+        rc = self._refcount_host
+        used = int((rc > 0).sum()) - 1
+        usable = self.n_pages - 1
+        live = [s for s in range(self.capacity)
+                if self._slot_req[s] is not None]
+        mapped = int((self._ptab_host[live] != NULL_PAGE).sum()) if live \
+            else 0
+        pool_bytes = self.policy.nbytes(self.cache["attn"])
+        page_bytes = pool_bytes / self.n_pages
+        return {
+            "n_pages": usable,
+            "page_size": self.page_size,
+            "pages_used": used,
+            "pages_free": usable - used,
+            "utilization": used / max(usable, 1),
+            "peak_pages": self.peak_pages,
+            "live_requests": len(live),
+            "pages_per_request": mapped / max(len(live), 1),
+            "shared_pages": int((rc > 1).sum()),
+            "preemptions": self.n_preemptions,
+            "pool_bytes": int(pool_bytes),
+            "used_page_bytes": int(used * page_bytes),
+            "dense_equiv_bytes": int(
+                page_bytes * self.max_pages * self.capacity
+            ),
+        }
 
     def _chunk_fn(self, n_steps: int):
         fn = self._chunk_fns.get(n_steps)
@@ -214,6 +437,10 @@ class BatchEngine:
                 f"request {req.rid}: prompt ({n}) + max_new_tokens "
                 f"({req.max_new_tokens}) exceeds s_max={self.s_max}"
             )
+        # paged admissibility needs no extra check here: the s_max bound
+        # above caps any request at max_pages pages, and the constructor
+        # floor (n_pages >= max_pages + 1) guarantees the pool can hold
+        # that once everything else is preempted
         self._queue.append(req)
 
     @property
@@ -224,21 +451,52 @@ class BatchEngine:
     def n_active(self) -> int:
         return int(self.active.sum())
 
-    def _admit(self, req: Request, slot: int) -> Optional[Completion]:
-        """Prefill alone, copy into ``slot``, draw the first token."""
+    def _admit(self, req: Request, slot: int, plan=None
+               ) -> Optional[Completion]:
+        """Prefill alone, copy into ``slot``, draw the first token.
+        ``plan`` is the paged (shared_pages, n_new) admission plan."""
         prompt = jnp.asarray(np.asarray(req.prompt)[None, :], jnp.int32)
         row = self.model.init_cache(
             1, self.s_max, policy=self.policy, rots=self._rots_copy(),
             key=self._init_key, ragged=True,
         )
         logits, row = self._prefill_fn(self.params, prompt, row)
-        self._sample_key, sub = jax.random.split(self._sample_key)
-        tok0 = self.sampler.sample(logits[:, -1], sub)[:, None]
-        self.cache, self.tok = self._insert_fn(
-            self.cache, row, jnp.asarray(slot), self.tok, tok0
-        )
+        if req.resume_tok is not None:
+            # preemption resume: the pending token re-enters the tok
+            # buffer; NO admission sample is drawn (the next token must
+            # come from the same full-width decode dispatch that would
+            # have produced it without the preemption -- bit-parity)
+            tok0 = jnp.full((1, 1), req.resume_tok, jnp.int32)
+        else:
+            self._sample_key, sub = jax.random.split(self._sample_key)
+            tok0 = self.sampler.sample(logits[:, -1], sub)[:, None]
+        if self.paged:
+            shared, n_new = plan
+            sp = np.full((self.max_pages,), NULL_PAGE, np.int32)
+            sp[:len(shared)] = shared
+            self.cache, self.tok = self._insert_paged_fn(
+                self.cache, row, jnp.asarray(slot), self.tok, tok0,
+                jnp.asarray(sp), jnp.asarray(len(shared), jnp.int32),
+                jnp.asarray(n_new, jnp.int32),
+            )
+            self._slot_seq[slot] = self._admit_seq
+            self._admit_seq += 1
+            n = int(np.asarray(req.prompt).shape[-1])
+            self._orig.setdefault(req.rid, (n, req.max_new_tokens))
+            self._sync_pool()
+            self._register_prefix(req, slot)
+        else:
+            self.cache, self.tok = self._insert_fn(
+                self.cache, row, jnp.asarray(slot), self.tok, tok0
+            )
         t0 = int(tok0[0, 0])
         self._slot_req[slot] = req
+        if req.resume_tok is not None:
+            # t0 was already counted/streamed before the preemption
+            self._slot_toks[slot] = []
+            self.budget[slot] = req.max_new_tokens
+            self.active[slot] = True
+            return None
         self._slot_toks[slot] = [t0]
         self.budget[slot] = req.max_new_tokens - 1
         done = self.budget[slot] <= 0 or (
@@ -251,18 +509,27 @@ class BatchEngine:
 
     def _retire(self, slot: int) -> Completion:
         req = self._slot_req[slot]
-        toks = np.asarray(self._slot_toks[slot], np.int32)
+        toks = self._slot_toks[slot]
+        max_new = req.max_new_tokens
+        plen = int(np.asarray(req.prompt).shape[-1])
+        if self.paged:
+            # stitch tokens carried across preemptions back on, and
+            # report against the ORIGINAL prompt/budget
+            carried = self._carried.pop(req.rid, [])
+            toks = carried + toks
+            plen, max_new = self._orig.pop(req.rid, (plen, max_new))
+        toks = np.asarray(toks, np.int32)
         reason = (
             "eos" if self.eos_id is not None and len(toks)
             and toks[-1] == self.eos_id
-            and len(toks) < req.max_new_tokens else "length"
+            and len(toks) < max_new else "length"
         )
         self._slot_req[slot] = None
         self._slot_toks[slot] = []
         self.active[slot] = False
         self.budget[slot] = 0
         return Completion(
-            rid=req.rid, prompt_len=int(np.asarray(req.prompt).shape[-1]),
+            rid=req.rid, prompt_len=plen,
             tokens=toks, finish_reason=reason,
         )
 
@@ -274,24 +541,45 @@ class BatchEngine:
         completions: list[Completion] = []
         newly_retired = np.zeros((self.capacity,), bool)
 
-        # admit from the queue into free slots
-        for slot in range(self.capacity):
-            if not self._queue:
+        # admit from the queue into free slots.  Paged mode peeks the
+        # head, plans its pages (COW prefix hits + fresh allocations)
+        # and, when the pool is dry, preempts the LRU live slot to the
+        # queue and replans -- the preempted continuation lands at the
+        # head, so it is also the next admission candidate.  Victims are
+        # only slots from BEFORE this admission round, so the loop
+        # always terminates (each iteration admits, or consumes one
+        # pre-round victim, or breaks).
+        round_start = self._admit_seq if self.paged else 0
+        while self._queue:
+            free = [s for s in range(self.capacity)
+                    if self._slot_req[s] is None]
+            if not free:
                 break
-            if self._slot_req[slot] is None:
-                req = self._queue.popleft()
-                done = self._admit(req, slot)
-                if done is not None:  # finished at admission (eos / n=1)
-                    events.append((req.rid, [int(done.tokens[-1])]))
-                    completions.append(done)
-                    newly_retired[slot] = True  # length back to 0 below
-                else:
-                    events.append((req.rid, [self._slot_toks[slot][0]]))
+            slot = free[0]
+            plan = None
+            if self.paged:
+                plan = self._plan_pages(self._queue[0])
+                if plan is None:
+                    if not self._preempt_one(round_start):
+                        break  # pages return at the end-of-step reset
+                    continue
+            req = self._queue.popleft()
+            done = self._admit(req, slot, plan)
+            if done is not None:  # finished at admission (eos / n=1)
+                events.append((req.rid, [int(done.tokens[-1])]))
+                completions.append(done)
+                # reset NOW, not at end of step: the loop may re-admit
+                # this very slot, and a deferred reset would wipe the
+                # new tenant's row (and, paged, free its pages)
+                mask = np.zeros((self.capacity,), bool)
+                mask[slot] = True
+                self.cache = self._reset_fn(self.cache, jnp.asarray(mask))
+                if self.paged:
+                    self._sync_pool()
+            elif req.resume_tok is None:  # resumes already streamed theirs
+                events.append((req.rid, [self._slot_toks[slot][0]]))
 
-        if not self.active.any():
-            if newly_retired.any():
-                self.cache = self._reset_fn(self.cache,
-                                            jnp.asarray(newly_retired))
+        if not self.active.any():  # admission retires were reset in-loop
             return events, completions
 
         # one fused dispatch: the whole batch advances up to `chunk`
@@ -321,8 +609,12 @@ class BatchEngine:
                 newly_retired[slot] = True
         self.active = still_active.copy()
         if newly_retired.any():  # free the rows: lengths back to zero
+            # (paged: one page-table reference dropped per mapped page;
+            # COW prefix pages survive while other rows hold them)
             self.cache = self._reset_fn(self.cache,
                                         jnp.asarray(newly_retired))
+            if self.paged:
+                self._sync_pool()
         return events, completions
 
     def run(self, requests: Optional[list[Request]] = None

@@ -24,8 +24,17 @@ the measured persistent-cache compression ratio straight from the
 policy API -- serving and benchmarks share one byte-accounting method
 and cannot drift.
 
+``--paged`` swaps the dense slot cache for the paged KV pool
+(DESIGN.md §10): a block allocator + per-row page tables, COW sharing
+of page-aligned common prompt prefixes, admission control on free
+pages with LRU preemption-to-queue, and pool utilization /
+pages-per-request reported next to tok/s.
+
 Families with recurrent state (ssm/hybrid/audio) have no ragged slot
-semantics yet and are served single-stream through launch/engine.py.
+semantics yet and are served single-stream through launch/engine.py;
+both paths print the same policy-API compression report through one
+shared helper (``_cache_report``), so the footprint accounting cannot
+drift between them.
 """
 from __future__ import annotations
 
@@ -92,6 +101,17 @@ def main():
                     help="attention read path for decode")
     ap.add_argument("--no-quant", action="store_true",
                     help="shorthand for --policy bf16")
+    ap.add_argument("--paged", action="store_true",
+                    help="serve through the paged KV pool (block "
+                         "allocator + page tables + COW prefix sharing; "
+                         "DESIGN.md §10)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per physical page (int4: must be a "
+                         "multiple of the flush window W)")
+    ap.add_argument("--pool-pages", type=int, default=None,
+                    help="physical pages in the pool (default: the dense "
+                         "slot footprint; smaller values oversubscribe "
+                         "and exercise LRU preemption)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature (0 = greedy)")
     ap.add_argument("--top-k", type=int, default=0,
@@ -171,13 +191,17 @@ def main():
         model, params, capacity=args.max_batch, s_max=s_max,
         policy=policy, backend=backend, sampler=sampler,
         chunk=args.chunk, rots=rots, key=jax.random.PRNGKey(7),
+        paged=args.paged, page_size=args.page_size, n_pages=args.pool_pages,
     )
     pname = policy.name if policy is not None else "-"
+    layout = (f"paged pool: {engine.n_pages - 1} pages x "
+              f"{engine.page_size} tok, COW prefix sharing"
+              if args.paged else "ragged slot cache")
     print(f"[serve] arch={cfg.name} policy={pname} "
           f"backend={backend.value} max-batch={args.max_batch} "
           f"requests={args.requests} prompts={buckets} "
           f"new={args.new_tokens} chunk={args.chunk} "
-          f"(continuous batching: ragged slot cache, donated scan chunks)")
+          f"(continuous batching: {layout}, donated scan chunks)")
 
     for r in requests:
         engine.submit(r)
@@ -200,17 +224,45 @@ def main():
     print(f"  served {len(done)} requests, {n_tok} tokens in "
           f"{t_total:.2f}s -> {n_tok / max(t_total, 1e-9):.1f} tok/s "
           f"aggregate (CPU; incl. one-time compile)")
-    if policy is not None:
-        state = engine.cache["attn"]
-        print(f"  slot cache persistent KV: {policy.nbytes(state)/1e3:.1f}"
-              f" KB ({policy.compression_ratio(state):.2f}x vs bf16, "
-              f"policy API)")
+    _cache_report(policy, engine.cache.get("attn"), engine=engine)
+
+
+def _cache_report(policy, state, *, engine=None, indent="  "):
+    """One compression/footprint report for BOTH serving paths (the
+    batched engine and the single-stream fallback share it, so the two
+    paths can never drift apart in what they account).  ``state`` is the
+    per-layer-stacked attention CacheState, or None for families with
+    no attention KV cache."""
+    if policy is None or state is None:
+        print(f"{indent}(no attention KV cache: recurrent-state family)")
+        return
+    is_paged = getattr(state, "is_paged", False)
+    kind = "paged pool" if is_paged else "slot cache"
+    extra = "residual+paging metadata" if is_paged else "transient state"
+    total = state.nbytes(persistent_only=False)
+    print(f"{indent}{kind} persistent KV: {policy.nbytes(state)/1e3:.1f} KB "
+          f"({policy.compression_ratio(state):.2f}x vs bf16, policy API; "
+          f"{total/1e3:.1f} KB with {extra})")
+    stats = engine.pool_stats() if engine is not None else None
+    if stats:
+        print(f"{indent}pool: {stats['pages_used']}/{stats['n_pages']} "
+              f"pages used ({100*stats['utilization']:.0f}%, peak "
+              f"{stats['peak_pages']}), {stats['pages_per_request']:.1f} "
+              f"pages/request, {stats['shared_pages']} COW-shared, "
+              f"{stats['preemptions']} preemptions")
+        print(f"{indent}pool bytes: {stats['used_page_bytes']/1e3:.1f} KB "
+              f"live of {stats['pool_bytes']/1e3:.1f} KB pool "
+              f"(dense slot equivalent {stats['dense_equiv_bytes']/1e3:.1f}"
+              f" KB)")
 
 
 def _serve_single_stream(cfg, model, params, prompt, policy, backend,
                          sampler, args, key, rots=None):
     """Recurrent-state families: fused single-stream engine (no ragged
     slot semantics for ssm/hybrid caches yet)."""
+    if getattr(args, "paged", False):
+        print(f"[note] --paged needs a pure-attention family "
+              f"(got {cfg.family}); serving dense single-stream")
     window = getattr(policy, "window", 1) if policy is not None else 1
     s_max = args.prompt_len + args.new_tokens + window
     s_max += (-s_max) % max(window, 1)
@@ -245,11 +297,7 @@ def _serve_single_stream(cfg, model, params, prompt, policy, backend,
     print(f"  decode:  {ms_tok:.1f} ms/tok   "
           f"{batch * n_steps / max(t_decode, 1e-9):.1f} tok/s "
           f"decode-only (CPU; incl. one-time compile)")
-    if policy is not None and "attn" in cache:
-        state = cache["attn"]
-        print(f"  persistent KV: {policy.nbytes(state)/1e3:.1f} KB "
-              f"({policy.compression_ratio(state):.2f}x vs bf16, "
-              f"policy API)")
+    _cache_report(policy, cache.get("attn"))
     sample = "".join(
         chr(c) if 32 <= c < 127 else "?" for c in gen[0].tolist()
     )

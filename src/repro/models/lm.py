@@ -156,7 +156,9 @@ class LM:
                    policy: "cache_api.KVCachePolicy | str | None" = None,
                    rots: Optional[Rotations] = None,
                    key: Optional[jax.Array] = None,
-                   ragged: bool = False):
+                   ragged: bool = False,
+                   n_pages: Optional[int] = None,
+                   page_size: Optional[int] = None):
         """Build the serving cache.  Rotation state (for policies that
         rotate) lives INSIDE the per-layer cache state: pass ``key`` for
         fresh rotations or ``rots`` (e.g. lambda-calibrated) to embed
@@ -166,8 +168,20 @@ class LM:
         and every policy state's length become per-row (B,) vectors, so
         each row can hold an independent request at its own prefix
         length (DESIGN.md §9; attention families only).
+
+        ``n_pages``/``page_size`` build a PAGED slot cache instead
+        (DESIGN.md §10): K/V live in per-layer page pools behind
+        per-row page tables; requires ``ragged=True`` (paged states
+        are always per-row).  Filling goes through the batch engine's
+        ``insert_row_paged`` admission path.
         """
         cfg = self.cfg
+        paged = n_pages is not None or page_size is not None
+        if paged and (n_pages is None or page_size is None):
+            raise ValueError("paged caches need both n_pages and page_size")
+        if paged and not ragged:
+            raise ValueError("paged caches are ragged by construction: "
+                             "pass ragged=True")
         if ragged and cfg.family not in ("dense", "moe", "vlm"):
             raise NotImplementedError(
                 f"ragged slot caches need a pure-attention family "
@@ -184,12 +198,20 @@ class LM:
             keys = jax.random.split(
                 key if key is not None else jax.random.PRNGKey(0), n_attn
             )
-            attn = jax.vmap(
-                lambda k: pol.init_state(
-                    batch, cfg.n_kv_heads, s_max, cfg.head_dim, key=k,
-                    ragged=ragged,
-                )
-            )(keys)
+            if paged:
+                attn = jax.vmap(
+                    lambda k: pol.init_paged(
+                        batch, cfg.n_kv_heads, s_max, cfg.head_dim,
+                        n_pages=n_pages, page_size=page_size, key=k,
+                    )
+                )(keys)
+            else:
+                attn = jax.vmap(
+                    lambda k: pol.init_state(
+                        batch, cfg.n_kv_heads, s_max, cfg.head_dim, key=k,
+                        ragged=ragged,
+                    )
+                )(keys)
             if rots is not None:
                 attn = pol.with_rotations(attn, rots.k, rots.v)
             cache["attn"] = attn
