@@ -28,6 +28,16 @@ root (the per-PR perf trajectory; CI uploads it as an artifact):
    slot footprint, and the measured int4-vs-bf16 page capacity
    multiplier (>= 2.5x sequences at equal pool bytes).
 
+4. CHUNKED PREFILL (ISSUE-5): decode-stream stall during a concurrent
+   2K-token admission -- the p50/p99 inter-token gap of a live decode
+   stream while a long prompt is being admitted, chunked
+   (--prefill-chunk) vs monolithic.  Monolithic admission freezes the
+   stream for the whole prefill (the tail-latency failure mode); the
+   chunked scheduler bounds every gap by one chunk + one decode
+   dispatch.  Recorded as the ``chunked_prefill_no_stall`` claim.
+
+See benchmarks/README.md for the full BENCH_decode.json schema.
+
 Usage:
     PYTHONPATH=src python benchmarks/e2e_decode.py [--smoke] [--quick]
 """
@@ -387,6 +397,101 @@ def measure_paged_pool(*, smoke: bool) -> tuple[list[dict], dict]:
                   "int4_page_capacity_multiplier": round(int4_multiplier, 2)}
 
 
+def measure_chunked_prefill(*, smoke: bool) -> tuple[list[dict], dict]:
+    """Decode-stream stall under a concurrent long-prompt admission
+    (ISSUE-5 acceptance): one live stream decodes while a 2K-token
+    prompt is admitted; we record the stream's inter-token gaps (wall
+    clock between its tokens, a gap per token) across the admission
+    window, monolithic vs chunked prefill.  The claim is the
+    tail-latency inversion: chunked p99 < monolithic p99 (monolithic
+    pays the whole prefill inside one gap; chunked bounds every gap by
+    one chunk dispatch + one decode chunk)."""
+    from repro.configs.paper_models import PAPER_MODELS
+    from repro.launch.batch_engine import BatchEngine, Request
+    from repro.models import build_model
+
+    cfg = PAPER_MODELS["smol-d64"]
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    page_size = 16
+    prompt_len = 2048  # the acceptance workload: a 2K+-token admission
+    chunk_prefill = 256
+    victim_new = 24 if smoke else 48  # decode budget spanning the admission
+    s_max = prompt_len + 64
+    victim_prompt = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(70), (16,), 0, cfg.vocab_size))
+    long_prompt = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(71), (prompt_len,), 0, cfg.vocab_size))
+
+    def serve(prefill_chunk):
+        def mk():
+            return BatchEngine(
+                model, params, capacity=2, s_max=s_max, policy="int4-srft",
+                backend="gather", kv_block=64, chunk=2,
+                key=jax.random.PRNGKey(7), paged=True, page_size=page_size,
+                prefill_chunk=prefill_chunk,
+            )
+
+        def workload(eng):
+            eng.submit(Request(rid=0, prompt=victim_prompt,
+                               max_new_tokens=victim_new))
+            eng.step()  # victim live before the long arrival
+            eng.submit(Request(rid=1, prompt=long_prompt,
+                               max_new_tokens=4))
+            gaps = []
+            last = time.perf_counter()
+            while eng.pending or eng.n_active:
+                events, _ = eng.step()
+                now = time.perf_counter()
+                got = sum(len(t) for r, t in events if r == 0)
+                if got:
+                    gaps.extend([(now - last) / got] * got)
+                    last = now
+            return gaps
+
+        warm = mk()  # compile everything off the clock
+        workload(warm)
+        eng = mk()
+        eng._chunk_fns = warm._chunk_fns
+        eng._prefill_fn = warm._prefill_fn
+        eng._chunk_prefill_fn = warm._chunk_prefill_fn
+        eng._insert_fn = warm._insert_fn
+        eng._insert_paged_fn = warm._insert_paged_fn
+        eng._seed_fn = warm._seed_fn
+        eng._reset_fn = warm._reset_fn
+        gaps = workload(eng)
+        return np.asarray(gaps), eng
+
+    rows = []
+    stats = {}
+    for mode, pc in (("monolithic", None), ("chunked", chunk_prefill)):
+        gaps, eng = serve(pc)
+        row = {
+            "mode": mode, "prefill_chunk": pc, "prompt_len": prompt_len,
+            "victim_tokens": int(gaps.size),
+            "p50_gap_ms": round(float(np.percentile(gaps, 50)) * 1e3, 2),
+            "p99_gap_ms": round(float(np.percentile(gaps, 99)) * 1e3, 2),
+            "max_gap_ms": round(float(gaps.max()) * 1e3, 2),
+            "prefill_chunks": eng.n_prefill_chunks,
+        }
+        rows.append(row)
+        stats[mode] = row
+        print(f"  {mode:10s}: p50 {row['p50_gap_ms']:8.2f} ms  "
+              f"p99 {row['p99_gap_ms']:8.2f} ms  "
+              f"max {row['max_gap_ms']:8.2f} ms  "
+              f"({row['victim_tokens']} victim tokens)")
+    improvement = stats["monolithic"]["p99_gap_ms"] \
+        / max(stats["chunked"]["p99_gap_ms"], 1e-9)
+    print(f"  chunked admission cuts the victim stream's p99 inter-token "
+          f"gap {improvement:.1f}x")
+    claims = {
+        "chunked_prefill_no_stall": bool(
+            stats["chunked"]["p99_gap_ms"] < stats["monolithic"]["p99_gap_ms"]
+        ),
+    }
+    return rows, {**claims, "chunked_p99_improvement": round(improvement, 2)}
+
+
 def run(*, quick: bool = False, smoke: bool = False) -> dict:
     rows = roofline_rows()
     print(fmt_table(rows, ["model", "prefix", "bf16_us", "int4_us",
@@ -402,6 +507,11 @@ def run(*, quick: bool = False, smoke: bool = False) -> dict:
     print("\nmeasured: paged KV pool (batch 8, shared-prefix workload, "
           "COW refcounts + byte accounting)")
     paged_rows, paged_claims = measure_paged_pool(smoke=smoke or quick)
+
+    print("\nmeasured: chunked prefill (decode-stream stall during a "
+          "concurrent 2K-token admission)")
+    chunked_rows, chunked_claims = measure_chunked_prefill(
+        smoke=smoke or quick)
 
     # ISSUE-2 acceptance: fused 64-token decode improves on the per-step
     # loop.  Claimed on the geometric-mean speedup (single rows can lose
@@ -434,6 +544,10 @@ def run(*, quick: bool = False, smoke: bool = False) -> dict:
         # dense slot footprint; int4 pages fit >= 2.5x bf16's sequences
         "paged_capacity_scales": paged_claims["paged_capacity_scales"],
         "int4_page_capacity_2p5x": paged_claims["int4_page_capacity_2p5x"],
+        # ISSUE-5: chunked admission bounds decode-stream stall -- the
+        # victim's p99 inter-token gap beats monolithic admission's
+        "chunked_prefill_no_stall":
+            chunked_claims["chunked_prefill_no_stall"],
     }
 
     measured = []
@@ -468,8 +582,11 @@ def run(*, quick: bool = False, smoke: bool = False) -> dict:
         "engine_measured": engine_rows,
         "batched_measured": batched_rows,
         "paged_measured": paged_rows,
+        "chunked_prefill_measured": chunked_rows,
         "int4_page_capacity_multiplier":
             paged_claims["int4_page_capacity_multiplier"],
+        "chunked_p99_improvement":
+            chunked_claims["chunked_p99_improvement"],
         "fused_geomean_speedup": round(geomean, 3),
         "cpu_measured": measured,
         "smoke": bool(smoke or quick), "claims": claims,
@@ -484,7 +601,10 @@ def run(*, quick: bool = False, smoke: bool = False) -> dict:
             "mixed-length request queues per batch size; paged_measured "
             "rows are the paged pool's shared-prefix workload (batch 8, "
             "common prompt prefix) with COW refcount evidence and peak "
-            "pool bytes vs the dense slot footprint."
+            "pool bytes vs the dense slot footprint; "
+            "chunked_prefill_measured rows are the victim decode "
+            "stream's inter-token gap percentiles while a 2K-token "
+            "prompt is admitted, chunked vs monolithic prefill."
         ),
     }
     save_record("e2e_decode", record)

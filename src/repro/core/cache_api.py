@@ -198,41 +198,156 @@ class KVCachePolicy(Protocol):
 
     def init_state(self, batch: int, n_kv_heads: int, s_max: int,
                    head_dim: int, *, key: Optional[jax.Array] = None,
-                   ragged: bool = False) -> CacheState: ...
+                   ragged: bool = False) -> CacheState:
+        """Build a zeroed dense cache for ``batch`` rows of capacity
+        ``s_max`` tokens.  ``key`` seeds any rotation state (policies
+        without rotations ignore it).  ``ragged=True`` makes ``length``
+        a per-row ``(B,)`` vector (continuous-batching slot cache,
+        DESIGN.md §9); otherwise it is a scalar shared by every row."""
+        ...
 
     def init_paged(self, batch: int, n_kv_heads: int, s_max: int,
                    head_dim: int, *, n_pages: int, page_size: int,
-                   key: Optional[jax.Array] = None) -> CacheState: ...
+                   key: Optional[jax.Array] = None) -> CacheState:
+        """Build a zeroed PAGED cache (DESIGN.md §10): seq-major leaves
+        become ``(n_pages, H, page_size, c)`` pools behind a per-row
+        ``(B, max_pages)`` page table.  Paged states are always ragged.
+        Policies with alignment constraints (int4: ``page_size %
+        window == 0``) must validate them here and raise ``ValueError``
+        up front rather than corrupting pages later."""
+        ...
 
     def prefill(self, state: CacheState, k: jax.Array, v: jax.Array
-                ) -> CacheState: ...
+                ) -> CacheState:
+        """Bulk-insert a whole prompt.  ``k``/``v`` are ``(B, Hkv, S,
+        d)`` post-RoPE projections; every row's length becomes S (ragged
+        states set all rows).  Must be donation-safe: same pytree
+        structure/shapes/dtypes out, old buffers read only as operands
+        of the ops producing their replacements (DESIGN.md §8).  Paged
+        states raise -- they are filled per row via
+        :meth:`insert_row_paged` or :meth:`prefill_chunk`."""
+        ...
 
     def update(self, state: CacheState, k: jax.Array, v: jax.Array,
-               *, active: Optional[jax.Array] = None) -> CacheState: ...
+               *, active: Optional[jax.Array] = None) -> CacheState:
+        """Append ONE decode token per row.  ``k``/``v`` are ``(B, Hkv,
+        1, d)``; row ``i`` writes at its own length ``L_i`` (scalar
+        states: the shared length).  ``active`` is a ``(B,)`` bool mask
+        for ragged/paged states only (passing it to a scalar state
+        raises): rows where it is False still write -- at a position ≥
+        their unchanged length, masked by every read path -- but their
+        length does not advance (DESIGN.md §9 invariant 2; the int4
+        re-flush there is idempotent).  O(1)/O(W) HBM traffic per step,
+        never O(S_max); donation-safe like :meth:`prefill`."""
+        ...
+
+    def prefill_chunk(self, state: CacheState, k: jax.Array, v: jax.Array
+                      ) -> CacheState:
+        """Append a C-token PROMPT CHUNK at each row's own length
+        (chunked prefill, DESIGN.md §11).  ``k``/``v`` are ``(B, Hkv, C,
+        d)`` post-RoPE projections; every row's length advances by C.
+        Works on ragged (per-row scatter of the chunk) and paged states
+        (page-table-routed writes; the int4 W-slabs stay inside one page
+        because ``page_size % W == 0``); scalar states raise.
+
+        Alignment contract (the batch engine enforces it): every row's
+        current length is a multiple of the policy's flush window W
+        (policies without a window: W = 1), and only the final chunk of
+        an admission may have ``C % W != 0`` (its tail lands in the
+        residual ring).  Under that contract a sequence of chunks
+        produces byte-identical state to one monolithic
+        :meth:`prefill` of the concatenated prompt.  Donation-safe like
+        :meth:`prefill`."""
+        ...
 
     def attend(self, q: jax.Array, state: CacheState, *,
                scale: Optional[float] = None,
                backend: "AttendBackend | str | None" = None,
                kv_block: int = 512,
-               sliding_window: Optional[int] = None) -> jax.Array: ...
+               sliding_window: Optional[int] = None) -> jax.Array:
+        """One-token attention read: ``q`` is ``(B, Hq, 1, d)``, the
+        result ``(B, Hq, 1, d)``.  ``backend`` picks the read path
+        (unsupported combinations raise rather than silently degrade);
+        ragged/paged states mask per row against their own lengths and
+        must return finite output even for fully-masked rows (§10
+        degenerate-lane hygiene)."""
+        ...
 
     def with_rotations(self, state: CacheState, rot_k: Rotation,
-                       rot_v: Rotation) -> CacheState: ...
+                       rot_v: Rotation) -> CacheState:
+        """Embed (calibrated) rotations into the state; a no-op for
+        rotation-free schemes.  The returned state must be usable
+        interchangeably with states built from the same rotations --
+        ``insert_row`` requires it."""
+        ...
 
     def insert_row(self, state: CacheState, row: CacheState, slot
-                   ) -> CacheState: ...
+                   ) -> CacheState:
+        """Admit a freshly prefilled batch-1 ragged ``row`` into slot
+        ``slot`` of a capacity-B dense ragged ``state`` (one
+        ``dynamic_update_slice`` per per-row leaf; ``slot`` may be
+        traced, so admission never recompiles).  Shared non-per-row
+        leaves (rotations) stay the batched state's -- both states MUST
+        have been built from the same rotations.  Donation-safe on
+        ``state``; ``row`` is read-only."""
+        ...
 
     def insert_row_paged(self, state: CacheState, row: CacheState, slot,
                          shared_pages: jax.Array, n_shared: jax.Array,
-                         n_new: jax.Array) -> CacheState: ...
+                         n_new: jax.Array) -> CacheState:
+        """Paged admission (DESIGN.md §10): COW-share the first
+        ``n_shared`` pages named by ``shared_pages`` (a ``(max_pages,)``
+        id vector, refcounts bumped, bytes untouched), allocate
+        ``n_new`` fresh pages inside the jit, and scatter the dense
+        ``row``'s tiles into the fresh pages only.  All page arguments
+        may be traced.  The engine supplies the plan from its host
+        refcount mirror and guarantees ``n_new`` free pages exist."""
+        ...
+
+    def adopt_prefix(self, row: CacheState, paged: CacheState,
+                     pages: jax.Array, n_tokens: jax.Array) -> CacheState:
+        """Seed a dense batch-1 ragged ``row`` from resident pages of
+        ``paged`` (token-level prefix reuse, DESIGN.md §11): gather the
+        ``(max_pages,)`` page ids into the row's seq-major leaves
+        (positions past the shared prefix read garbage that chunked
+        prefill overwrites before any read) and set the row length to
+        ``n_tokens``.  For windowed policies ``n_tokens`` must be
+        W-aligned, so every adopted byte comes from packed storage and
+        the residual ring stays in its initial (zero) state -- exactly
+        the state a monolithic prefill of those ``n_tokens`` would leave
+        behind at a flush boundary."""
+        ...
+
+    def raw_kv_view(self, state: CacheState) -> tuple[jax.Array, jax.Array]:
+        """Best-available RAW-space (pre-rotation, post-RoPE) dense
+        ``(B, Hkv, S_max, d)`` K/V views of a dense ragged state, valid
+        on ``[0, packed-aligned length)``.  bf16 returns its buffers
+        bit-exactly; quantized schemes dequantize (and inverse-rotate),
+        so the view carries quantization error -- the chunked-prefill
+        raw side buffer backfill documents this as cache-consistent
+        reads (DESIGN.md §11)."""
+        ...
 
     def reset_rows(self, state: CacheState, mask: jax.Array
-                   ) -> CacheState: ...
+                   ) -> CacheState:
+        """Retire masked rows: lengths back to 0 so slots can be reused
+        (paged states additionally decref every mapped page and null
+        the page-table rows).  Retired rows keep riding in the decode
+        dispatch -- their writes land past their zero length (or in the
+        null scratch page) and every read path masks them."""
+        ...
 
     def nbytes(self, state: CacheState, *, persistent_only: bool = True
-               ) -> int: ...
+               ) -> int:
+        """Cache bytes.  ``persistent_only=True`` counts the O(S)
+        persistent storage (paged states: the whole pool -- that is the
+        allocation); False adds transient state (int4 residual window)
+        and, for paged states, page-table + allocator metadata."""
+        ...
 
-    def compression_ratio(self, state: CacheState) -> float: ...
+    def compression_ratio(self, state: CacheState) -> float:
+        """bf16-equivalent bytes / persistent bytes (paper §4.5)."""
+        ...
 
 
 # ---------------------------------------------------------------------------
@@ -370,6 +485,30 @@ class BF16Policy:
             raise ValueError("active masks need a ragged cache "
                              "(init_state(..., ragged=True))")
         return CacheState(self, kvcache.bf16_decode_update(state.data, k, v))
+
+    def prefill_chunk(self, state, k, v):
+        if state.is_paged:
+            return CacheState(self, paged.append_chunk(
+                state.data,
+                (k.astype(jnp.bfloat16), v.astype(jnp.bfloat16)),
+            ))
+        if not state.is_ragged:
+            raise ValueError("chunked prefill is a ragged/paged lifecycle "
+                             "(init_state(..., ragged=True))")
+        return CacheState(self, kvcache.bf16_prefill_chunk_ragged(
+            state.data, k, v
+        ))
+
+    def adopt_prefix(self, row, paged_state, pages, n_tokens):
+        kview, vview = paged.read_pages(paged_state.data, pages)
+        d = row.data
+        return CacheState(self, BF16KVCache(
+            k=kview.astype(d.k.dtype), v=vview.astype(d.v.dtype),
+            length=jnp.full_like(d.length, n_tokens),
+        ))
+
+    def raw_kv_view(self, state):
+        return state.data.k, state.data.v
 
     def insert_row(self, state, row, slot):
         if state.is_paged:
@@ -559,6 +698,41 @@ class Int4SRFTPolicy:
         return CacheState(self, d._replace(
             kv=kvcache.decode_update(d.kv, d.rot_k, d.rot_v, k, v)
         ))
+
+    def prefill_chunk(self, state, k, v):
+        d = state.data
+        if state.is_paged:
+            return CacheState(self, d._replace(
+                kv=paged.int4_prefill_chunk_paged(d.kv, d.rot_k, d.rot_v,
+                                                  k, v)
+            ))
+        if not state.is_ragged:
+            raise ValueError("chunked prefill is a ragged/paged lifecycle "
+                             "(init_state(..., ragged=True))")
+        return CacheState(self, d._replace(
+            kv=kvcache.prefill_chunk_ragged(d.kv, d.rot_k, d.rot_v, k, v)
+        ))
+
+    def adopt_prefix(self, row, paged_state, pages, n_tokens):
+        # n_tokens must be W-aligned (engine contract): every adopted
+        # byte then comes from packed pages and the residual ring stays
+        # zero -- the exact state monolithic prefill leaves at a flush
+        # boundary.
+        d = row.data
+        kp, ks, vp, vs = paged.read_pages(paged_state.data.kv, pages)
+        kv = d.kv._replace(
+            k_packed=kp.astype(d.kv.k_packed.dtype),
+            k_scales=ks.astype(d.kv.k_scales.dtype),
+            v_packed=vp.astype(d.kv.v_packed.dtype),
+            v_scales=vs.astype(d.kv.v_scales.dtype),
+            length=jnp.full_like(d.kv.length, n_tokens),
+        )
+        return CacheState(self, d._replace(kv=kv))
+
+    def raw_kv_view(self, state):
+        d = state.data
+        yk, yv, _ = kvcache.gather_rotated(d.kv)
+        return d.rot_k.inverse(yk), d.rot_v.inverse(yv)
 
     def insert_row(self, state, row, slot):
         # per-row KV storage is copied; the rotations are shared model
@@ -803,6 +977,41 @@ class Int8PerTokenPolicy:
                              "(init_state(..., ragged=True))")
         new = self._write(state, k, v, lengths)
         return CacheState(self, new._replace(length=lengths + 1))
+
+    def prefill_chunk(self, state, k, v):
+        if state.is_paged:
+            kc, ks = self._quant(k)
+            vc, vs = self._quant(v)
+            return CacheState(self, paged.append_chunk(
+                state.data, (kc, ks, vc, vs)
+            ))
+        if not state.is_ragged:
+            raise ValueError("chunked prefill is a ragged/paged lifecycle "
+                             "(init_state(..., ragged=True))")
+        lengths = state.data.length
+        new = self._write_ragged(state, k, v, lengths)
+        return CacheState(self, new._replace(length=lengths + k.shape[-2]))
+
+    def adopt_prefix(self, row, paged_state, pages, n_tokens):
+        d = row.data
+        kc, ks, vc, vs = paged.read_pages(paged_state.data, pages)
+        return CacheState(self, Int8State(
+            k_codes=kc.astype(d.k_codes.dtype),
+            k_scales=ks.astype(d.k_scales.dtype),
+            v_codes=vc.astype(d.v_codes.dtype),
+            v_scales=vs.astype(d.v_scales.dtype),
+            length=jnp.full_like(d.length, n_tokens),
+        ))
+
+    def raw_kv_view(self, state):
+        d = state.data
+        k = quant.dequantize_per_token(
+            quant.Quantized(d.k_codes, d.k_scales, 8)
+        )
+        v = quant.dequantize_per_token(
+            quant.Quantized(d.v_codes, d.v_scales, 8)
+        )
+        return k, v
 
     def insert_row(self, state, row, slot):
         if state.is_paged:

@@ -55,6 +55,8 @@ __all__ = [
     "init_bf16_cache",
     "decode_update_ragged",
     "bf16_decode_update_ragged",
+    "prefill_chunk_ragged",
+    "bf16_prefill_chunk_ragged",
 ]
 
 
@@ -323,6 +325,87 @@ def decode_update_ragged(
     v_scales = jax.vmap(slab_write)(cache.v_scales, vs, off, flush)
     return QuantKVCache(
         k_packed, k_scales, v_packed, v_scales, k_res, v_res, new_len
+    )
+
+
+def prefill_chunk_ragged(
+    cache: QuantKVCache,
+    rot_k: Rotation,
+    rot_v: Rotation,
+    k: jax.Array,  # (B, Hkv, C, d) raw (post-RoPE) chunk
+    v: jax.Array,  # (B, Hkv, C, d)
+) -> QuantKVCache:
+    """Append a C-token prompt chunk at each row's own length (chunked
+    prefill, DESIGN.md §11).
+
+    Alignment contract (engine-enforced, ``BatchEngine`` schedules chunk
+    boundaries): every row's current ``length`` is a multiple of the
+    flush window W, and only the FINAL chunk of an admission may have
+    ``C % W != 0``.  Under that contract this writes exactly the bytes a
+    monolithic :func:`prefill` of the full prompt would hold:
+
+      * the first ``(C // W) * W`` chunk tokens quantize+pack straight
+        into packed storage at ``[L_b, L_b + packed_c)`` (per-row
+        vmapped ``dynamic_update_slice`` -- the PR-3 scatter write,
+        donation-safe, O(C) traffic);
+      * the ``C % W`` tail tokens land in residual slots ``[0, C % W)``
+        -- identical to monolithic prefill because ``L_b + packed_c`` is
+        W-aligned, so position ``L_b + packed_c + j`` rings to slot
+        ``j``;
+      * quantization is per-token (per-group over channels), so chunk
+        boundaries cannot change any code byte.
+    """
+    W = cache.window
+    g = cache.group
+    C = k.shape[-2]
+    lengths = cache.length  # (B,)
+    kr = rot_k.forward(k)
+    vr = rot_v.forward(v)
+    packed_c = (C // W) * W
+
+    def put(buf, val, off):  # (H, S, c), (H, packed_c, c), ()
+        return jax.lax.dynamic_update_slice(buf, val, (0, off, 0))
+
+    k_packed, k_scales = cache.k_packed, cache.k_scales
+    v_packed, v_scales = cache.v_packed, cache.v_scales
+    if packed_c:  # static python int
+        kp, ks = _quantize_rotated(kr[..., :packed_c, :], g)
+        vp, vs = _quantize_rotated(vr[..., :packed_c, :], g)
+        k_packed = jax.vmap(put)(k_packed, kp, lengths)
+        k_scales = jax.vmap(put)(k_scales, ks, lengths)
+        v_packed = jax.vmap(put)(v_packed, vp, lengths)
+        v_scales = jax.vmap(put)(v_scales, vs, lengths)
+
+    k_res, v_res = cache.k_residual, cache.v_residual
+    if C - packed_c:  # final-chunk tail: residual slots [0, C mod W)
+        k_res = jax.lax.dynamic_update_slice(
+            k_res, kr[..., packed_c:, :], (0, 0, 0, 0)
+        )
+        v_res = jax.lax.dynamic_update_slice(
+            v_res, vr[..., packed_c:, :], (0, 0, 0, 0)
+        )
+    return QuantKVCache(
+        k_packed, k_scales, v_packed, v_scales, k_res, v_res, lengths + C
+    )
+
+
+def bf16_prefill_chunk_ragged(
+    cache: BF16KVCache, k: jax.Array, v: jax.Array
+) -> BF16KVCache:
+    """Append a C-token prompt chunk at each row's own length (chunked
+    prefill): per-row vmapped ``dynamic_update_slice`` -- the same
+    scatter write as :func:`bf16_decode_update_ragged`, widened from one
+    token to C.  Bit-identical to a monolithic :func:`bf16_prefill` of
+    the concatenated prompt (the write is position-wise)."""
+    C = k.shape[-2]
+
+    def put(buf, val, off):  # (H, S, d), (H, C, d), ()
+        return jax.lax.dynamic_update_slice(buf, val, (0, off, 0))
+
+    return BF16KVCache(
+        jax.vmap(put)(cache.k, k.astype(jnp.bfloat16), cache.length),
+        jax.vmap(put)(cache.v, v.astype(jnp.bfloat16), cache.length),
+        cache.length + C,
     )
 
 

@@ -60,11 +60,15 @@ __all__ = [
     "pool_free",
     "init_paged",
     "gather_view",
+    "read_pages",
     "append_token",
+    "append_chunk",
     "write_slab",
+    "write_chunk",
     "insert_row",
     "reset_rows",
     "int4_update_paged",
+    "int4_prefill_chunk_paged",
     "meta_nbytes",
 ]
 
@@ -245,6 +249,26 @@ def gather_view(pd: PagedData) -> tuple:
     return tuple(g(p) for p in pd.pools)
 
 
+def read_pages(pd: PagedData, pages: jax.Array) -> tuple:
+    """Dense ``(1, H, len(pages)·page_size, c)`` views of the named
+    pages, one per pool leaf.
+
+    ``pages`` is a static-shape int32 id vector (pad with ``NULL_PAGE``;
+    null entries read the scratch page -- garbage the caller must mask
+    or overwrite).  This is the donor-side read of token-level prefix
+    reuse (DESIGN.md §11): the batch engine gathers a shared prefix's
+    physical pages into a dense batch-1 row before chunked prefill
+    resumes after them.
+    """
+
+    def g(pool_leaf):
+        t = jnp.take(pool_leaf, pages, axis=0)  # (NP, H, ps, c)
+        NP, H, ps, c = t.shape
+        return t.transpose(1, 0, 2, 3).reshape(1, H, NP * ps, c)
+
+    return tuple(g(p) for p in pd.pools)
+
+
 # ---------------------------------------------------------------------------
 # Writes: tail-page only
 # ---------------------------------------------------------------------------
@@ -298,6 +322,39 @@ def write_slab(pd: PagedData, slabs: tuple, starts: jax.Array,
     return pd._replace(
         pools=tuple(put(p, s) for p, s in zip(pd.pools, slabs))
     )
+
+
+def write_chunk(pd: PagedData, vals: tuple, starts: jax.Array) -> PagedData:
+    """Write a C-token span per row at absolute position ``starts[b]``.
+
+    The chunk may span several pages: each token resolves its own
+    (page, in-page offset) pair through the page table -- the same
+    tail-page routing as :func:`append_token`, widened from one token to
+    C (one scatter per pool leaf, still in-place under donation).  The
+    caller must have mapped pages covering ``[starts_b, starts_b + C)``
+    for every row it cares about (unmapped entries route to the null
+    scratch page, whose bytes are never meaningfully read).
+    """
+    C = vals[0].shape[2]
+    ps = pd.page_size
+    pos = starts[:, None] + jnp.arange(C)[None, :]  # (B, C)
+    page = jnp.take_along_axis(pd.page_table, pos // ps, axis=1)  # (B, C)
+    off = pos % ps
+    pools = tuple(
+        p.at[page, :, off, :].set(v.transpose(0, 2, 1, 3).astype(p.dtype))
+        for p, v in zip(pd.pools, vals)
+    )
+    return pd._replace(pools=pools)
+
+
+def append_chunk(pd: PagedData, vals: tuple) -> PagedData:
+    """Ragged paged chunk append (chunked prefill, DESIGN.md §11): row
+    ``b`` writes C tokens at ``[L_b, L_b + C)`` of its mapped pages and
+    advances its length by C.  ``vals`` are ``(B, H, C, c_i)`` arrays in
+    the policy's pool order."""
+    C = vals[0].shape[2]
+    pd = write_chunk(pd, vals, pd.length)
+    return pd._replace(length=pd.length + C)
 
 
 # ---------------------------------------------------------------------------
@@ -404,6 +461,42 @@ def int4_update_paged(pd: PagedData, rot_k, rot_v, k: jax.Array,
     pd = write_slab(pd, (kp, ks, vp, vs), off, flush)
     new_len = L + 1 if active is None else jnp.where(active, L + 1, L)
     return pd._replace(length=new_len)
+
+
+def int4_prefill_chunk_paged(pd: PagedData, rot_k, rot_v, k: jax.Array,
+                             v: jax.Array) -> PagedData:
+    """Paged mirror of ``kvcache.prefill_chunk_ragged``: the chunk's
+    W-aligned bulk packs straight into the row's mapped pages via
+    :func:`write_chunk` (page_size % W == 0 keeps every W-slab inside
+    one page, the §10 invariant), and a final-chunk tail lands in the
+    per-row dense residual ring at slots ``[0, C mod W)``.  Same
+    alignment contract as the dense path: per-row lengths are W-aligned
+    and only an admission's final chunk may leave a tail."""
+    from repro.core.kvcache import _quantize_rotated
+
+    k_res, v_res = pd.residual
+    W = k_res.shape[-2]
+    d = k_res.shape[-1]
+    g = d // pd.pools[1].shape[-1]  # scales pool: (..., d // group)
+    C = k.shape[-2]
+    L = pd.length
+    kr = rot_k.forward(k)
+    vr = rot_v.forward(v)
+    packed_c = (C // W) * W
+
+    if packed_c:  # static python int
+        kp, ks = _quantize_rotated(kr[..., :packed_c, :], g)
+        vp, vs = _quantize_rotated(vr[..., :packed_c, :], g)
+        pd = write_chunk(pd, (kp, ks, vp, vs), L)
+    if C - packed_c:  # final-chunk tail -> residual slots [0, C mod W)
+        k_res = jax.lax.dynamic_update_slice(
+            k_res, kr[..., packed_c:, :], (0, 0, 0, 0)
+        )
+        v_res = jax.lax.dynamic_update_slice(
+            v_res, vr[..., packed_c:, :], (0, 0, 0, 0)
+        )
+        pd = pd._replace(residual=(k_res, v_res))
+    return pd._replace(length=L + C)
 
 
 # ---------------------------------------------------------------------------

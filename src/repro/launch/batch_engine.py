@@ -44,10 +44,39 @@ bit-identical pages; ``Completion``s stitch carried tokens back
 together so callers never see the preemption (greedy streams are
 unchanged; temperature streams resample from re-admission).
 
+Chunked prefill (``prefill_chunk=C``; DESIGN.md §11) removes the one
+stall left in this design: a monolithic admission prefills the WHOLE
+prompt in one dispatch, so a 4K-token arrival freezes every live decode
+stream for the full prefill.  With chunking, admission becomes a
+*pending* state machine: each scheduler quantum processes at most
+``prefill_budget`` prompt tokens (in C-token chunk dispatches through
+``model.prefill_chunk``) and then runs the decode chunk as usual -- so
+live streams advance EVERY iteration while the admission makes
+progress (Sarathi-style stall-free continuous batching).  Chunk
+boundaries are page-aligned (paged mode) and flush-window-aligned, so
+every policy's ``prefill_chunk`` write path produces byte-identical
+cache state to a monolithic prefill; the chunk's queries attend a raw
+bf16 K/V side buffer (not the quantized cache), which makes the whole
+chunked admission bit-identical to the monolithic one -- tokens and
+cache bytes (tests/test_chunked_prefill.py asserts it per policy x
+backend x dense/paged).
+
+Chunked + paged admissions also get token-level prefix reuse: the
+engine keeps the token arrays of resident prompts next to the PR-4
+page-aligned prefix index, finds the longest token-level shared prefix
+(aligned down to the int4 flush window W), seeds the admission row
+straight from the donor's resident pages (``policy.adopt_prefix``) and
+starts chunking AFTER the shared tokens -- shared chunks are never
+computed, and the first divergent page is forked copy-on-write at
+insert exactly as before.  For quantized policies the suffix then
+attends a dequantized view of the reused prefix (the same bytes every
+decode step reads -- cache-consistent); bf16 reuse is bit-exact.
+
 Typical use::
 
     eng = BatchEngine(model, params, capacity=8, s_max=2048,
-                      policy="int4-srft", backend="kernel")
+                      policy="int4-srft", backend="kernel",
+                      prefill_chunk=256)   # None = monolithic admission
     eng.submit(Request(rid=0, prompt=toks_a, max_new_tokens=128))
     eng.submit(Request(rid=1, prompt=toks_b, max_new_tokens=64))
     for completion in eng.run():
@@ -100,6 +129,30 @@ class Completion:
     finish_reason: str  # "length" | "eos"
 
 
+@dataclasses.dataclass
+class _PendingAdmission:
+    """Engine-internal: one in-flight chunked admission (DESIGN.md §11).
+
+    ``row`` is the dense batch-1 ragged staging cache filling chunk by
+    chunk; ``raw_k``/``raw_v`` are the per-layer raw bf16 K/V side
+    buffers its chunks attend (shape ``(n_layers, 1, Hkv, n_total,
+    hd)``); ``n_done`` counts prompt tokens already in the row --
+    including ``reused_tokens`` seeded from a donor's resident pages,
+    which were never computed.  ``logits`` holds the last processed
+    chunk's final-token logits (the admission sample comes from them
+    once ``n_done == n_total``)."""
+
+    req: Request
+    slot: int
+    row: Any
+    raw_k: Any
+    raw_v: Any
+    n_done: int
+    n_total: int
+    logits: Any = None
+    reused_tokens: int = 0
+
+
 class BatchEngine:
     """Continuous-batching engine for one (model, policy, backend,
     sampler) configuration.
@@ -117,7 +170,10 @@ class BatchEngine:
                  chunk: int = 8, eos_id: Optional[int] = None,
                  rots=None, key: Optional[jax.Array] = None,
                  donate: bool = True, paged: bool = False,
-                 page_size: int = 16, n_pages: Optional[int] = None):
+                 page_size: int = 16, n_pages: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None,
+                 prefill_budget: Optional[int] = None,
+                 prefix_reuse: bool = True):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         if chunk < 1:
@@ -155,6 +211,51 @@ class BatchEngine:
                 )
         self.s_max = s_max
 
+        # chunked prefill (DESIGN.md §11): chunk boundaries must be
+        # flush-window-aligned (every non-final chunk ends at a W
+        # boundary, so policy.prefill_chunk replays monolithic bytes)
+        # and, in paged mode, page-aligned (an int4 flush slab then
+        # never straddles a page -- the §10 invariant carries over).
+        # page_size % W == 0 is already enforced by init_paged, so
+        # page alignment implies W alignment.
+        self._align = max(int(getattr(self.policy, "window", 1) or 1), 1)
+        if prefill_chunk is not None:
+            if prefill_chunk < 1:
+                raise ValueError(
+                    f"prefill_chunk must be >= 1, got {prefill_chunk}"
+                )
+            if paged and prefill_chunk % page_size:
+                raise ValueError(
+                    f"prefill_chunk={prefill_chunk} must be a multiple of "
+                    f"page_size={page_size} (chunk boundaries are page "
+                    f"boundaries, so flush slabs never straddle a page)"
+                )
+            if prefill_chunk % self._align:
+                raise ValueError(
+                    f"prefill_chunk={prefill_chunk} must be a multiple of "
+                    f"the policy flush window W={self._align} (chunked "
+                    f"admission replays monolithic prefill bytes only at "
+                    f"W-aligned chunk boundaries)"
+                )
+        if prefill_budget is not None and prefill_chunk is None:
+            raise ValueError(
+                "prefill_budget only bounds CHUNKED admission; pass "
+                "prefill_chunk too (monolithic admission has no "
+                "per-quantum token bound)"
+            )
+        if prefill_budget is not None and prefill_budget < 1:
+            raise ValueError(
+                f"prefill_budget must be >= 1, got {prefill_budget}"
+            )
+        self.prefill_chunk = prefill_chunk
+        self.prefill_budget = (
+            prefill_budget if prefill_budget is not None else prefill_chunk
+        )
+        self.prefix_reuse = prefix_reuse
+        self._pending: Optional[_PendingAdmission] = None
+        self.n_prefill_chunks = 0
+        self.n_reused_tokens = 0
+
         # the slot cache: one ragged CacheState per layer, plus per-row
         # pos.  Row caches built at admission reuse _init_key/_rots so
         # their rotations are bit-identical to the slot cache's (an
@@ -188,6 +289,11 @@ class BatchEngine:
             self._ptab_host = np.full((capacity, self.max_pages),
                                       NULL_PAGE, np.int32)
             self._prefix_pages: dict[bytes, int] = {}
+            # token-level reuse (DESIGN.md §11): resident prompts' token
+            # arrays + their physical pages, so chunked admissions can
+            # skip a PARTIAL shared prefix (aligned down to W), not just
+            # page-aligned ones.  Pruned with _prefix_pages.
+            self._prefix_seqs: dict[bytes, tuple[np.ndarray, np.ndarray]] = {}
             self._slot_seq = [0] * capacity
             self._admit_seq = 0
             self._carried: dict[int, list[int]] = {}
@@ -210,6 +316,20 @@ class BatchEngine:
         self._reset_fn = jax.jit(
             self._reset_impl, donate_argnums=(0,) if donate else ()
         )
+        # chunked prefill: one jitted chunk dispatch (specializes per
+        # (chunk_len, prompt_len) shape pair -- same compilation economy
+        # as _prefill_fn), plus the paged-reuse seed/backfill helpers
+        self._chunk_prefill_fn = jax.jit(
+            lambda p, t, row, rk, rv: self.model.prefill_chunk(
+                p, t, row, rk, rv
+            ),
+            donate_argnums=(2, 3, 4) if donate else (),
+        )
+        self._seed_fn = jax.jit(
+            self._seed_impl, donate_argnums=(0,) if donate else ()
+        )
+        self._raw_view_fn = jax.jit(self._raw_view_impl,
+                                    static_argnums=(1, 2))
 
     def _rots_copy(self):
         return None if self._rots is None \
@@ -249,6 +369,35 @@ class BatchEngine:
         pos = jnp.where(mask, 0, batched["pos"])
         return dict(batched, attn=attn, pos=pos)
 
+    def _seed_impl(self, row, batched, pages, n_tok):
+        """Token-level reuse seed: adopt the donor's resident page bytes
+        into the staging row (vmapped over layers) and set its length to
+        the shared token count -- chunked prefill then resumes AFTER the
+        shared tokens."""
+        pol = self.policy
+        attn = jax.vmap(pol.adopt_prefix, in_axes=(0, 0, None, None))(
+            row["attn"], batched["attn"], pages, n_tok
+        )
+        return dict(row, attn=attn, pos=jnp.full_like(row["pos"], n_tok))
+
+    def _raw_view_impl(self, row, s_shared: int, s_prompt: int):
+        """Backfill the raw K/V side buffers from a seeded staging row:
+        bf16 rows read back bit-exactly; quantized rows dequantize (and
+        inverse-rotate), so reused-prefix reads carry the same
+        quantization error every decode read does (cache-consistent;
+        DESIGN.md §11).  Only the ``[0, s_shared)`` extent is
+        meaningful (the rest is zero-padded and overwritten by chunk
+        writes before it is ever attended), and slicing there lets XLA
+        narrow the dequant to the adopted tokens instead of the row's
+        full capacity."""
+        k, v = jax.vmap(self.policy.raw_kv_view)(row["attn"])
+        pad = ((0, 0),) * 3 + ((0, s_prompt - s_shared), (0, 0))
+
+        def clip(x):
+            return jnp.pad(x[..., :s_shared, :].astype(jnp.bfloat16), pad)
+
+        return clip(k), clip(v)
+
     # ------------------------------------------------------- paged pool state
     def _pd(self) -> PagedData:
         """Layer-stacked PagedData of the slot cache (leaves lead with
@@ -278,6 +427,10 @@ class BatchEngine:
                 if self._refcount_host[p] == 0]
         for k in dead:
             del self._prefix_pages[k]
+        dead_seq = [k for k, (_, pgs) in self._prefix_seqs.items()
+                    if (self._refcount_host[pgs] == 0).any()]
+        for k in dead_seq:
+            del self._prefix_seqs[k]
 
     def _pages_needed(self, prompt_len: int, max_new: int) -> int:
         return -(-(prompt_len + max_new) // self.page_size)
@@ -311,6 +464,14 @@ class BatchEngine:
         row = self._ptab_host[slot]
         for i in range(prompt.shape[-1] // ps):
             self._prefix_pages[prompt[:(i + 1) * ps].tobytes()] = int(row[i])
+        # token-level index entry (DESIGN.md §11): the prompt's tokens +
+        # every page its prompt touches (incl. a partial tail page --
+        # its packed slots below the prompt's flush boundary are
+        # immutable deterministic bytes, which is all reuse ever adopts)
+        n_pp = -(-prompt.shape[-1] // ps)
+        self._prefix_seqs[prompt.tobytes()] = (
+            prompt.copy(), row[:n_pp].copy()
+        )
 
     def _preempt_one(self, protect_from_seq: int) -> bool:
         """Preempt the least-recently-admitted live slot to the FRONT of
@@ -319,11 +480,14 @@ class BatchEngine:
         admitted during the CURRENT admission round (seq >=
         ``protect_from_seq``) are never victims -- preempting work that
         has not decoded since admission makes no progress and would
-        livelock the admission loop.  Returns False when nothing is
-        eligible."""
+        livelock the admission loop.  A slot reserved by an in-flight
+        chunked admission is never a victim either (it holds no cache
+        row yet).  Returns False when nothing is eligible."""
+        pend_slot = self._pending.slot if self._pending is not None else None
         live = [s for s in range(self.capacity)
                 if self._slot_req[s] is not None
-                and self._slot_seq[s] < protect_from_seq]
+                and self._slot_seq[s] < protect_from_seq
+                and s != pend_slot]
         if not live:
             return False
         slot = min(live, key=lambda s: self._slot_seq[s])
@@ -445,7 +609,9 @@ class BatchEngine:
 
     @property
     def pending(self) -> int:
-        return len(self._queue)
+        """Requests not yet decoding: queued plus any in-flight chunked
+        admission."""
+        return len(self._queue) + (1 if self._pending is not None else 0)
 
     @property
     def n_active(self) -> int:
@@ -461,15 +627,30 @@ class BatchEngine:
             key=self._init_key, ragged=True,
         )
         logits, row = self._prefill_fn(self.params, prompt, row)
+        tok0 = self._draw_tok0(req, logits)
+        self._insert_row(req, slot, row, tok0,
+                         int(np.asarray(req.prompt).shape[-1]), plan)
+        return self._post_insert(req, slot, tok0)
+
+    def _draw_tok0(self, req: Request, logits) -> jax.Array:
+        """The admission token.  Preemption resumes re-enter their
+        pending token and draw NO sample (the next token must come from
+        the same full-width decode dispatch an unpreempted run would
+        have used -- bit-parity); fresh admissions split the engine key
+        exactly ONCE, so callers must not invoke this until the insert
+        is certain (a retried draw would desynchronize the PRNG stream
+        from the monolithic engine's)."""
         if req.resume_tok is not None:
-            # preemption resume: the pending token re-enters the tok
-            # buffer; NO admission sample is drawn (the next token must
-            # come from the same full-width decode dispatch that would
-            # have produced it without the preemption -- bit-parity)
-            tok0 = jnp.full((1, 1), req.resume_tok, jnp.int32)
-        else:
-            self._sample_key, sub = jax.random.split(self._sample_key)
-            tok0 = self.sampler.sample(logits[:, -1], sub)[:, None]
+            return jnp.full((1, 1), req.resume_tok, jnp.int32)
+        self._sample_key, sub = jax.random.split(self._sample_key)
+        return self.sampler.sample(logits[:, -1], sub)[:, None]
+
+    def _insert_row(self, req: Request, slot: int, row, tok0,
+                    prompt_len: int, plan) -> None:
+        """Copy a fully prefilled batch-1 row into ``slot`` -- dense
+        scatter or paged COW insert plus its host bookkeeping -- the one
+        insert path both admission flavors (monolithic and chunked)
+        share."""
         if self.paged:
             shared, n_new = plan
             sp = np.full((self.max_pages,), NULL_PAGE, np.int32)
@@ -481,14 +662,30 @@ class BatchEngine:
             )
             self._slot_seq[slot] = self._admit_seq
             self._admit_seq += 1
-            n = int(np.asarray(req.prompt).shape[-1])
-            self._orig.setdefault(req.rid, (n, req.max_new_tokens))
+            self._orig.setdefault(req.rid, (prompt_len,
+                                            req.max_new_tokens))
             self._sync_pool()
             self._register_prefix(req, slot)
         else:
             self.cache, self.tok = self._insert_fn(
                 self.cache, row, jnp.asarray(slot), self.tok, tok0
             )
+
+    def _reset_slot_now(self, slot: int) -> None:
+        """Reset one slot's cache row immediately (admission-time
+        retire): the admission loop may re-admit this very slot within
+        the same quantum, and a deferred reset would wipe the new
+        tenant's row (and, paged, free its pages)."""
+        mask = np.zeros((self.capacity,), bool)
+        mask[slot] = True
+        self.cache = self._reset_fn(self.cache, jnp.asarray(mask))
+        if self.paged:
+            self._sync_pool()
+
+    def _post_insert(self, req: Request, slot: int, tok0
+                     ) -> Optional[Completion]:
+        """Shared admission bookkeeping (monolithic and chunked paths)
+        once the row is in the slot cache and ``tok0`` is drawn."""
         t0 = int(tok0[0, 0])
         self._slot_req[slot] = req
         if req.resume_tok is not None:
@@ -506,6 +703,111 @@ class BatchEngine:
         if done:
             return self._retire(slot)
         return None
+
+    # ------------------------------------------------- chunked admission
+    def _find_donor(self, prompt: np.ndarray) -> tuple[int, Optional[np.ndarray]]:
+        """Longest token-level shared prefix between ``prompt`` and any
+        resident registered prompt, aligned DOWN to the policy flush
+        window W and capped at ``len(prompt) - 1`` (the final prompt
+        token is always computed: its logits draw the admission
+        sample).  Returns ``(n_shared_tokens, donor_page_ids)`` --
+        ``(0, None)`` when nothing matches.  W alignment is what makes
+        the adopted bytes safe: every shared token then lies below the
+        donor's prefill flush boundary, so its packed bytes are resident
+        and immutable (DESIGN.md §11)."""
+        best_t, best_pages = 0, None
+        cap = int(prompt.shape[-1]) - 1
+        for toks, pages in self._prefix_seqs.values():
+            n = min(int(toks.shape[-1]), cap)
+            if n <= best_t:
+                continue
+            neq = np.nonzero(toks[:n] != prompt[:n])[0]
+            t = int(neq[0]) if neq.size else n
+            if t > best_t:
+                best_t, best_pages = t, pages
+        best_t = (best_t // self._align) * self._align
+        if best_t < self.page_size:
+            # below one page nothing can be COW-shared and the compute
+            # skip is noise; incidental 1-2 token matches between
+            # unrelated prompts would also make quantized-policy
+            # admissions needlessly read dequantized prefixes
+            return 0, None
+        return best_t, best_pages
+
+    def _start_pending(self, req: Request, slot: int) -> None:
+        """Open a chunked admission: build the batch-1 staging row and
+        the raw bf16 K/V side buffers, reserve ``slot``, and -- paged +
+        reuse -- seed the row from a donor's resident pages so chunking
+        skips the shared tokens entirely."""
+        prompt = np.asarray(req.prompt, np.int32)
+        n_total = int(prompt.shape[-1])
+        row = self.model.init_cache(
+            1, self.s_max, policy=self.policy, rots=self._rots_copy(),
+            key=self._init_key, ragged=True,
+        )
+        # Preemption-resume continuations NEVER reuse (resume_tok
+        # guard): recompute must rebuild the cache bytes the original
+        # admission produced, and a quantized-policy reuse hit would
+        # swap raw-prefix attention for dequantized reads -- breaking
+        # the §10 bit-for-bit preemption-survival guarantee.
+        shared_t = 0
+        if self.paged and self.prefix_reuse and req.resume_tok is None:
+            shared_t, donor_pages = self._find_donor(prompt)
+            if shared_t:
+                pages = np.full((self.max_pages,), NULL_PAGE, np.int32)
+                npg = -(-shared_t // self.page_size)
+                pages[:npg] = donor_pages[:npg]
+                row = self._seed_fn(row, self.cache, jnp.asarray(pages),
+                                    jnp.asarray(shared_t, jnp.int32))
+        cfg = self.model.cfg
+        if shared_t:
+            raw_k, raw_v = self._raw_view_fn(row, shared_t, n_total)
+        else:
+            raw_k = jnp.zeros(
+                (self.model.n_attn_layers, 1, cfg.n_kv_heads, n_total,
+                 cfg.head_dim), jnp.bfloat16,
+            )
+            raw_v = jnp.zeros_like(raw_k)
+        self._slot_req[slot] = req  # reserve (inactive until insert)
+        self._pending = _PendingAdmission(
+            req=req, slot=slot, row=row, raw_k=raw_k, raw_v=raw_v,
+            n_done=shared_t, n_total=n_total, reused_tokens=shared_t,
+        )
+        self.n_reused_tokens += shared_t
+
+    def _finalize_pending(self, round_start: int
+                          ) -> tuple[bool, list, list]:
+        """Insert a fully prefilled pending admission into its slot.
+        Returns ``(inserted, events, completions)``; ``inserted`` is
+        False when the paged pool cannot fit the row yet (no eligible
+        preemption victim) -- the admission stays pending and is retried
+        next step, after end-of-step retirements return pages."""
+        pend = self._pending
+        req, slot = pend.req, pend.slot
+        events: list[tuple[int, list[int]]] = []
+        completions: list[Completion] = []
+        plan = None
+        if self.paged:
+            while True:
+                plan = self._plan_pages(req)
+                if plan is not None:
+                    break
+                if not self._preempt_one(round_start):
+                    return False, events, completions
+        # drawn only AFTER the plan loop: the insert is now certain, so
+        # a pool-dry retry next step cannot burn a PRNG split
+        tok0 = self._draw_tok0(req, pend.logits)
+        self._insert_row(req, slot, pend.row, tok0,
+                         pend.n_total, plan)
+        self._pending = None  # staging row buffers are dropped here
+        done = self._post_insert(req, slot, tok0)
+        if done is not None:  # finished at admission (eos / n=1)
+            events.append((req.rid, [int(done.tokens[-1])]))
+            completions.append(done)
+            self._reset_slot_now(slot)
+        elif req.resume_tok is None:
+            events.append((req.rid, [self._slot_toks[slot][0]]))
+        return True, events, completions
 
     def _retire(self, slot: int) -> Completion:
         req = self._slot_req[slot]
@@ -533,23 +835,17 @@ class BatchEngine:
             tokens=toks, finish_reason=reason,
         )
 
-    def step(self) -> tuple[list[tuple[int, list[int]]], list[Completion]]:
-        """One scheduler quantum: admit into free slots, decode one
-        chunk.  Returns (events, completions) -- ``events`` is the token
-        stream, one ``(rid, new_tokens)`` per live request."""
-        events: list[tuple[int, list[int]]] = []
-        completions: list[Completion] = []
-        newly_retired = np.zeros((self.capacity,), bool)
-
-        # admit from the queue into free slots.  Paged mode peeks the
-        # head, plans its pages (COW prefix hits + fresh allocations)
-        # and, when the pool is dry, preempts the LRU live slot to the
-        # queue and replans -- the preempted continuation lands at the
-        # head, so it is also the next admission candidate.  Victims are
-        # only slots from BEFORE this admission round, so the loop
-        # always terminates (each iteration admits, or consumes one
-        # pre-round victim, or breaks).
-        round_start = self._admit_seq if self.paged else 0
+    def _admit_monolithic(self, round_start: int, events: list,
+                          completions: list) -> None:
+        """Admit from the queue into free slots, one whole-prompt
+        prefill per admission.  Paged mode peeks the head, plans its
+        pages (COW prefix hits + fresh allocations) and, when the pool
+        is dry, preempts the LRU live slot to the queue and replans --
+        the preempted continuation lands at the head, so it is also the
+        next admission candidate.  Victims are only slots from BEFORE
+        this admission round, so the loop always terminates (each
+        iteration admits, or consumes one pre-round victim, or
+        breaks)."""
         while self._queue:
             free = [s for s in range(self.capacity)
                     if self._slot_req[s] is None]
@@ -568,16 +864,73 @@ class BatchEngine:
             if done is not None:  # finished at admission (eos / n=1)
                 events.append((req.rid, [int(done.tokens[-1])]))
                 completions.append(done)
-                # reset NOW, not at end of step: the loop may re-admit
-                # this very slot, and a deferred reset would wipe the
-                # new tenant's row (and, paged, free its pages)
-                mask = np.zeros((self.capacity,), bool)
-                mask[slot] = True
-                self.cache = self._reset_fn(self.cache, jnp.asarray(mask))
-                if self.paged:
-                    self._sync_pool()
+                self._reset_slot_now(slot)
             elif req.resume_tok is None:  # resumes already streamed theirs
                 events.append((req.rid, [self._slot_toks[slot][0]]))
+
+    def _admit_chunked(self, round_start: int, events: list,
+                       completions: list) -> None:
+        """Chunked admission phase (DESIGN.md §11): spend at most
+        ``prefill_budget`` prompt tokens on the in-flight admission
+        (starting one from the queue head when none is open), then hand
+        control back so the decode chunk runs -- live streams advance
+        every quantum regardless of how long the arriving prompt is.
+        One admission is in flight at a time (FIFO); a completed one is
+        inserted and, budget permitting, the next begins within the same
+        quantum.  Token-level prefix reuse means seeded tokens cost no
+        budget -- a fully-shared prompt admits almost for free."""
+        spent = 0
+        while True:
+            if self._pending is None:
+                if not self._queue:
+                    return
+                free = [s for s in range(self.capacity)
+                        if self._slot_req[s] is None]
+                if not free:
+                    return
+                self._start_pending(self._queue.popleft(), free[0])
+            pend = self._pending
+            prompt = np.asarray(pend.req.prompt, np.int32)
+            # at least one chunk per quantum even if budget < chunk;
+            # otherwise stop at the budget
+            while pend.n_done < pend.n_total and (
+                    spent == 0 or spent < self.prefill_budget):
+                C = min(self.prefill_chunk, pend.n_total - pend.n_done)
+                toks = jnp.asarray(
+                    prompt[None, pend.n_done:pend.n_done + C]
+                )
+                (pend.logits, pend.row, pend.raw_k,
+                 pend.raw_v) = self._chunk_prefill_fn(
+                    self.params, toks, pend.row, pend.raw_k, pend.raw_v
+                )
+                pend.n_done += C
+                spent += C
+                self.n_prefill_chunks += 1
+            if pend.n_done < pend.n_total:
+                return  # budget exhausted; decode now
+            ok, ev, comps = self._finalize_pending(round_start)
+            events.extend(ev)
+            completions.extend(comps)
+            if not ok:
+                return  # pool dry: retried after end-of-step retirements
+            if spent >= self.prefill_budget:
+                return
+
+    def step(self) -> tuple[list[tuple[int, list[int]]], list[Completion]]:
+        """One scheduler quantum: admit into free slots (monolithic
+        prefill, or up to ``prefill_budget`` tokens of chunked prefill),
+        decode one chunk.  Returns (events, completions) -- ``events``
+        is the token stream, one ``(rid, new_tokens)`` per live
+        request."""
+        events: list[tuple[int, list[int]]] = []
+        completions: list[Completion] = []
+        newly_retired = np.zeros((self.capacity,), bool)
+        round_start = self._admit_seq if self.paged else 0
+
+        if self.prefill_chunk is not None:
+            self._admit_chunked(round_start, events, completions)
+        else:
+            self._admit_monolithic(round_start, events, completions)
 
         if not self.active.any():  # admission retires were reset in-loop
             return events, completions
@@ -623,6 +976,6 @@ class BatchEngine:
         they finish -- the streaming-response loop serve.py sits on."""
         for r in requests or ():
             self.submit(r)
-        while self._queue or self.active.any():
+        while self._queue or self._pending is not None or self.active.any():
             _, completions = self.step()
             yield from completions

@@ -112,6 +112,18 @@ def main():
                     help="physical pages in the pool (default: the dense "
                          "slot footprint; smaller values oversubscribe "
                          "and exercise LRU preemption)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked admission prefill (DESIGN.md §11): "
+                         "split each prompt into N-token chunks "
+                         "interleaved with decode, so long arrivals "
+                         "never stall live streams (default: monolithic "
+                         "prefill; must be a multiple of the policy "
+                         "window and, with --paged, of --page-size)")
+    ap.add_argument("--prefill-budget", type=int, default=None,
+                    help="prompt tokens admitted per scheduler quantum "
+                         "(default: one chunk) -- the prefill-throughput "
+                         "vs decode-latency knob: higher admits faster, "
+                         "lower bounds the per-quantum stall")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature (0 = greedy)")
     ap.add_argument("--top-k", type=int, default=0,
@@ -192,16 +204,22 @@ def main():
         policy=policy, backend=backend, sampler=sampler,
         chunk=args.chunk, rots=rots, key=jax.random.PRNGKey(7),
         paged=args.paged, page_size=args.page_size, n_pages=args.pool_pages,
+        prefill_chunk=args.prefill_chunk,
+        prefill_budget=args.prefill_budget,
     )
     pname = policy.name if policy is not None else "-"
     layout = (f"paged pool: {engine.n_pages - 1} pages x "
               f"{engine.page_size} tok, COW prefix sharing"
               if args.paged else "ragged slot cache")
+    admission = (f"chunked prefill: {args.prefill_chunk} tok/chunk, "
+                 f"{engine.prefill_budget} tok/quantum"
+                 if args.prefill_chunk else "monolithic prefill")
     print(f"[serve] arch={cfg.name} policy={pname} "
           f"backend={backend.value} max-batch={args.max_batch} "
           f"requests={args.requests} prompts={buckets} "
           f"new={args.new_tokens} chunk={args.chunk} "
-          f"(continuous batching: {layout}, donated scan chunks)")
+          f"(continuous batching: {layout}, {admission}, "
+          f"donated scan chunks)")
 
     for r in requests:
         engine.submit(r)
@@ -224,6 +242,10 @@ def main():
     print(f"  served {len(done)} requests, {n_tok} tokens in "
           f"{t_total:.2f}s -> {n_tok / max(t_total, 1e-9):.1f} tok/s "
           f"aggregate (CPU; incl. one-time compile)")
+    if args.prefill_chunk:
+        print(f"  admission: {engine.n_prefill_chunks} prefill chunks, "
+              f"{engine.n_reused_tokens} prompt tokens skipped via "
+              f"token-level prefix reuse")
     _cache_report(policy, engine.cache.get("attn"), engine=engine)
 
 
@@ -263,6 +285,10 @@ def _serve_single_stream(cfg, model, params, prompt, policy, backend,
     if getattr(args, "paged", False):
         print(f"[note] --paged needs a pure-attention family "
               f"(got {cfg.family}); serving dense single-stream")
+    if getattr(args, "prefill_chunk", None):
+        print(f"[note] --prefill-chunk needs the continuous-batching "
+              f"engine (family={cfg.family} is served single-stream); "
+              f"running one monolithic prefill")
     window = getattr(policy, "window", 1) if policy is not None else 1
     s_max = args.prompt_len + args.new_tokens + window
     s_max += (-s_max) % max(window, 1)

@@ -22,7 +22,8 @@ from repro.core.cache_api import AttendBackend, CacheState
 from repro.models import common
 from repro.models.flash import flash_attention
 
-__all__ = ["attention_init", "attention_forward", "attention_decode"]
+__all__ = ["attention_init", "attention_forward", "attention_prefill_chunk",
+           "attention_decode"]
 
 
 def attention_init(key, cfg, *, d_model: int | None = None):
@@ -111,6 +112,54 @@ def attention_forward(
     if return_kv:
         return _merge_heads(p, o), new_cache, (k, v)
     return _merge_heads(p, o), new_cache
+
+
+def attention_prefill_chunk(
+    p,
+    x: jax.Array,  # (B, C, d) chunk hidden states
+    cfg,
+    cache: CacheState,
+    raw_k: jax.Array,  # (B, Hkv, S_prompt, hd) raw bf16 K side buffer
+    raw_v: jax.Array,  # (B, Hkv, S_prompt, hd)
+    *,
+    offset: jax.Array,  # () absolute position of the chunk's first token
+    kv_block: int = 1024,
+):
+    """Chunked-prefill attention (DESIGN.md §11): one C-token slice of a
+    prompt, at absolute positions ``[offset, offset + C)``.
+
+    The chunk's K/V go TWO places: (i) appended to the cache through
+    ``policy.prefill_chunk`` (quantized for int4/int8 schemes -- the
+    bytes decode will read), and (ii) written bit-exactly into the raw
+    bf16 side buffers ``raw_k``/``raw_v``, which is what the chunk's
+    queries attend.  Attending raw bytes -- not the cache -- is the
+    bit-exactness argument: every query sees exactly the K/V a
+    monolithic ``attention_forward`` prefill would have used, so
+    chunking cannot perturb hidden states or cache bytes.  The buffers
+    live only for the admission (O(S_prompt) bf16 for ONE in-flight
+    request -- the same transient a monolithic prefill materializes as
+    activations) and are dropped at insert.
+
+    ``offset`` may be traced (one compile per chunk length, not per
+    chunk index).  Buffer positions at or beyond ``offset + C`` hold
+    garbage; the causal mask (``kv_pos <= q_pos``) excludes them.
+    Returns ``(y, new_cache, raw_k, raw_v)``.
+    """
+    B, C, _ = x.shape
+    positions = offset + jax.numpy.arange(C)
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    raw_k = jax.lax.dynamic_update_slice(
+        raw_k, k.astype(raw_k.dtype), (0, 0, offset, 0)
+    )
+    raw_v = jax.lax.dynamic_update_slice(
+        raw_v, v.astype(raw_v.dtype), (0, 0, offset, 0)
+    )
+    new_cache = cache.policy.prefill_chunk(cache, k, v)
+    o = flash_attention(
+        q, raw_k, raw_v, causal=True, q_offset=offset, kv_block=kv_block,
+        scale=cfg.head_dim ** -0.5,
+    )
+    return _merge_heads(p, o), new_cache, raw_k, raw_v
 
 
 def attention_decode(

@@ -298,6 +298,22 @@ class LM:
             h = ffn.ffn_apply(p["ffn"], h_in, cfg.ffn_activation)
         return x + h, new_cache
 
+    def _block_prefill_chunk(self, p, x, cache, raw_k, raw_v, *, offset,
+                             kv_block=1024):
+        cfg = self.cfg
+        h, new_cache, raw_k, raw_v = attention.attention_prefill_chunk(
+            p["attn"],
+            common.rmsnorm(p["ln_attn"], x, eps=cfg.norm_eps),
+            cfg, cache, raw_k, raw_v, offset=offset, kv_block=kv_block,
+        )
+        x = x + h
+        h_in = common.rmsnorm(p["ln_ffn"], x, eps=cfg.norm_eps)
+        if cfg.moe is not None:
+            h, _ = moe.moe_apply(p["moe"], h_in, cfg.moe, d_model=cfg.d_model)
+        else:
+            h = ffn.ffn_apply(p["ffn"], h_in, cfg.ffn_activation)
+        return x + h, new_cache, raw_k, raw_v
+
     def _block_decode(self, p, x, cache, *, position, kv_block=512,
                       backend=None, active=None):
         cfg = self.cfg
@@ -523,6 +539,48 @@ class LM:
 
         logits = self._unembed(params, x[:, -1:])
         return logits, cache
+
+    def prefill_chunk(self, params, tokens, cache, raw_k, raw_v, *,
+                      kv_block: int = 1024):
+        """Process ONE C-token slice of a prompt (chunked prefill,
+        DESIGN.md §11).  Returns ``(last_logits, cache, raw_k, raw_v)``.
+
+        ``cache`` is a ragged (batch-1) cache whose ``pos`` marks how
+        many prompt tokens it already holds; this appends the chunk at
+        that offset.  ``raw_k``/``raw_v`` are ``(n_layers, B, Hkv,
+        S_prompt, hd)`` bf16 side buffers carrying the raw (pre-
+        quantization) K/V of every token processed so far -- the chunk's
+        queries attend those, so a sequence of chunk calls reproduces a
+        monolithic :meth:`prefill` bit-for-bit while the cache fills
+        through each policy's ``prefill_chunk`` write path.  ``logits``
+        are for the chunk's last token (only the final chunk's are used,
+        to draw the admission sample).  Attention families only
+        (dense/moe/vlm -- the only families the batch engine serves).
+        """
+        cfg = self.cfg
+        if cfg.family not in ("dense", "moe", "vlm"):
+            raise NotImplementedError(
+                f"chunked prefill needs a pure-attention family "
+                f"(got {cfg.family})"
+            )
+        pos = cache["pos"]
+        offset = pos[0] if pos.ndim else pos  # rows advance in lockstep
+        x = self._embed(params, tokens)
+        C = x.shape[1]
+
+        def body(x, inp):
+            p, c, rk, rv = inp
+            y, new_c, rk, rv = self._block_prefill_chunk(
+                p, x, c, rk, rv, offset=offset, kv_block=kv_block
+            )
+            return y, (new_c, rk, rv)
+
+        x, (new_attn, raw_k, raw_v) = common.scan(
+            body, x, (params["blocks"], cache["attn"], raw_k, raw_v)
+        )
+        cache = dict(cache, attn=new_attn, pos=pos + C)
+        logits = self._unembed(params, x[:, -1:])
+        return logits, cache, raw_k, raw_v
 
     def _hybrid_prefill(self, params, x, cache, kv_block):
         cfg = self.cfg

@@ -1,0 +1,423 @@
+"""Chunked prefill (DESIGN.md §11): stall-free admission with
+token-level prefix reuse (ISSUE-5).
+
+Three layers of evidence:
+
+* **Byte parity at the policy layer**: for every policy, a sequence of
+  ``prefill_chunk`` appends at W-aligned boundaries produces
+  byte-identical state to one monolithic ``prefill`` of the
+  concatenated prompt -- dense ragged buffers AND paged pools (the
+  persistent bytes read through the page table).  This is the §11
+  bit-exactness invariant at its root: quantization is per-token, so
+  chunk boundaries cannot move any code byte.
+
+* **Engine parity**: a ``BatchEngine`` with ``prefill_chunk`` set emits
+  per-row token streams bit-identical to monolithic admission for every
+  policy x supported backend, dense and paged -- the chunk's queries
+  attend the raw bf16 side buffer, not the quantized cache, so chunking
+  perturbs neither hidden states nor cache bytes.
+
+* **Scheduler fairness** (hypothesis + grid fallback): under any
+  admission arrival pattern, every live decode stream advances on every
+  scheduler quantum -- admissions can never stall decode, which is the
+  whole point of the chunked scheduler.  The hypothesis variant also
+  re-asserts bit-parity with monolithic admission per drawn pattern.
+
+Plus: token-level prefix reuse (seeded tokens skip prefill compute,
+shared pages carry one refcount per sharer, bf16 reuse is bit-exact)
+and constructor validation.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # pragma: no cover - exercised by the fast CI lane
+    from _hypothesis_stub import given, settings, st
+
+from repro.configs.paper_models import SMOL_D64
+from repro.core import paged as paged_mod
+from repro.core.cache_api import available_policies, get_policy
+from repro.launch.batch_engine import BatchEngine, Request
+from repro.models import build_model
+
+S_MAX = 64
+PAGE = 16  # == int4 flush window W: page alignment implies W alignment
+
+
+# ---------------------------------------------------------------------------
+# Policy-layer byte parity
+# ---------------------------------------------------------------------------
+
+def _tree_equal(a, b):
+    return jax.tree.all(jax.tree.map(
+        lambda x, y: bool((np.asarray(x) == np.asarray(y)).all()), a, b
+    ))
+
+
+@pytest.mark.parametrize("policy", available_policies())
+def test_policy_chunked_prefill_matches_monolithic_dense(policy):
+    """Chunked appends at W-aligned boundaries == one monolithic
+    prefill, byte for byte, on the dense ragged state (lengths,
+    packed codes, scales, residual ring -- every leaf)."""
+    pol = get_policy(policy)
+    B, H, d, S = 2, 2, 64, 70  # final chunk leaves a 6-token tail
+    key = jax.random.PRNGKey(0)
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, H, S, d), jnp.bfloat16)
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, H, S, d), jnp.bfloat16)
+    mono = pol.prefill(pol.init_state(B, H, S_MAX + 32, d, key=key,
+                                      ragged=True), k, v)
+    ch = pol.init_state(B, H, S_MAX + 32, d, key=key, ragged=True)
+    for lo, hi in ((0, 32), (32, 64), (64, 70)):
+        ch = pol.prefill_chunk(ch, k[..., lo:hi, :], v[..., lo:hi, :])
+    assert _tree_equal(mono.data, ch.data), \
+        f"{policy}: chunked dense state diverged from monolithic prefill"
+
+
+@pytest.mark.parametrize("policy", available_policies())
+def test_policy_chunked_prefill_matches_monolithic_paged(policy):
+    """Paged ``prefill_chunk`` (page-table-routed chunk writes, tail in
+    the residual ring) reproduces the monolithic persistent bytes when
+    read back through the page table."""
+    pol = get_policy(policy)
+    B, H, d, S = 2, 2, 64, 70
+    s_max = 96
+    key = jax.random.PRNGKey(0)
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, H, S, d), jnp.bfloat16)
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, H, S, d), jnp.bfloat16)
+    mono = pol.prefill(pol.init_state(B, H, s_max, d, key=key, ragged=True),
+                       k, v)
+    pg = pol.init_paged(B, H, s_max, d, n_pages=2 * (s_max // PAGE) + 1,
+                        page_size=PAGE, key=key)
+    # map a full complement of fresh pages per row, then chunk into them
+    row = pol.init_state(1, H, s_max, d, key=key, ragged=True)
+    null_plan = jnp.full((s_max // PAGE,), paged_mod.NULL_PAGE, jnp.int32)
+    for slot in range(B):
+        pg = pol.insert_row_paged(pg, row, slot, null_plan, jnp.int32(0),
+                                  jnp.int32(s_max // PAGE))
+    for lo, hi in ((0, 32), (32, 64), (64, 70)):
+        pg = pol.prefill_chunk(pg, k[..., lo:hi, :], v[..., lo:hi, :])
+
+    pd = pg.data.kv if policy == "int4-srft" else pg.data
+    views = paged_mod.gather_view(pd)
+    if policy == "bf16":
+        dense = (mono.data.k, mono.data.v)
+        n_valid = S
+    elif policy == "int8-per-token":
+        md = mono.data
+        dense = (md.k_codes, md.k_scales, md.v_codes, md.v_scales)
+        n_valid = S
+    else:  # int4-srft: persistent bytes cover the packed (W-aligned) part
+        kv = mono.data.kv
+        dense = (kv.k_packed, kv.k_scales, kv.v_packed, kv.v_scales)
+        n_valid = (S // PAGE) * PAGE
+        np.testing.assert_array_equal(
+            np.asarray(pg.data.kv.residual[0]),
+            np.asarray(kv.k_residual),
+            err_msg="int4 paged chunk tail must fill the residual ring "
+                    "exactly as monolithic prefill does",
+        )
+    assert np.array_equal(np.asarray(pd.length),
+                          np.asarray(mono.data.length))
+    for vw, dl in zip(views, dense):
+        np.testing.assert_array_equal(
+            np.asarray(vw)[:, :, :n_valid], np.asarray(dl)[:, :, :n_valid],
+            err_msg=f"{policy}: paged chunked bytes diverged",
+        )
+
+
+def test_prefill_chunk_rejects_scalar_states():
+    pol = get_policy("int4-srft")
+    state = pol.init_state(1, 2, 32, 64, key=jax.random.PRNGKey(0))
+    k = jnp.zeros((1, 2, 16, 64), jnp.bfloat16)
+    with pytest.raises(ValueError, match="ragged"):
+        pol.prefill_chunk(state, k, k)
+
+
+# ---------------------------------------------------------------------------
+# Engine parity: chunked admission == monolithic admission, per row
+# ---------------------------------------------------------------------------
+
+RAGGED_PROMPTS = (9, 37, 23)
+RAGGED_NEW = (12, 10, 7)
+
+
+_LM_CACHE: dict = {}
+
+
+def _lm():
+    """Module-cached model (plain function, not a fixture: the
+    hypothesis properties need it without fixture injection)."""
+    if not _LM_CACHE:
+        model = build_model(SMOL_D64)
+        _LM_CACHE["m"] = (model, model.init(jax.random.PRNGKey(0)))
+    return _LM_CACHE["m"]
+
+
+@pytest.fixture(scope="module")
+def lm():
+    return _lm()
+
+
+def _prompts(lens, base=40):
+    return [np.asarray(jax.random.randint(
+        jax.random.PRNGKey(base + i), (L,), 0, SMOL_D64.vocab_size))
+        for i, L in enumerate(lens)]
+
+
+def _reqs(lens=RAGGED_PROMPTS, news=RAGGED_NEW, base=40):
+    return [Request(rid=i, prompt=p, max_new_tokens=n)
+            for i, (p, n) in enumerate(zip(_prompts(lens, base), news))]
+
+
+def _run(model, params, reqs, *, capacity=3, s_max=S_MAX, **kw):
+    eng = BatchEngine(model, params, capacity=capacity, s_max=s_max,
+                      kv_block=32, chunk=4, key=jax.random.PRNGKey(7), **kw)
+    got = {c.rid: c for c in eng.run(list(reqs))}
+    return eng, got
+
+
+def _policy_backend_cases():
+    cases = []
+    for name in available_policies():
+        pol = get_policy(name)
+        for b in pol.supported_backends:
+            cases.append((name, b))
+    return cases
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("paged", [False, True])
+@pytest.mark.parametrize("policy,backend", _policy_backend_cases())
+def test_chunked_engine_matches_monolithic(lm, policy, backend, paged):
+    """ISSUE-5 acceptance oracle: chunked admission is bit-identical per
+    row to monolithic admission for every policy x supported backend,
+    dense and paged.  (The monolithic engine is itself validated against
+    single-sequence runs in test_engine.py / test_paged.py, so the
+    oracle chain bottoms out at the scalar path.)"""
+    model, params = lm
+    kw = dict(policy=policy, backend=backend, paged=paged)
+    if paged:
+        kw["page_size"] = PAGE
+    _, mono = _run(model, params, _reqs(), **kw)
+    eng, ch = _run(model, params, _reqs(), prefill_chunk=PAGE, **kw)
+    assert eng.n_prefill_chunks > 0
+    for i in range(len(RAGGED_PROMPTS)):
+        np.testing.assert_array_equal(
+            ch[i].tokens, mono[i].tokens,
+            err_msg=f"{policy}/{backend.value} paged={paged} row {i}: "
+                    f"chunked admission diverged from monolithic",
+        )
+        assert ch[i].finish_reason == mono[i].finish_reason
+    if paged:
+        assert eng.pool_stats()["pages_used"] == 0
+
+
+def test_chunked_engine_matches_monolithic_fast(lm):
+    """Fast-lane slice of the oracle: int4 + gather, dense and paged,
+    with a prefill budget smaller than the longest prompt (several
+    quanta per admission)."""
+    model, params = lm
+    for paged in (False, True):
+        kw = dict(policy="int4-srft", backend="gather", paged=paged)
+        if paged:
+            kw["page_size"] = PAGE
+        _, mono = _run(model, params, _reqs(), **kw)
+        eng, ch = _run(model, params, _reqs(), prefill_chunk=PAGE,
+                       prefill_budget=PAGE, **kw)
+        assert eng.n_prefill_chunks >= 3
+        for i in range(len(RAGGED_PROMPTS)):
+            np.testing.assert_array_equal(ch[i].tokens, mono[i].tokens)
+
+
+@pytest.mark.slow
+def test_chunked_survives_preemption(lm):
+    """Chunked admission composes with the §10 preemption machinery: an
+    undersized pool forces recompute preemption mid-serve and the
+    stitched streams still match the dense monolithic engine bit for
+    bit (the pending slot is never a preemption victim)."""
+    model, params = lm
+    reqs = _reqs(lens=(9, 20), news=(10, 8), base=60)
+    _, mono = _run(model, params, reqs, capacity=2, s_max=48, paged=False,
+                   policy="int4-srft", backend="gather")
+    eng, ch = _run(model, params, reqs, capacity=2, s_max=48, paged=True,
+                   page_size=PAGE, n_pages=4, prefill_chunk=PAGE,
+                   policy="int4-srft", backend="gather")
+    assert eng.n_preemptions > 0, "undersized pool must preempt"
+    for i in range(2):
+        np.testing.assert_array_equal(ch[i].tokens, mono[i].tokens)
+    assert eng.pool_stats()["pages_used"] == 0
+
+
+def test_chunked_validation(lm):
+    model, params = lm
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        BatchEngine(model, params, capacity=1, s_max=S_MAX,
+                    policy="int4-srft", prefill_chunk=0)
+    with pytest.raises(ValueError, match="flush window"):
+        BatchEngine(model, params, capacity=1, s_max=S_MAX,
+                    policy="int4-srft", prefill_chunk=10)
+    with pytest.raises(ValueError, match="page_size"):
+        BatchEngine(model, params, capacity=1, s_max=S_MAX,
+                    policy="bf16", paged=True, page_size=PAGE,
+                    prefill_chunk=8)
+    with pytest.raises(ValueError, match="prefill_budget"):
+        BatchEngine(model, params, capacity=1, s_max=S_MAX,
+                    policy="bf16", prefill_chunk=1, prefill_budget=0)
+    with pytest.raises(ValueError, match="prefill_chunk too"):
+        # a budget without a chunk size would silently run monolithic
+        BatchEngine(model, params, capacity=1, s_max=S_MAX,
+                    policy="bf16", prefill_budget=64)
+
+
+# ---------------------------------------------------------------------------
+# Token-level prefix reuse
+# ---------------------------------------------------------------------------
+
+def _shared_reqs(n, prefix_len, base=90, new=6):
+    prefix = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(base), (prefix_len,), 0, SMOL_D64.vocab_size))
+    return [Request(
+        rid=i,
+        prompt=np.concatenate([prefix,
+                               np.asarray([100 + i])]).astype(np.int32),
+        max_new_tokens=new) for i in range(n)]
+
+
+def test_token_level_reuse_skips_shared_chunks(lm):
+    """Admissions sharing a 37-token prefix reuse it at token level:
+    the W-aligned 32 tokens are seeded from the donor's resident pages
+    (no prefill compute), the two full prefix pages carry one refcount
+    per sharer while all three rows are live, and the fork page is
+    private."""
+    model, params = lm
+    reqs = _shared_reqs(3, 37, new=12)
+    eng = BatchEngine(model, params, capacity=3, s_max=S_MAX,
+                      policy="int4-srft", backend="gather", kv_block=32,
+                      chunk=4, key=jax.random.PRNGKey(7), paged=True,
+                      page_size=PAGE, prefill_chunk=PAGE)
+    for r in reqs:
+        eng.submit(r)
+    max_shared_3 = 0
+    while eng.pending or eng.n_active:
+        eng.step()
+        rc = eng._refcount_host
+        max_shared_3 = max(max_shared_3, int((rc == 3).sum()))
+    # the two full prefix pages were triple-referenced at peak (32 of
+    # the 37 shared tokens; the 38-token prompts' partial third page is
+    # a private COW fork per row)
+    assert max_shared_3 == 37 // PAGE
+    # 2 later admissions x 32 W-aligned shared tokens skipped each
+    assert eng.n_reused_tokens == 2 * 32
+    # each reusing admission prefilled only the 6-token remainder
+    assert eng.n_prefill_chunks == 3 + 2  # 38 tokens = 3 chunks, then 1 each
+    assert eng.pool_stats()["pages_used"] == 0
+
+
+def test_token_level_reuse_is_bit_exact_for_bf16(lm):
+    """bf16 pages hold the raw K/V bytes, so token-level reuse changes
+    nothing: streams match a no-reuse chunked run bit for bit."""
+    model, params = lm
+    reqs = _shared_reqs(3, 37, base=91)
+    kw = dict(capacity=3, s_max=S_MAX, policy="bf16", backend="gather",
+              paged=True, page_size=PAGE, prefill_chunk=PAGE)
+    eng_off, off = _run(model, params, reqs, prefix_reuse=False, **kw)
+    eng_on, on = _run(model, params, reqs, **kw)
+    assert eng_off.n_reused_tokens == 0
+    assert eng_on.n_reused_tokens == 2 * 37  # bf16: W=1, token granularity
+    for i in range(3):
+        np.testing.assert_array_equal(on[i].tokens, off[i].tokens)
+
+
+def test_reuse_needs_a_full_page(lm):
+    """Shared prefixes below one page are not reused (nothing to COW,
+    and sub-page reuse would make quantized admissions read dequantized
+    prefixes for noise-level savings)."""
+    model, params = lm
+    reqs = _shared_reqs(2, PAGE - 2, base=92)
+    eng, _ = _run(model, params, reqs, capacity=2, policy="bf16",
+                  backend="gather", paged=True, page_size=PAGE,
+                  prefill_chunk=PAGE)
+    assert eng.n_reused_tokens == 0
+
+
+# ---------------------------------------------------------------------------
+# Scheduler fairness: decode streams advance every quantum
+# ---------------------------------------------------------------------------
+
+PROMPT_LENS = (8, 24, 40)  # fixed set: bounded jit specialization
+
+
+def _check_fairness(arrivals, news, seed, *, paged):
+    """Drive a chunked engine under an arbitrary arrival pattern and
+    assert (a) every row active at the start of a quantum gains >= 1
+    token in that quantum -- no decode stream ever stalls behind an
+    admission -- and (b) the drained streams are bit-identical to
+    monolithic admission of the same workload."""
+    model, params = _lm()
+    lens = [PROMPT_LENS[(seed + i) % len(PROMPT_LENS)]
+            for i in range(len(news))]
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=n)
+            for i, (p, n) in enumerate(zip(_prompts(lens, base=70 + seed),
+                                           news))]
+    kw = dict(policy="int4-srft", backend="gather", paged=paged)
+    if paged:
+        kw["page_size"] = PAGE
+    _, mono = _run(model, params, list(reqs), capacity=2, **kw)
+
+    eng = BatchEngine(model, params, capacity=2, s_max=S_MAX,
+                      kv_block=32, chunk=4, key=jax.random.PRNGKey(7),
+                      prefill_chunk=PAGE, prefill_budget=PAGE, **kw)
+    it = iter(reqs)
+    schedule = list(arrivals)
+    submitted = 0
+    got = {}
+    stalls = []
+    while True:
+        n = schedule.pop(0) if schedule else len(reqs) - submitted
+        for _ in range(n):
+            r = next(it, None)
+            if r is not None:
+                eng.submit(r)
+                submitted += 1
+        if not (eng.pending or eng.n_active):
+            if submitted == len(reqs):
+                break
+            continue
+        rid_before = {eng._slot_req[s].rid for s in range(eng.capacity)
+                      if eng.active[s] and eng.budget[s] > 0}
+        events, comps = eng.step()
+        gained = {rid for rid, toks in events if toks}
+        stalls.extend(rid_before - gained)
+        for c in comps:
+            got[c.rid] = c
+    assert not stalls, \
+        f"decode streams stalled during admission quanta: rids {stalls}"
+    assert len(got) == len(reqs)
+    for i in range(len(reqs)):
+        np.testing.assert_array_equal(got[i].tokens, mono[i].tokens)
+
+
+@pytest.mark.slow
+@settings(max_examples=8, deadline=None)
+@given(
+    arrivals=st.lists(st.integers(0, 2), min_size=1, max_size=6),
+    n_reqs=st.integers(2, 4),
+    seed=st.integers(0, 7),
+    paged=st.booleans(),
+)
+def test_property_no_stream_stalls_behind_admission(arrivals, n_reqs,
+                                                    seed, paged):
+    _check_fairness(arrivals, tuple([6] * n_reqs), seed, paged=paged)
+
+
+@pytest.mark.parametrize("arrivals,paged", [
+    ((2, 0, 1), False),
+    ((1, 1, 1), True),
+    ((3,), True),
+])
+def test_grid_no_stream_stalls_behind_admission(arrivals, paged):
+    _check_fairness(list(arrivals), (6, 5, 7), 1, paged=paged)
