@@ -1,0 +1,346 @@
+"""Load harness for the async serving front-end (DESIGN.md §12).
+
+Replays ONE seeded arrival trace (launch/server/trace.py -- the same
+generator the CLI uses) against two servers over identical engines:
+
+* **sync** -- ``SyncServer``: the single-threaded reference loop.
+  Admission, decode dispatch and detokenize/SSE-serialize run strictly
+  one after another, so every microsecond of host work extends the
+  makespan.
+* **pipelined** -- ``ServingPipeline``: the threaded front-end.  The
+  same bucketed admission and the SAME per-token host work (shared
+  ``TokenFanout``), but detokenization runs beside the device (XLA
+  releases the GIL during a chunk dispatch) instead of between
+  dispatches.
+
+Both paths issue the same device work, so the sustained-req/s gap is
+purely the host work the pipeline overlaps.  Each mode runs at two
+detokenize costs: **light** (the smoke model's real byte-detok --
+microseconds per token, far below what a production tokenizer's BPE
+decode + chat-template/JSON work costs) and **heavy** (a busy-wait
+stand-in of ``--detok-us`` per token, production-shaped).  The
+``pipelined_server_overlaps_host_work`` claim is scored on the heavy
+rows -- best-of ``--repeats`` alternating trials, pipelined sustained
+req/s >= the sync loop's -- where the overlap is the dominant term
+rather than thread-wakeup noise; the light rows and the
+``host_work_absorbed`` delta are reported for context.  While
+measuring, the harness also checks stream parity: every request's
+token stream must be bit-identical between the two servers (greedy
+sampling; DESIGN.md §9/§12).
+
+Results are MERGED into ``BENCH_decode.json`` at the repo root as
+``server_measured`` rows plus the claim (read-modify-write: the
+e2e_decode record this file extends is preserved), and saved to
+artifacts/bench/serve_load.json.  Exit status 1 if the claim fails --
+CI bench-smoke runs ``--smoke`` on every PR.
+
+Usage:
+    PYTHONPATH=src python benchmarks/serve_load.py [--smoke]
+        [--requests N] [--prompt-len L] [--new-tokens T]
+        [--capacity C] [--arrival {poisson,bursty,closed}]
+        [--rate R] [--repeats K]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+if __package__ in (None, ""):  # `python benchmarks/serve_load.py`
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+import numpy as np
+
+from benchmarks.common import fmt_table, save_record
+from repro.configs.paper_models import PAPER_MODELS
+from repro.launch.batch_engine import BatchEngine, Request
+from repro.launch.server import ServingPipeline, SyncServer, make_trace
+from repro.launch.server.pipeline import drain_stream
+from repro.models import build_model
+
+ROOT_RECORD = os.path.join(
+    os.path.dirname(__file__), "..", "BENCH_decode.json"
+)
+
+
+def _mk_engine(model, params, *, capacity, s_max, policy, chunk):
+    return BatchEngine(model, params, capacity=capacity, s_max=s_max,
+                       policy=policy, backend="gather", chunk=chunk,
+                       key=jax.random.PRNGKey(7))
+
+
+def _transplant(dst: BatchEngine, src: BatchEngine) -> BatchEngine:
+    """Move src's compiled callables into a fresh engine so timed runs
+    exclude compilation (the e2e_decode warm-pass idiom)."""
+    dst._chunk_fns = src._chunk_fns
+    dst._prefill_fn = src._prefill_fn
+    dst._chunk_prefill_fn = src._chunk_prefill_fn
+    dst._insert_fn = src._insert_fn
+    dst._insert_paged_fn = src._insert_paged_fn
+    dst._reset_fn = src._reset_fn
+    dst._seed_fn = src._seed_fn
+    dst._slice_row_fn = src._slice_row_fn
+    dst._slice_axes = src._slice_axes
+    return dst
+
+
+def _collect_streams(fanout_streams: dict) -> dict:
+    return {rid: drain_stream(q, timeout=5.0)
+            for rid, q in fanout_streams.items()}
+
+
+def _trial(mk, items, mode, *, capacity, host_work_s,
+           prestage=False) -> dict:
+    """One timed replay.  ``host_work_s`` is the per-token
+    detokenize-stage cost stand-in (``TokenFanout.host_work_s``).
+    ``prestage`` (closed-burst claim trials) queues every request into
+    the pipeline's intake BEFORE the stage threads start, so the
+    admission sweep sees the whole burst at once and forms the same
+    full packed groups the sync loop does -- identical device work on
+    both sides, the makespan gap is pure host-overlap."""
+    eng = mk()
+    if mode == "sync":
+        srv = SyncServer(eng, max_group=capacity)
+        srv.fanout.host_work_s = host_work_s
+        makespan = srv.replay(items)
+        metrics = srv.metrics
+        srv.close()
+    else:
+        pipe = ServingPipeline(eng, max_group=capacity,
+                               admit_queue=max(len(items), 8))
+        pipe.fanout.host_work_s = host_work_s
+        if prestage:
+            t0 = time.perf_counter()
+            for item in items:
+                pipe.submit(item.req)
+            pipe.start()
+            pipe.drain(timeout=600.0)
+            makespan = time.perf_counter() - t0
+        else:
+            pipe.start()
+            makespan = pipe.replay(items)
+        pipe.shutdown()
+        metrics = pipe.metrics
+    snap = metrics.snapshot()
+    row = {
+        "mode": mode,
+        "detok_us_per_tok": host_work_s * 1e6,
+        "sustained_req_s": len(items) / makespan,
+        "makespan_s": makespan,
+        "tokens": snap["tokens_streamed"],
+        "ttft_p50_ms": snap["ttft_s"]["p50"] * 1e3,
+        "ttft_p99_ms": snap["ttft_s"]["p99"] * 1e3,
+        "itl_p50_ms": snap["itl_s"]["p50"] * 1e3,
+        "itl_p99_ms": snap["itl_s"]["p99"] * 1e3,
+        "completed": snap["requests_completed"],
+    }
+    if row["completed"] != len(items):
+        raise AssertionError(
+            f"{mode}: {row['completed']} of {len(items)} requests "
+            f"completed"
+        )
+    return row
+
+
+def measure(model, params, *, capacity, s_max, policy, chunk,
+            burst_items, load_items, repeats,
+            detok_s) -> tuple[dict, list, bool]:
+    """Alternating trials over warm engines at two detokenize costs:
+    ~0 (the smoke model's microsecond byte-detok) and ``detok_s`` per
+    token (production-shaped: BPE decode + chat-template/JSON work
+    costs on the order of a millisecond).  The CLAIM trials replay the
+    closed burst with pre-staged intake -- grouping, and so device
+    work, is then deterministic and identical on both sides.  One
+    open-loop pair over ``load_items`` is measured for TTFT/ITL
+    context (its grouping depends on wall-clock arrival races, so no
+    claim rests on it).  Returns (best claim rows keyed by
+    (mode, level), context rows, streams_identical)."""
+    def mk():
+        return _transplant(
+            _mk_engine(model, params, capacity=capacity, s_max=s_max,
+                       policy=policy, chunk=chunk), warm)
+
+    # warm pass compiles every shape the trace touches: the closed-loop
+    # run covers decode chunks/insert/reset plus full packed groups,
+    # then every remaining (group size, length) prefill shape an
+    # open-loop arrival race can form -- a mid-trial XLA compile would
+    # otherwise poison that trial with a multi-second stall
+    warm = _mk_engine(model, params, capacity=capacity, s_max=s_max,
+                      policy=policy, chunk=chunk)
+    warm_srv = SyncServer(warm, max_group=capacity)
+    for item in burst_items:
+        warm_srv.submit(item.req)
+    warm_srv.run_until_drained()
+    warm_srv.close()
+    lens = sorted({int(np.asarray(it.req.prompt).shape[-1])
+                   for it in burst_items})
+    rid = 1_000_000
+    for plen in lens:
+        for k in range(1, capacity + 1):
+            group = [Request(rid + j, prompt=np.zeros(plen, np.int32),
+                             max_new_tokens=1) for j in range(k)]
+            rid += k
+            warm.admit_packed(group)
+            while warm.has_work:
+                warm.step()
+
+    best: dict = {}
+    for _ in range(repeats):
+        for level, work in (("light", 0.0), ("heavy", detok_s)):
+            for mode in ("sync", "pipelined"):  # alternate: fair drift
+                row = _trial(mk, burst_items, mode, capacity=capacity,
+                             host_work_s=work, prestage=True)
+                row["host_work"] = level
+                row["phase"] = "throughput"
+                key = (mode, level)
+                if (key not in best or row["sustained_req_s"]
+                        > best[key]["sustained_req_s"]):
+                    best[key] = row
+    context = []
+    for mode in ("sync", "pipelined"):  # open-loop latency character
+        row = _trial(mk, load_items, mode, capacity=capacity,
+                     host_work_s=detok_s)
+        row["host_work"] = "heavy"
+        row["phase"] = "latency"
+        context.append(row)
+    # stream parity check (streams are consumed during collection, so
+    # it runs outside the timed trials; closed-loop submission => the
+    # admission grouping is identical on both sides)
+    sync_srv = SyncServer(mk(), max_group=capacity)
+    s_streams = {it.req.rid: sync_srv.submit(it.req)
+                 for it in burst_items}
+    sync_srv.run_until_drained()
+    ref = _collect_streams(s_streams)
+    sync_srv.close()
+    pipe = ServingPipeline(mk(), max_group=capacity,
+                           admit_queue=max(len(burst_items), 8)).start()
+    p_streams = {it.req.rid: pipe.submit(it.req) for it in burst_items}
+    got = _collect_streams(p_streams)
+    pipe.shutdown()
+    return best, context, got == ref
+
+
+def run(*, smoke: bool = False, requests: int = 32, prompt_len: int = 48,
+        new_tokens: int = 24, capacity: int = 8, chunk: int = 8,
+        arrival: str = "poisson", rate: float = 50.0, repeats: int = 3,
+        detok_us: float = 500.0) -> dict:
+    if smoke:
+        requests = min(requests, 24)
+        new_tokens = min(new_tokens, 16)
+        repeats = min(repeats, 3)
+    cfg = PAPER_MODELS["smol-d64"]
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    policy = "int4-srft"
+    window = getattr(model.cache_policy(policy), "window", 1)
+    s_max = prompt_len + new_tokens + window
+    s_max += (-s_max) % max(window, 1)
+
+    burst_items = make_trace(requests, prompt_len=prompt_len,
+                             new_tokens=new_tokens, seed=0, align=window,
+                             run_len=capacity, arrival="closed")
+    load_items = make_trace(requests, prompt_len=prompt_len,
+                            new_tokens=new_tokens, seed=0, align=window,
+                            run_len=capacity, arrival=arrival, rate=rate)
+    print(f"[serve_load] {requests} requests, claim=closed burst, "
+          f"context arrival={arrival} (rate={rate}/s), "
+          f"capacity={capacity}, chunk={chunk}, policy={policy}, "
+          f"detok={detok_us:.0f}us/tok, {repeats} alternating trials")
+
+    best, context, parity_ok = measure(
+        model, params, capacity=capacity, s_max=s_max, policy=policy,
+        chunk=chunk, burst_items=burst_items, load_items=load_items,
+        repeats=repeats, detok_s=detok_us * 1e-6,
+    )
+    rows = [best[k] for k in (("sync", "light"), ("pipelined", "light"),
+                              ("sync", "heavy"), ("pipelined", "heavy"))]
+    rows += context
+    for row in rows:
+        row.update(policy=policy,
+                   arrival=("closed" if row["phase"] == "throughput"
+                            else arrival),
+                   requests=requests, new_tokens=new_tokens,
+                   capacity=capacity)
+        for k, v in list(row.items()):
+            if isinstance(v, float):
+                row[k] = round(v, 3)
+    print(fmt_table(rows, ["phase", "mode", "host_work", "arrival",
+                           "sustained_req_s", "makespan_s",
+                           "ttft_p50_ms", "itl_p50_ms", "itl_p99_ms",
+                           "tokens"]))
+
+    # how much of the injected host work each server absorbed into
+    # device time (seconds of detok that did NOT extend the makespan)
+    sync_delta = (best[("sync", "heavy")]["makespan_s"]
+                  - best[("sync", "light")]["makespan_s"])
+    pipe_delta = (best[("pipelined", "heavy")]["makespan_s"]
+                  - best[("pipelined", "light")]["makespan_s"])
+    speedup = (best[("pipelined", "heavy")]["sustained_req_s"]
+               / max(best[("sync", "heavy")]["sustained_req_s"], 1e-9))
+    claims = {
+        # the tentpole claim, at production-shaped detok cost: the
+        # pipelined server sustains >= the sync loop's req/s (2%
+        # measurement-noise guard band; the sync loop pays every
+        # detok second serially, the pipeline runs it beside the
+        # device's GIL-released execute)
+        "pipelined_server_overlaps_host_work":
+            bool(best[("pipelined", "heavy")]["sustained_req_s"]
+                 >= 0.98 * best[("sync", "heavy")]["sustained_req_s"]),
+        "server_streams_bit_identical": bool(parity_ok),
+    }
+    print(f"host-work makespan growth: sync +{sync_delta:.3f}s, "
+          f"pipelined +{pipe_delta:.3f}s; heavy pipelined/sync "
+          f"sustained req/s: {speedup:.3f}x   claims: {claims}")
+
+    record = {
+        "server_measured": rows,
+        "server_pipeline_speedup": round(speedup, 3),
+        "server_host_work_absorbed_s": round(sync_delta - pipe_delta, 3),
+        "smoke": bool(smoke),
+        "claims": claims,
+    }
+    save_record("serve_load", record)
+
+    # merge into the repo-root perf trajectory WITHOUT clobbering the
+    # e2e_decode record this file extends
+    root = {}
+    if os.path.exists(ROOT_RECORD):
+        with open(ROOT_RECORD) as f:
+            root = json.load(f)
+    root["server_measured"] = rows
+    root["server_pipeline_speedup"] = round(speedup, 3)
+    root["server_host_work_absorbed_s"] = round(sync_delta - pipe_delta, 3)
+    root.setdefault("claims", {}).update(claims)
+    with open(ROOT_RECORD, "w") as f:
+        json.dump(root, f, indent=2, default=float)
+    print(f"[record] merged into {os.path.abspath(ROOT_RECORD)}")
+    return record
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run")
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--new-tokens", type=int, default=24)
+    ap.add_argument("--capacity", type=int, default=8)
+    ap.add_argument("--chunk", type=int, default=8)
+    ap.add_argument("--arrival", default="poisson",
+                    choices=["poisson", "bursty", "closed"])
+    ap.add_argument("--rate", type=float, default=50.0)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--detok-us", type=float, default=500.0,
+                    help="per-token host-work stand-in for the heavy "
+                         "rows (production BPE+template cost)")
+    args = ap.parse_args()
+    record = run(smoke=args.smoke, requests=args.requests,
+                 prompt_len=args.prompt_len, new_tokens=args.new_tokens,
+                 capacity=args.capacity, chunk=args.chunk,
+                 arrival=args.arrival, rate=args.rate,
+                 repeats=args.repeats, detok_us=args.detok_us)
+    if not all(record["claims"].values()):
+        sys.exit(1)

@@ -1,0 +1,139 @@
+"""End-to-end smoke of the HTTP/SSE serving front-end (DESIGN.md §12).
+
+Boots ``python -m repro.launch.serve --http`` as a real subprocess on
+an ephemeral port and drives the full request cycle a client would:
+
+1. wait for the boot banner, parse the listening URL;
+2. stream one completion over SSE (``stream: true``) and check the
+   event framing (token events, ``finish_reason``, ``data: [DONE]``);
+3. fetch the same prompt unstreamed and check the token streams match
+   (the SSE path is a view of the same engine stream, not a fork);
+4. scrape ``/healthz`` and ``/metrics`` and check the served request
+   is visible in the counters;
+5. SIGINT the server and check it drains and exits 0.
+
+Everything is stdlib (urllib) -- CI's server-smoke job runs exactly
+this file.  Exit status is non-zero on any failed check.
+"""
+from __future__ import annotations
+
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+import urllib.error
+import urllib.request
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _boot() -> tuple[subprocess.Popen, str]:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.serve", "--smoke", "--http",
+         "--port", "0", "--max-batch", "2", "--prompt-len", "16",
+         "--new-tokens", "8", "--policy", "int4-srft"],
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True,
+        cwd=REPO, env=env,
+    )
+    deadline = time.monotonic() + 300
+    lines = []
+    while time.monotonic() < deadline:
+        line = proc.stdout.readline()
+        if not line:
+            raise AssertionError(
+                "server exited before listening:\n" + "".join(lines)
+            )
+        lines.append(line)
+        if "listening on" in line:
+            url = line.split("listening on", 1)[1].split()[0]
+            return proc, url
+    raise AssertionError("server never printed its listening URL")
+
+
+def _post(url: str, body: dict, timeout: float = 300.0):
+    req = urllib.request.Request(
+        url + "/v1/completions",
+        data=json.dumps(body).encode(),
+        headers={"Content-Type": "application/json"},
+    )
+    return urllib.request.urlopen(req, timeout=timeout)
+
+
+def _stream_completion(url: str, prompt, max_tokens: int) -> list[int]:
+    toks: list[int] = []
+    saw_done = saw_finish = False
+    with _post(url, {"prompt": prompt, "max_tokens": max_tokens,
+                     "stream": True}) as resp:
+        assert resp.headers["Content-Type"].startswith("text/event-stream"), \
+            f"not SSE: {resp.headers['Content-Type']}"
+        for raw in resp:
+            line = raw.decode().strip()
+            if not line.startswith("data: "):
+                continue
+            payload = line[len("data: "):]
+            if payload == "[DONE]":
+                saw_done = True
+                break
+            ev = json.loads(payload)
+            toks.extend(ev["tokens"])
+            if ev["finish_reason"] is not None:
+                saw_finish = True
+    assert saw_finish, "stream ended without a finish_reason event"
+    assert saw_done, "stream ended without data: [DONE]"
+    return toks
+
+
+def main() -> None:
+    proc, url = _boot()
+    try:
+        print(f"[server_smoke] serving at {url}")
+
+        toks = _stream_completion(url, "hello world", 6)
+        assert len(toks) == 6, f"streamed {len(toks)} tokens, wanted 6"
+        print(f"[server_smoke] SSE completion: {len(toks)} tokens")
+
+        with _post(url, {"prompt": "hello world", "max_tokens": 6,
+                         "stream": False}) as resp:
+            body = json.loads(resp.read())
+        assert body["tokens"] == toks, (
+            f"unstreamed tokens {body['tokens']} != streamed {toks}"
+        )
+        assert body["finish_reason"] == "length", body
+        print(f"[server_smoke] unstreamed completion matches: "
+              f"{body['text']!r}")
+
+        with urllib.request.urlopen(url + "/healthz", timeout=60) as resp:
+            health = json.loads(resp.read())
+        assert health["ok"] and health["slots_capacity"] == 2, health
+
+        with urllib.request.urlopen(url + "/metrics", timeout=60) as resp:
+            metrics = resp.read().decode()
+        for marker in ("server_requests_completed_total 2",
+                       "server_tokens_streamed_total 12",
+                       "server_ttft_seconds{quantile=\"0.5\"}"):
+            assert marker in metrics, (
+                f"missing {marker!r} in /metrics:\n{metrics}"
+            )
+        print("[server_smoke] /healthz + /metrics OK")
+
+        proc.send_signal(signal.SIGINT)
+        out, _ = proc.communicate(timeout=120)
+        assert proc.returncode == 0, (
+            f"server exited {proc.returncode}:\n{out}"
+        )
+        assert "drained" in out, f"no drain confirmation:\n{out}"
+        print("[server_smoke] SIGINT -> drained, exit 0")
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+            proc.communicate()
+    print("[server_smoke] PASS")
+
+
+if __name__ == "__main__":
+    main()

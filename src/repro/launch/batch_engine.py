@@ -87,8 +87,9 @@ or drive ``step()`` directly for token-level streaming.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from collections import deque
-from typing import Any, Iterator, Optional
+from typing import Any, Callable, Iterator, Optional
 
 import jax
 import jax.numpy as jnp
@@ -126,7 +127,7 @@ class Completion:
     rid: int
     prompt_len: int
     tokens: np.ndarray  # (n_generated,) int32
-    finish_reason: str  # "length" | "eos"
+    finish_reason: str  # "length" | "eos" | "cancelled"
 
 
 @dataclasses.dataclass
@@ -256,6 +257,18 @@ class BatchEngine:
         self.n_prefill_chunks = 0
         self.n_reused_tokens = 0
 
+        # thread-safe step API (DESIGN.md §12): the serving pipeline
+        # runs admission, decode and intake on different threads, all
+        # serialized on this lock (one device; the overlap the pipeline
+        # buys is host work against device work, never two dispatches).
+        # ``step_listeners`` are called with every non-empty (events,
+        # completions) pair -- the detokenize stage consumes the stream
+        # without polling step() return values.
+        self.lock = threading.RLock()
+        self.step_listeners: list[
+            Callable[[list[tuple[int, list[int]]], list[Completion]], None]
+        ] = []
+
         # the slot cache: one ragged CacheState per layer, plus per-row
         # pos.  Row caches built at admission reuse _init_key/_rots so
         # their rotations are bit-identical to the slot cache's (an
@@ -330,6 +343,11 @@ class BatchEngine:
         )
         self._raw_view_fn = jax.jit(self._raw_view_impl,
                                     static_argnums=(1, 2))
+        # packed admission (DESIGN.md §12): slice one row out of a
+        # batch-k staging cache (the staging cache is reused for every
+        # row, so it is NOT donated here)
+        self._slice_axes: Optional[tuple] = None
+        self._slice_row_fn = jax.jit(self._slice_row_impl)
 
     def _rots_copy(self):
         return None if self._rots is None \
@@ -397,6 +415,53 @@ class BatchEngine:
             return jnp.pad(x[..., :s_shared, :].astype(jnp.bfloat16), pad)
 
         return clip(k), clip(v)
+
+    def _row_slice_axes(self) -> tuple:
+        """Per-leaf batch-axis map for slicing one row out of a batch-k
+        staging cache: None where the leaf is batch-independent (shared
+        rotation constants -- bit-identical across every staging cache
+        built from ``_init_key``), else the axis whose extent is the
+        staging batch.  Derived by diffing ABSTRACT shapes of batch-1 vs
+        batch-2 staging caches (``jax.eval_shape``: no arrays are
+        materialized), so the rule cannot be confused by head counts or
+        capacities that happen to equal the group size."""
+        if self._slice_axes is None:
+            def shapes(b):
+                return jax.eval_shape(lambda: self.model.init_cache(
+                    b, self.s_max, policy=self.policy,
+                    rots=self._rots_copy(), key=self._init_key, ragged=True,
+                ))
+
+            axes = []
+            for t1, t2 in zip(jax.tree.leaves(shapes(1)),
+                              jax.tree.leaves(shapes(2))):
+                if t1.shape == t2.shape:
+                    axes.append(None)
+                    continue
+                diff = [i for i, (a, b) in enumerate(zip(t1.shape, t2.shape))
+                        if a != b]
+                if len(diff) != 1 or t1.shape[diff[0]] != 1:
+                    raise AssertionError(
+                        f"cannot locate the batch axis of a staging-cache "
+                        f"leaf: {t1.shape} vs {t2.shape}"
+                    )
+                axes.append(diff[0])
+            self._slice_axes = tuple(axes)
+        return self._slice_axes
+
+    def _slice_row_impl(self, staged, j):
+        """Batch-1 view of row ``j`` of a batch-k staging cache, shaped
+        exactly like a monolithic admission's staging row -- feeds the
+        shared ``_insert_row`` path.  ``j`` is traced: one compilation
+        per staging shape, not per row."""
+        axes = self._row_slice_axes()
+        leaves = jax.tree.leaves(staged)
+        out = [
+            leaf if ax is None
+            else jax.lax.dynamic_slice_in_dim(leaf, j, 1, axis=ax)
+            for leaf, ax in zip(leaves, axes)
+        ]
+        return jax.tree.unflatten(jax.tree.structure(staged), out)
 
     # ------------------------------------------------------- paged pool state
     def _pd(self) -> PagedData:
@@ -527,6 +592,10 @@ class BatchEngine:
         and benchmarks cannot drift)."""
         if not self.paged:
             return None
+        with self.lock:
+            return self._pool_stats_locked()
+
+    def _pool_stats_locked(self) -> dict:
         rc = self._refcount_host
         used = int((rc > 0).sum()) - 1
         usable = self.n_pages - 1
@@ -588,7 +657,9 @@ class BatchEngine:
         return fn
 
     # -------------------------------------------------------------- schedule
-    def submit(self, req: Request) -> None:
+    def _validate(self, req: Request) -> int:
+        """Shared request validation (submit + packed admission).
+        Returns the prompt length."""
         n = int(np.asarray(req.prompt).shape[-1])
         if n < 1:
             raise ValueError(f"request {req.rid}: empty prompt")
@@ -601,11 +672,16 @@ class BatchEngine:
                 f"request {req.rid}: prompt ({n}) + max_new_tokens "
                 f"({req.max_new_tokens}) exceeds s_max={self.s_max}"
             )
-        # paged admissibility needs no extra check here: the s_max bound
-        # above caps any request at max_pages pages, and the constructor
-        # floor (n_pages >= max_pages + 1) guarantees the pool can hold
-        # that once everything else is preempted
-        self._queue.append(req)
+        return n
+
+    def submit(self, req: Request) -> None:
+        with self.lock:
+            self._validate(req)
+            # paged admissibility needs no extra check here: the s_max
+            # bound above caps any request at max_pages pages, and the
+            # constructor floor (n_pages >= max_pages + 1) guarantees
+            # the pool can hold that once everything else is preempted
+            self._queue.append(req)
 
     @property
     def pending(self) -> int:
@@ -616,6 +692,26 @@ class BatchEngine:
     @property
     def n_active(self) -> int:
         return int(self.active.sum())
+
+    @property
+    def n_free_slots(self) -> int:
+        """Slots holding no request (neither live nor reserved by an
+        in-flight chunked admission)."""
+        return sum(1 for r in self._slot_req if r is None)
+
+    @property
+    def has_work(self) -> bool:
+        return self.pending > 0 or bool(self.active.any())
+
+    def _notify(self, events, completions) -> None:
+        """Fan (events, completions) out to ``step_listeners``.  Called
+        with the engine lock held, so listeners observe engine state
+        consistent with the batch they are handed; they must be quick
+        (enqueue-and-return) and must not call back into the engine."""
+        if not events and not completions:
+            return
+        for fn in list(self.step_listeners):
+            fn(events, completions)
 
     def _admit(self, req: Request, slot: int, plan=None
                ) -> Optional[Completion]:
@@ -809,7 +905,8 @@ class BatchEngine:
             events.append((req.rid, [self._slot_toks[slot][0]]))
         return True, events, completions
 
-    def _retire(self, slot: int) -> Completion:
+    def _retire(self, slot: int, reason: Optional[str] = None
+                ) -> Completion:
         req = self._slot_req[slot]
         toks = self._slot_toks[slot]
         max_new = req.max_new_tokens
@@ -821,11 +918,12 @@ class BatchEngine:
             toks = carried + toks
             plen, max_new = self._orig.pop(req.rid, (plen, max_new))
         toks = np.asarray(toks, np.int32)
-        reason = (
-            "eos" if self.eos_id is not None and len(toks)
-            and toks[-1] == self.eos_id
-            and len(toks) < max_new else "length"
-        )
+        if reason is None:
+            reason = (
+                "eos" if self.eos_id is not None and len(toks)
+                and toks[-1] == self.eos_id
+                and len(toks) < max_new else "length"
+            )
         self._slot_req[slot] = None
         self._slot_toks[slot] = []
         self.active[slot] = False
@@ -834,6 +932,56 @@ class BatchEngine:
             rid=req.rid, prompt_len=plen,
             tokens=toks, finish_reason=reason,
         )
+
+    def _cancelled(self, req: Request, toks: list[int]) -> Completion:
+        """Completion for a cancelled request: everything streamed so
+        far, reported against the ORIGINAL prompt/budget.  A preempted
+        continuation's streamed tokens live entirely in ``_carried``
+        (``_preempt_one`` carries the whole slot stream, resume token
+        included), so queued continuations pass ``toks=[]``."""
+        plen = int(np.asarray(req.prompt).shape[-1])
+        max_new = req.max_new_tokens
+        if self.paged:
+            toks = self._carried.pop(req.rid, []) + toks
+            plen, max_new = self._orig.pop(req.rid, (plen, max_new))
+        return Completion(
+            rid=req.rid, prompt_len=plen,
+            tokens=np.asarray(toks, np.int32), finish_reason="cancelled",
+        )
+
+    def cancel_all(self) -> list[Completion]:
+        """Drain-on-shutdown (DESIGN.md §12): cancel every live, pending
+        and queued request, returning partial ``Completion``s
+        (``finish_reason="cancelled"``, tokens = everything streamed so
+        far).  Afterwards the engine is empty -- all slots free, every
+        row length zero and, paged, every refcount back to zero except
+        the pinned null page -- so a drained server leaks nothing.
+        Listeners see the cancellations as one final batch."""
+        with self.lock:
+            completions: list[Completion] = []
+            if self._pending is not None:
+                pend = self._pending
+                self._pending = None  # drop staging buffers
+                self._slot_req[pend.slot] = None  # release reservation
+                completions.append(self._cancelled(pend.req, []))
+            for slot in range(self.capacity):
+                if self._slot_req[slot] is not None:
+                    completions.append(
+                        self._retire(slot, reason="cancelled")
+                    )
+            while self._queue:
+                completions.append(
+                    self._cancelled(self._queue.popleft(), [])
+                )
+            self.active[:] = False
+            self.budget[:] = 0
+            self.cache = self._reset_fn(
+                self.cache, jnp.asarray(np.ones((self.capacity,), bool))
+            )
+            if self.paged:
+                self._sync_pool()
+            self._notify([], completions)
+            return completions
 
     def _admit_monolithic(self, round_start: int, events: list,
                           completions: list) -> None:
@@ -867,6 +1015,99 @@ class BatchEngine:
                 self._reset_slot_now(slot)
             elif req.resume_tok is None:  # resumes already streamed theirs
                 events.append((req.rid, [self._slot_toks[slot][0]]))
+
+    # ------------------------------------------------- packed admission
+    def admit_packed(self, reqs: list[Request]) -> None:
+        """Admit ``reqs`` through ONE batched prefill dispatch
+        (DESIGN.md §12).  All prompts must share one exact length L --
+        the batch is stacked, not padded: right-padding would change the
+        flash-prefill reduction order AND leave junk bytes in the cache,
+        so same-length stacking is the only packing that keeps cache
+        bytes exactly what a same-width grouped replay produces.
+
+        Determinism contract: on CPU XLA, matmul rounding is only
+        row-deterministic at fixed batch width (DESIGN.md §9), so a
+        packed admission's rows are bit-identical to any other batch-k
+        prefill of the same prompts IN ANY ROW ORDER -- but not to k
+        batch-1 prefills.  Stream parity therefore holds between two
+        runs that use the same admission *grouping*; the serving
+        pipeline's reference replay reuses this method for exactly that
+        reason.
+
+        Needs ``len(reqs)`` free slots up front (raises otherwise --
+        the caller buckets against ``n_free_slots``) and monolithic
+        admission mode (chunked prefill has its own stall-free path).
+        Paged mode plans pages per row in admission order, preempting
+        pre-round LRU victims exactly like ``_admit_monolithic``; rows
+        the pool cannot fit are requeued at the FRONT in order (their
+        prefill work is repeated on retry -- rare, and correctness
+        needs the requeue to preserve FIFO order)."""
+        with self.lock:
+            if not reqs:
+                return
+            if self.prefill_chunk is not None:
+                raise ValueError(
+                    "admit_packed requires monolithic admission "
+                    "(prefill_chunk=None); chunked admission already "
+                    "interleaves prefill with decode"
+                )
+            lens = {self._validate(r) for r in reqs}
+            if len(lens) != 1:
+                raise ValueError(
+                    f"admit_packed needs one exact prompt length, got "
+                    f"{sorted(lens)} (stacked, never padded: padding "
+                    f"would poison cache bytes)"
+                )
+            free = [s for s in range(self.capacity)
+                    if self._slot_req[s] is None]
+            if len(reqs) < 1 or len(reqs) > len(free):
+                raise ValueError(
+                    f"admit_packed: {len(reqs)} requests but only "
+                    f"{len(free)} free slots (callers pack against "
+                    f"n_free_slots)"
+                )
+            self._admit_packed_locked(reqs, free[:len(reqs)])
+
+    def _admit_packed_locked(self, reqs: list[Request],
+                             slots: list[int]) -> None:
+        k = len(reqs)
+        prompts = jnp.asarray(
+            np.stack([np.asarray(r.prompt, np.int32) for r in reqs])
+        )
+        L = int(prompts.shape[-1])
+        staged = self.model.init_cache(
+            k, self.s_max, policy=self.policy, rots=self._rots_copy(),
+            key=self._init_key, ragged=True,
+        )
+        logits, staged = self._prefill_fn(self.params, prompts, staged)
+        events: list[tuple[int, list[int]]] = []
+        completions: list[Completion] = []
+        round_start = self._admit_seq if self.paged else 0
+        for j, (req, slot) in enumerate(zip(reqs, slots)):
+            plan = None
+            if self.paged:
+                while True:
+                    plan = self._plan_pages(req)
+                    if plan is not None:
+                        break
+                    if not self._preempt_one(round_start):
+                        # pool dry mid-group: requeue the unplaced tail
+                        # in order at the front (their staged rows are
+                        # dropped; re-admission recomputes them)
+                        self._queue.extendleft(reversed(reqs[j:]))
+                        self._notify(events, completions)
+                        return
+            row = self._slice_row_fn(staged, jnp.asarray(j))
+            tok0 = self._draw_tok0(req, logits[j:j + 1])
+            self._insert_row(req, slot, row, tok0, L, plan)
+            done = self._post_insert(req, slot, tok0)
+            if done is not None:  # finished at admission (eos / n=1)
+                events.append((req.rid, [int(done.tokens[-1])]))
+                completions.append(done)
+                self._reset_slot_now(slot)
+            elif req.resume_tok is None:
+                events.append((req.rid, [self._slot_toks[slot][0]]))
+        self._notify(events, completions)
 
     def _admit_chunked(self, round_start: int, events: list,
                        completions: list) -> None:
@@ -921,7 +1162,16 @@ class BatchEngine:
         prefill, or up to ``prefill_budget`` tokens of chunked prefill),
         decode one chunk.  Returns (events, completions) -- ``events``
         is the token stream, one ``(rid, new_tokens)`` per live
-        request."""
+        request.  ``step_listeners`` receive the same pair before it is
+        returned (still under the engine lock)."""
+        with self.lock:
+            events, completions = self._step_locked()
+            self._notify(events, completions)
+            return events, completions
+
+    def _step_locked(self
+                     ) -> tuple[list[tuple[int, list[int]]],
+                                list[Completion]]:
         events: list[tuple[int, list[int]]] = []
         completions: list[Completion] = []
         newly_retired = np.zeros((self.capacity,), bool)

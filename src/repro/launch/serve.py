@@ -1,4 +1,4 @@
-"""Continuous-batching serving driver over the ``KVCachePolicy`` registry.
+"""Serving CLI over the ``KVCachePolicy`` registry.
 
     PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
         --smoke --max-batch 4 --requests 8 \
@@ -6,39 +6,48 @@
         [--policy {bf16,int4-srft,int8-per-token,...}] \
         [--backend {gather,blockwise,kernel}] \
         [--temperature T] [--top-k K] [--chunk N] \
+        [--http] [--port P] [--stats-json PATH] \
         [--calibrate] [--ckpt-dir DIR]
 
 The serving analogue of launch/train.py: builds the arch (optionally
 smoke-reduced), loads params from a checkpoint or initializes them,
 optionally calibrates per-channel lambda from a short prompt stream (the
-paper's ~2 s one-forward-pass recipe, §7.3), then serves a queue of
-requests with MIXED prompt lengths through the continuous-batching
-engine (launch/batch_engine.py): up to ``--max-batch`` requests share
-one ragged slot cache, every decode chunk is one donated-buffer
-``lax.scan`` dispatch, finished rows are masked (never re-traced) and
-their slots are immediately refilled from the queue.  Responses stream
-per chunk.  Reports per-request prefill latency and aggregate decode
-throughput separately (a single folded tok/s number hides the
-prefill/decode asymmetry the paper's bandwidth argument is about), plus
-the measured persistent-cache compression ratio straight from the
-policy API -- serving and benchmarks share one byte-accounting method
-and cannot drift.
+paper's ~2 s one-forward-pass recipe, §7.3), then serves requests
+through the continuous-batching engine (launch/batch_engine.py): up to
+``--max-batch`` requests share one ragged slot cache, every decode
+chunk is one donated-buffer ``lax.scan`` dispatch, finished rows are
+masked (never re-traced) and their slots are immediately refilled.
+
+Two front-ends over the same engine:
+
+* the default **closed-loop queue** -- a seeded mixed-prompt-length
+  workload (launch/server/trace.py, the same generator the load
+  harness replays) streamed to stdout, reporting aggregate tok/s and
+  the policy-API compression/footprint block;
+* ``--http`` -- the **async serving front-end** (DESIGN.md §12): the
+  threaded prefill/decode/detokenize pipeline behind a stdlib
+  HTTP/SSE server (``POST /v1/completions`` with ``"stream": true``,
+  ``/healthz``, ``/metrics``).  SIGINT drains live streams, retires
+  every slot, and prints the final stats block before exiting; a
+  second SIGINT cancels instead of draining.
+
+Both paths print the same policy-API compression report through one
+shared helper (``_cache_report``), and ``--stats-json`` writes the
+machine-readable twin of that block (plus server metrics when
+serving) so harnesses assert on JSON instead of parsing stdout.
 
 ``--paged`` swaps the dense slot cache for the paged KV pool
-(DESIGN.md §10): a block allocator + per-row page tables, COW sharing
-of page-aligned common prompt prefixes, admission control on free
-pages with LRU preemption-to-queue, and pool utilization /
-pages-per-request reported next to tok/s.
-
-Families with recurrent state (ssm/hybrid/audio) have no ragged slot
-semantics yet and are served single-stream through launch/engine.py;
-both paths print the same policy-API compression report through one
-shared helper (``_cache_report``), so the footprint accounting cannot
-drift between them.
+(DESIGN.md §10); ``--prefill-chunk`` enables stall-free chunked
+admission (DESIGN.md §11).  Families with recurrent state
+(ssm/hybrid/audio) have no ragged slot semantics yet and are served
+single-stream through launch/engine.py.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import signal
+import threading
 import time
 
 import jax
@@ -51,8 +60,11 @@ from repro.core import calibrate as C
 from repro.core.cache_api import AttendBackend, available_policies
 from repro.core.transforms import Rotation
 from repro.data import DataIterator, SyntheticCorpus
-from repro.launch.batch_engine import BatchEngine, Request
+from repro.launch.batch_engine import BatchEngine
 from repro.launch.engine import Engine, Sampler
+from repro.launch.server import CompletionServer, ServingPipeline
+from repro.launch.server.stats import cache_report_data
+from repro.launch.server.trace import make_requests
 from repro.launch.train import smoke_config
 from repro.models import build_model
 from repro.models.lm import Rotations
@@ -93,6 +105,10 @@ def main():
                     help="longest prompt; the queue mixes this with "
                          "shorter ones (ragged batching)")
     ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--run-len", type=int, default=1,
+                    help="consecutive same-length prompts in the "
+                         "workload (runs > 1 let bucketed admission "
+                         "pack them into one batched prefill)")
     ap.add_argument("--policy", default=None,
                     help=f"cache policy name (default: config; "
                          f"registered: {', '.join(available_policies())})")
@@ -128,6 +144,22 @@ def main():
                     help="sampling temperature (0 = greedy)")
     ap.add_argument("--top-k", type=int, default=0,
                     help="restrict sampling to the k highest logits")
+    ap.add_argument("--http", action="store_true",
+                    help="serve over HTTP/SSE through the threaded "
+                         "pipeline (DESIGN.md §12) instead of the "
+                         "closed-loop stdout queue")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8000,
+                    help="HTTP port (0 = ephemeral, printed at boot)")
+    ap.add_argument("--admit-queue", type=int, default=64,
+                    help="bounded intake depth; a full queue returns "
+                         "HTTP 429 (backpressure)")
+    ap.add_argument("--s-max", type=int, default=None,
+                    help="slot capacity in tokens (default: prompt-len "
+                         "+ new-tokens, window-aligned)")
+    ap.add_argument("--stats-json", default=None,
+                    help="write the cache/pool report (and, with "
+                         "--http, server metrics) as JSON to this path")
     ap.add_argument("--calibrate", action="store_true")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
@@ -153,11 +185,6 @@ def main():
             )
             print(f"[load] checkpoint step {last}")
 
-    it = DataIterator(SyntheticCorpus(args.seed + 1),
-                      batch_per_shard=max(args.requests, 1),
-                      seq_len=args.prompt_len)
-    prompt = jnp.asarray(it.next()["tokens"])
-
     policy_name = "bf16" if args.no_quant else args.policy
     policy = model.cache_policy(policy_name) if cfg.kv_applicable else None
     backend = AttendBackend.parse(args.backend)
@@ -171,9 +198,12 @@ def main():
             print(f"[calibrate] skipped: family={cfg.family} has no "
                   f"KV-collection pass")
         else:
+            it = DataIterator(SyntheticCorpus(args.seed + 1),
+                              batch_per_shard=4, seq_len=args.prompt_len)
+            calib = jnp.asarray(it.next()["tokens"])
             rots = model.init_rotations(jax.random.PRNGKey(7))
             t0 = time.time()
-            rots = calibrate_lambdas(model, params, prompt[:4], rots)
+            rots = calibrate_lambdas(model, params, calib, rots)
             print(f"[calibrate] per-channel lambda in "
                   f"{time.time()-t0:.1f}s")
 
@@ -181,24 +211,18 @@ def main():
     key = jax.random.PRNGKey(args.seed + 2)
     ragged_ok = cfg.kv_applicable and cfg.family in ("dense", "moe", "vlm")
     if not ragged_ok:
+        it = DataIterator(SyntheticCorpus(args.seed + 1),
+                          batch_per_shard=max(args.requests, 1),
+                          seq_len=args.prompt_len)
+        prompt = jnp.asarray(it.next()["tokens"])
         return _serve_single_stream(cfg, model, params, prompt, policy,
                                     backend, sampler, args, key, rots)
 
-    # ragged queue: a few prompt-length buckets so prefill compiles once
-    # per bucket, not per request; decode is length-oblivious (masks)
     window = getattr(policy, "window", 1) if policy is not None else 1
-    s_max = args.prompt_len + args.new_tokens + window
-    s_max += (-s_max) % max(window, 1)
-    buckets = sorted({args.prompt_len, max(args.prompt_len // 2, 1),
-                      max(3 * args.prompt_len // 4, 1)})
-    requests = [
-        Request(rid=i,
-                prompt=np.asarray(prompt[i % prompt.shape[0],
-                                         :buckets[i % len(buckets)]]),
-                max_new_tokens=args.new_tokens)
-        for i in range(args.requests)
-    ]
-
+    s_max = args.s_max
+    if s_max is None:
+        s_max = args.prompt_len + args.new_tokens + window
+        s_max += (-s_max) % max(window, 1)
     engine = BatchEngine(
         model, params, capacity=args.max_batch, s_max=s_max,
         policy=policy, backend=backend, sampler=sampler,
@@ -214,58 +238,148 @@ def main():
     admission = (f"chunked prefill: {args.prefill_chunk} tok/chunk, "
                  f"{engine.prefill_budget} tok/quantum"
                  if args.prefill_chunk else "monolithic prefill")
+    mode = "http/sse pipeline" if args.http else "closed-loop queue"
     print(f"[serve] arch={cfg.name} policy={pname} "
           f"backend={backend.value} max-batch={args.max_batch} "
-          f"requests={args.requests} prompts={buckets} "
           f"new={args.new_tokens} chunk={args.chunk} "
-          f"(continuous batching: {layout}, {admission}, "
+          f"({mode}; continuous batching: {layout}, {admission}, "
           f"donated scan chunks)")
 
+    if args.http:
+        return _serve_http(cfg, engine, policy, args)
+    return _serve_queue(engine, policy, args)
+
+
+def _serve_queue(engine: BatchEngine, policy, args) -> None:
+    """The closed-loop stdout path: a seeded mixed-length workload
+    (launch/server/trace.py -- the load harness replays the same one)
+    streamed chunk by chunk.  KeyboardInterrupt drains cleanly: live
+    requests are cancelled through ``cancel_all`` (slots retired,
+    pages freed) and the final stats block still prints."""
+    requests = make_requests(args.requests, prompt_len=args.prompt_len,
+                             new_tokens=args.new_tokens, seed=args.seed,
+                             run_len=args.run_len)
     for r in requests:
         engine.submit(r)
     t0 = time.time()
     n_tok = 0
     done = []
-    while engine.pending or engine.n_active:
-        events, completions = engine.step()
-        for rid, toks in events:  # streaming responses, chunk granularity
-            n_tok += len(toks)
-        for comp in completions:
+    interrupted = False
+    try:
+        while engine.has_work:
+            events, completions = engine.step()
+            for rid, toks in events:  # streaming, chunk granularity
+                n_tok += len(toks)
+            for comp in completions:
+                done.append(comp)
+                _print_completion(comp)
+    except KeyboardInterrupt:
+        interrupted = True
+        for comp in engine.cancel_all():
             done.append(comp)
-            text = "".join(chr(c) if 32 <= c < 127 else "?"
-                           for c in comp.tokens[:24].tolist())
-            print(f"  [done] rid={comp.rid} prompt={comp.prompt_len} "
-                  f"+{len(comp.tokens)} tok ({comp.finish_reason}) "
-                  f"{text!r}")
+            _print_completion(comp)
     t_total = time.time() - t0
 
-    print(f"  served {len(done)} requests, {n_tok} tokens in "
+    note = "interrupted; drained" if interrupted else "served"
+    print(f"  {note} {len(done)} requests, {n_tok} tokens in "
           f"{t_total:.2f}s -> {n_tok / max(t_total, 1e-9):.1f} tok/s "
           f"aggregate (CPU; incl. one-time compile)")
     if args.prefill_chunk:
         print(f"  admission: {engine.n_prefill_chunks} prefill chunks, "
               f"{engine.n_reused_tokens} prompt tokens skipped via "
               f"token-level prefix reuse")
-    _cache_report(policy, engine.cache.get("attn"), engine=engine)
+    data = _cache_report(policy, engine.cache.get("attn"), engine=engine)
+    _write_stats_json(args.stats_json, {
+        "mode": "queue", "interrupted": interrupted,
+        "requests_done": len(done), "tokens": n_tok,
+        "aggregate_tok_s": n_tok / max(t_total, 1e-9),
+        "cache": data,
+    })
 
 
-def _cache_report(policy, state, *, engine=None, indent="  "):
-    """One compression/footprint report for BOTH serving paths (the
-    batched engine and the single-stream fallback share it, so the two
-    paths can never drift apart in what they account).  ``state`` is the
-    per-layer-stacked attention CacheState, or None for families with
-    no attention KV cache."""
-    if policy is None or state is None:
-        print(f"{indent}(no attention KV cache: recurrent-state family)")
+def _serve_http(cfg, engine: BatchEngine, policy, args) -> None:
+    """The async front-end (DESIGN.md §12): threaded pipeline + SSE
+    server.  First SIGINT stops accepting and DRAINS live streams
+    before exiting (slots retired, pages freed, final stats printed);
+    a second SIGINT cancels the drain and closes streams with
+    ``finish_reason="cancelled"``."""
+    pipeline = ServingPipeline(engine, admit_queue=args.admit_queue)
+    pipeline.start()
+    server = CompletionServer(pipeline, host=args.host, port=args.port,
+                              vocab_size=cfg.vocab_size)
+    print(f"[serve] listening on {server.url}  "
+          f"(POST /v1/completions, GET /healthz, GET /metrics)")
+
+    n_int = 0
+
+    def _sigint(signum, frame):
+        nonlocal n_int
+        n_int += 1
+        # serve_forever must be unblocked from another thread
+        threading.Thread(target=server.shutdown, daemon=True).start()
+
+    signal.signal(signal.SIGINT, _sigint)
+    try:
+        server.serve_forever()
+    finally:
+        cancel = n_int > 1
+        print(f"[serve] {'cancelling' if cancel else 'draining'} "
+              f"live streams ...")
+        drained = pipeline.shutdown(cancel=cancel)
+        snap = pipeline.metrics.snapshot()
+        print(f"  {'drained' if drained else 'DRAIN TIMED OUT'}: "
+              f"{snap['requests_completed']} completed, "
+              f"{snap['requests_cancelled']} cancelled, "
+              f"{snap['requests_rejected']} rejected (429), "
+              f"{snap['tokens_streamed']} tokens streamed")
+        ttft, itl = snap["ttft_s"], snap["itl_s"]
+        if ttft["count"]:
+            print(f"  ttft p50={ttft['p50']*1e3:.0f}ms "
+                  f"p99={ttft['p99']*1e3:.0f}ms   "
+                  f"itl p50={itl['p50']*1e3:.1f}ms "
+                  f"p99={itl['p99']*1e3:.1f}ms")
+        data = _cache_report(policy, engine.cache.get("attn"),
+                             engine=engine)
+        _write_stats_json(args.stats_json, {
+            "mode": "http", "drained": drained, "server": snap,
+            "queues": pipeline.queue_depths(), "cache": data,
+        })
+
+
+def _print_completion(comp) -> None:
+    text = "".join(chr(c) if 32 <= c < 127 else "?"
+                   for c in comp.tokens[:24].tolist())
+    print(f"  [done] rid={comp.rid} prompt={comp.prompt_len} "
+          f"+{len(comp.tokens)} tok ({comp.finish_reason}) "
+          f"{text!r}")
+
+
+def _write_stats_json(path, payload) -> None:
+    if not path:
         return
-    is_paged = getattr(state, "is_paged", False)
-    kind = "paged pool" if is_paged else "slot cache"
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"  [stats] wrote {path}")
+
+
+def _cache_report(policy, state, *, engine=None, indent="  ") -> dict:
+    """One compression/footprint report for EVERY serving path (the
+    batched engine, the HTTP pipeline and the single-stream fallback
+    share it, so the paths can never drift apart in what they
+    account).  Prints the human block and returns the machine-readable
+    dict (``launch/server/stats.py:cache_report_data`` -- what
+    ``--stats-json`` writes)."""
+    data = cache_report_data(policy, state, engine)
+    if not data["kv_applicable"]:
+        print(f"{indent}(no attention KV cache: recurrent-state family)")
+        return data
+    is_paged = data["layout"] == "paged pool"
     extra = "residual+paging metadata" if is_paged else "transient state"
-    total = state.nbytes(persistent_only=False)
-    print(f"{indent}{kind} persistent KV: {policy.nbytes(state)/1e3:.1f} KB "
-          f"({policy.compression_ratio(state):.2f}x vs bf16, policy API; "
-          f"{total/1e3:.1f} KB with {extra})")
-    stats = engine.pool_stats() if engine is not None else None
+    print(f"{indent}{data['layout']} persistent KV: "
+          f"{data['persistent_bytes']/1e3:.1f} KB "
+          f"({data['compression_ratio']:.2f}x vs bf16, policy API; "
+          f"{data['total_bytes']/1e3:.1f} KB with {extra})")
+    stats = data.get("pool")
     if stats:
         print(f"{indent}pool: {stats['pages_used']}/{stats['n_pages']} "
               f"pages used ({100*stats['utilization']:.0f}%, peak "
@@ -276,12 +390,16 @@ def _cache_report(policy, state, *, engine=None, indent="  "):
               f"live of {stats['pool_bytes']/1e3:.1f} KB pool "
               f"(dense slot equivalent {stats['dense_equiv_bytes']/1e3:.1f}"
               f" KB)")
+    return data
 
 
 def _serve_single_stream(cfg, model, params, prompt, policy, backend,
                          sampler, args, key, rots=None):
     """Recurrent-state families: fused single-stream engine (no ragged
     slot semantics for ssm/hybrid caches yet)."""
+    if getattr(args, "http", False):
+        print(f"[note] --http needs a pure-attention family "
+              f"(got {cfg.family}); serving the closed-loop path")
     if getattr(args, "paged", False):
         print(f"[note] --paged needs a pure-attention family "
               f"(got {cfg.family}); serving dense single-stream")
@@ -323,7 +441,11 @@ def _serve_single_stream(cfg, model, params, prompt, policy, backend,
     print(f"  decode:  {ms_tok:.1f} ms/tok   "
           f"{batch * n_steps / max(t_decode, 1e-9):.1f} tok/s "
           f"decode-only (CPU; incl. one-time compile)")
-    _cache_report(policy, cache.get("attn"))
+    data = _cache_report(policy, cache.get("attn"))
+    _write_stats_json(getattr(args, "stats_json", None), {
+        "mode": "single-stream", "cache": data,
+        "decode_ms_per_tok": ms_tok,
+    })
     sample = "".join(
         chr(c) if 32 <= c < 127 else "?" for c in gen[0].tolist()
     )

@@ -1,0 +1,42 @@
+"""Async serving front-end (DESIGN.md §12).
+
+The first network-facing subsystem in the repo: a threaded
+prefill/decode/detokenize pipeline over ``BatchEngine`` (pipeline.py),
+deterministic bucketed admission that packs same-length prompts into
+one batched prefill dispatch (admission.py), a stdlib-only HTTP/SSE
+front-end with /healthz and /metrics (http.py), seeded workload traces
+shared by the CLI and the load harness (trace.py), and the metrics /
+machine-readable cache-report helpers both serving paths print through
+(stats.py).
+"""
+from repro.launch.server.admission import BucketedAdmission
+from repro.launch.server.http import CompletionServer
+from repro.launch.server.pipeline import (
+    Backpressure,
+    ServingPipeline,
+    StreamEvent,
+    SyncServer,
+)
+from repro.launch.server.stats import Histogram, ServerMetrics, cache_report_data
+from repro.launch.server.trace import (
+    TraceItem,
+    bucket_lengths,
+    make_requests,
+    make_trace,
+)
+
+__all__ = [
+    "Backpressure",
+    "BucketedAdmission",
+    "CompletionServer",
+    "Histogram",
+    "ServerMetrics",
+    "ServingPipeline",
+    "StreamEvent",
+    "SyncServer",
+    "TraceItem",
+    "bucket_lengths",
+    "cache_report_data",
+    "make_requests",
+    "make_trace",
+]

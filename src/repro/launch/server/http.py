@@ -1,0 +1,178 @@
+"""Stdlib HTTP/SSE front-end over the serving pipeline (DESIGN.md §12).
+
+No new runtime dependencies: ``http.server.ThreadingHTTPServer`` gives
+one handler thread per connection, and a streamed completion simply
+writes server-sent events as its stream queue fills -- the pipeline's
+decode/detokenize threads do the work, the handler thread only copies.
+
+Endpoints::
+
+    POST /v1/completions   {"prompt": [ints] | "text", "max_tokens": N,
+                            "stream": true|false}
+        stream=true  -> text/event-stream, one ``data: {json}`` line
+                        per token batch, closed by ``data: [DONE]``
+        stream=false -> one JSON body with the full completion
+        429 (Backpressure) when the admission queue is full -- the
+        rejected request consumed NOTHING engine-side (no PRNG split,
+        no slot), so accepted streams are unaffected.
+    GET /healthz           liveness + queue/slot snapshot
+    GET /metrics           Prometheus-style text (counters, TTFT/ITL
+                           quantiles, queue depths, pool utilization)
+
+String prompts are byte-tokenized (token id = byte value, mod the
+vocab when it is smaller than 256) -- the same byte convention
+serve.py prints completions with.
+"""
+from __future__ import annotations
+
+import itertools
+import json
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+import numpy as np
+
+from repro.launch.batch_engine import Request
+from repro.launch.server.pipeline import Backpressure, ServingPipeline
+
+__all__ = ["CompletionServer"]
+
+
+class _Handler(BaseHTTPRequestHandler):
+    protocol_version = "HTTP/1.0"  # connection-close delimits the SSE body
+    server_version = "repro-serve/0.1"
+
+    # ------------------------------------------------------------- plumbing
+    def log_message(self, fmt, *args):  # noqa: N802 (stdlib name)
+        if self.server.verbose:
+            super().log_message(fmt, *args)
+
+    def _json(self, code: int, obj) -> None:
+        body = json.dumps(obj).encode()
+        self.send_response(code)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def _text(self, code: int, text: str, ctype: str) -> None:
+        body = text.encode()
+        self.send_response(code)
+        self.send_header("Content-Type", ctype)
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    # -------------------------------------------------------------- routes
+    def do_GET(self):  # noqa: N802
+        pipe = self.server.pipeline
+        if self.path == "/healthz":
+            self._json(200, {
+                "ok": True,
+                "slots_active": pipe.engine.n_active,
+                "slots_capacity": pipe.engine.capacity,
+                **pipe.queue_depths(),
+            })
+        elif self.path == "/metrics":
+            self._text(200, pipe.metrics_text(), "text/plain; version=0.0.4")
+        else:
+            self._json(404, {"error": f"no route {self.path}"})
+
+    def do_POST(self):  # noqa: N802
+        if self.path != "/v1/completions":
+            self._json(404, {"error": f"no route {self.path}"})
+            return
+        try:
+            n = int(self.headers.get("Content-Length") or 0)
+            body = json.loads(self.rfile.read(n) or b"{}")
+            prompt = self._tokenize(body.get("prompt"))
+            max_tokens = int(body.get("max_tokens", 16))
+        except (ValueError, TypeError, json.JSONDecodeError) as e:
+            self._json(400, {"error": f"bad request: {e}"})
+            return
+        rid = next(self.server.rids)
+        req = Request(rid=rid, prompt=prompt, max_new_tokens=max_tokens)
+        try:
+            stream = self.server.pipeline.submit(req)
+        except Backpressure as e:
+            self._json(429, {"error": str(e), "retry": True})
+            return
+        except ValueError as e:  # engine-side validation (s_max etc.)
+            self._json(400, {"error": str(e)})
+            return
+        if body.get("stream"):
+            self._stream_sse(rid, stream)
+        else:
+            toks, text, reason = [], [], None
+            while reason is None:
+                ev = stream.get()
+                toks.extend(ev.tokens)
+                text.append(ev.text)
+                reason = ev.finish_reason
+            self._json(200, {"rid": rid, "tokens": toks,
+                             "text": "".join(text),
+                             "finish_reason": reason})
+
+    def _stream_sse(self, rid: int, stream) -> None:
+        self.send_response(200)
+        self.send_header("Content-Type", "text/event-stream")
+        self.send_header("Cache-Control", "no-store")
+        self.end_headers()
+        try:
+            while True:
+                ev = stream.get()
+                # the detokenize stage pre-serialized the payload; the
+                # handler thread only copies bytes
+                self.wfile.write(f"data: {ev.sse}\n\n".encode())
+                self.wfile.flush()
+                if ev.finish_reason is not None:
+                    self.wfile.write(b"data: [DONE]\n\n")
+                    self.wfile.flush()
+                    return
+        except (BrokenPipeError, ConnectionResetError):
+            # client went away mid-stream; the engine finishes the
+            # request normally (slot reclaim on disconnect is future
+            # work -- ROADMAP), the fan-out queue is dropped with the
+            # handler
+            return
+
+    def _tokenize(self, prompt) -> np.ndarray:
+        if isinstance(prompt, str):
+            toks = np.frombuffer(prompt.encode(), np.uint8).astype(np.int32)
+            vocab = self.server.vocab_size
+            if vocab is not None and vocab < 256:
+                toks = toks % vocab
+        elif isinstance(prompt, (list, tuple)):
+            toks = np.asarray(prompt, np.int32)
+        else:
+            raise ValueError("prompt must be a string or a token list")
+        if toks.ndim != 1 or toks.size < 1:
+            raise ValueError("prompt must be a non-empty 1-D token list")
+        return toks
+
+
+class CompletionServer:
+    """The network shell: a ``ThreadingHTTPServer`` bound to one
+    :class:`ServingPipeline`.  ``port=0`` binds an ephemeral port
+    (tests); ``serve_forever`` blocks until ``shutdown`` (serve.py
+    installs a SIGINT handler that drains the pipeline first)."""
+
+    def __init__(self, pipeline: ServingPipeline, *,
+                 host: str = "127.0.0.1", port: int = 8000,
+                 vocab_size=None, verbose: bool = False):
+        self.httpd = ThreadingHTTPServer((host, port), _Handler)
+        self.httpd.pipeline = pipeline
+        self.httpd.rids = itertools.count()
+        self.httpd.vocab_size = vocab_size
+        self.httpd.verbose = verbose
+        self.host, self.port = self.httpd.server_address[:2]
+
+    @property
+    def url(self) -> str:
+        return f"http://{self.host}:{self.port}"
+
+    def serve_forever(self) -> None:
+        self.httpd.serve_forever(poll_interval=0.05)
+
+    def shutdown(self) -> None:
+        self.httpd.shutdown()
+        self.httpd.server_close()

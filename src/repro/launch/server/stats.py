@@ -1,0 +1,130 @@
+"""Serving observability: histograms, counters, machine-readable
+cache reports (DESIGN.md §12).
+
+``ServerMetrics`` is the one mutable stats object both serving paths
+update -- the threaded pipeline and the single-threaded reference loop
+record TTFT/ITL through the SAME code, so the load harness compares
+pipelining, never measurement plumbing.  ``cache_report_data`` is the
+machine-readable twin of serve.py's ``_cache_report`` printout
+(``--stats-json``): CI and the load harness assert on its dict instead
+of parsing stdout.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Optional
+
+import numpy as np
+
+__all__ = ["Histogram", "ServerMetrics", "cache_report_data"]
+
+
+class Histogram:
+    """Latency accumulator: record seconds, summarize percentiles.
+    Plain value list + numpy percentile -- exact quantiles, fine at
+    load-harness scale (thousands of samples, not millions)."""
+
+    def __init__(self):
+        self._v: list[float] = []
+
+    def record(self, x: float) -> None:
+        self._v.append(float(x))
+
+    @property
+    def count(self) -> int:
+        return len(self._v)
+
+    def summary(self) -> dict:
+        if not self._v:
+            return {"count": 0, "mean": 0.0, "p50": 0.0, "p99": 0.0,
+                    "max": 0.0}
+        v = np.asarray(self._v)
+        return {
+            "count": int(v.size),
+            "mean": float(v.mean()),
+            "p50": float(np.percentile(v, 50)),
+            "p99": float(np.percentile(v, 99)),
+            "max": float(v.max()),
+        }
+
+
+class ServerMetrics:
+    """Counters + latency histograms for one serving run.  All methods
+    take the internal lock: the detokenize thread records while HTTP
+    handler threads scrape ``/metrics``."""
+
+    def __init__(self):
+        self.lock = threading.Lock()
+        self.received = 0
+        self.rejected = 0
+        self.completed = 0
+        self.cancelled = 0
+        self.tokens_streamed = 0
+        self.ttft = Histogram()   # arrival -> first streamed token
+        self.itl = Histogram()    # per-token inter-token latency
+        self.e2e = Histogram()    # arrival -> completion
+
+    def snapshot(self) -> dict:
+        with self.lock:
+            return {
+                "requests_received": self.received,
+                "requests_rejected": self.rejected,
+                "requests_completed": self.completed,
+                "requests_cancelled": self.cancelled,
+                "tokens_streamed": self.tokens_streamed,
+                "ttft_s": self.ttft.summary(),
+                "itl_s": self.itl.summary(),
+                "e2e_s": self.e2e.summary(),
+            }
+
+    def render_prometheus(self, gauges: Optional[dict] = None) -> str:
+        """Prometheus-style text exposition for ``/metrics``: the
+        counters/histograms here plus caller-supplied point-in-time
+        gauges (queue depths, slot occupancy, pool utilization)."""
+        snap = self.snapshot()
+        lines = [
+            f"server_requests_received_total {snap['requests_received']}",
+            f"server_requests_rejected_total {snap['requests_rejected']}",
+            f"server_requests_completed_total {snap['requests_completed']}",
+            f"server_requests_cancelled_total {snap['requests_cancelled']}",
+            f"server_tokens_streamed_total {snap['tokens_streamed']}",
+        ]
+        for name in ("ttft", "itl", "e2e"):
+            s = snap[f"{name}_s"]
+            lines.append(
+                f'server_{name}_seconds{{quantile="0.5"}} {s["p50"]:.6f}'
+            )
+            lines.append(
+                f'server_{name}_seconds{{quantile="0.99"}} {s["p99"]:.6f}'
+            )
+            lines.append(f"server_{name}_seconds_count {s['count']}")
+        for key, val in (gauges or {}).items():
+            lines.append(f"server_{key} {val:g}" if isinstance(val, float)
+                         else f"server_{key} {val}")
+        return "\n".join(lines) + "\n"
+
+
+def cache_report_data(policy, state, engine=None) -> dict:
+    """Machine-readable cache/pool footprint: the dict behind
+    serve.py's ``_cache_report`` print block and ``--stats-json``.
+    ``state`` is the layer-stacked attention CacheState (None for
+    recurrent-state families); byte numbers come from the policy API,
+    the same accounting benchmarks use, so the two cannot drift."""
+    if policy is None or state is None:
+        return {"kv_applicable": False}
+    is_paged = bool(getattr(state, "is_paged", False))
+    out = {
+        "kv_applicable": True,
+        "policy": policy.name,
+        "layout": "paged pool" if is_paged else "slot cache",
+        "persistent_bytes": int(policy.nbytes(state)),
+        "total_bytes": int(state.nbytes(persistent_only=False)),
+        "compression_ratio": float(policy.compression_ratio(state)),
+    }
+    stats = engine.pool_stats() if engine is not None else None
+    if stats:
+        out["pool"] = stats
+    if engine is not None and getattr(engine, "prefill_chunk", None):
+        out["prefill_chunks"] = engine.n_prefill_chunks
+        out["reused_prompt_tokens"] = engine.n_reused_tokens
+    return out

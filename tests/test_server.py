@@ -1,0 +1,454 @@
+"""Async serving front-end (launch/server/, DESIGN.md §12).
+
+Correctness bar: the threaded pipeline may reorder HOST work, never
+DEVICE work.  Concretely:
+
+* **Stream parity** -- per-request token streams from the threaded
+  ``ServingPipeline`` must be bit-identical to the single-threaded
+  ``SyncServer`` reference over the same arrival order, for every
+  policy x dense/paged.  Submission is closed-loop (everything offered
+  before the first admission sweep), which pins the packed-prefill
+  grouping -- the §9 width-determinism precondition.
+* **Backpressure** -- a rejected submit (intake queue full) must
+  consume NOTHING engine-side: no PRNG split, no slot, no pending
+  entry; with a temperature sampler the accepted streams must be
+  bit-identical with and without a rejected request in between.
+* **Drain on shutdown** -- cancel-shutdown of a paged pipeline must
+  return every pool page (host refcount mirror all-zero except the
+  pinned null page) and close every stream with a terminal event.
+
+Plus the stdlib HTTP/SSE layer end-to-end (in-process ephemeral-port
+server) and the seeded trace/bucketizer plumbing both front-ends share.
+"""
+import json
+import queue
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import SMOL_D64
+from repro.core.cache_api import available_policies
+from repro.core.paged import NULL_PAGE
+from repro.launch.batch_engine import BatchEngine, Request
+from repro.launch.engine import Sampler
+from repro.launch.server import (
+    Backpressure,
+    BucketedAdmission,
+    CompletionServer,
+    Histogram,
+    ServerMetrics,
+    ServingPipeline,
+    SyncServer,
+    bucket_lengths,
+    cache_report_data,
+    make_requests,
+    make_trace,
+)
+from repro.launch.server.pipeline import TokenFanout, drain_stream
+from repro.models import build_model
+
+S_MAX = 48
+CAPACITY = 3
+
+
+@pytest.fixture(scope="module")
+def lm():
+    model = build_model(SMOL_D64)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _mk_engine(model, params, *, policy="bf16", paged=False, capacity=CAPACITY,
+               s_max=S_MAX, sampler=None, **kw):
+    if paged:
+        kw.setdefault("page_size", 16)
+    return BatchEngine(model, params, capacity=capacity, s_max=s_max,
+                       policy=policy, backend="gather", chunk=4,
+                       sampler=sampler, key=jax.random.PRNGKey(7),
+                       paged=paged, **kw)
+
+
+def _transplant(dst, src):
+    for attr in ("_chunk_fns", "_prefill_fn", "_chunk_prefill_fn",
+                 "_insert_fn", "_insert_paged_fn", "_reset_fn", "_seed_fn",
+                 "_slice_row_fn", "_slice_axes"):
+        setattr(dst, attr, getattr(src, attr))
+    return dst
+
+
+def _requests(model, n, *, policy, new_tokens=6):
+    window = getattr(model.cache_policy(policy), "window", 1)
+    return make_requests(n, prompt_len=32, new_tokens=new_tokens,
+                         seed=0, align=window, run_len=2)
+
+
+def _sync_streams(engine, reqs):
+    srv = SyncServer(engine, max_group=engine.capacity)
+    streams = {r.rid: srv.submit(r) for r in reqs}
+    srv.run_until_drained()
+    out = {rid: drain_stream(q, timeout=10.0) for rid, q in streams.items()}
+    srv.close()
+    return out
+
+
+def _pipeline_streams(engine, reqs):
+    # closed-loop: everything queued before the stage threads start, so
+    # the admission sweep forms the same groups the sync loop does
+    pipe = ServingPipeline(engine, max_group=engine.capacity,
+                           admit_queue=max(len(reqs), 8))
+    streams = {r.rid: pipe.submit(r) for r in reqs}
+    pipe.start()
+    out = {rid: drain_stream(q, timeout=120.0)
+           for rid, q in streams.items()}
+    assert pipe.shutdown(timeout=60.0)
+    return out
+
+
+# --------------------------------------------------------------------------
+# tentpole: pipeline reorders host work, never device work
+# --------------------------------------------------------------------------
+@pytest.mark.slow
+@pytest.mark.parametrize("paged", [False, True], ids=["dense", "paged"])
+@pytest.mark.parametrize("policy", available_policies())
+def test_pipelined_streams_bit_identical_to_sync(lm, policy, paged):
+    model, params = lm
+    reqs = _requests(model, 6, policy=policy)
+    ref = _sync_streams(
+        _mk_engine(model, params, policy=policy, paged=paged), reqs)
+    got = _pipeline_streams(
+        _mk_engine(model, params, policy=policy, paged=paged), reqs)
+    assert set(got) == set(ref)
+    for rid in ref:
+        assert got[rid] == ref[rid], (
+            f"rid {rid}: pipelined {got[rid]} != sync {ref[rid]}"
+        )
+    for toks, reason in ref.values():
+        assert reason == "length" and len(toks) == 6
+
+
+@pytest.mark.slow
+def test_packed_admission_deterministic(lm):
+    """Two identical packed admissions on one engine (state reset by
+    retirement between runs) produce bit-identical token streams."""
+    model, params = lm
+    eng = _mk_engine(model, params, policy="int4-srft", capacity=2)
+    reqs = _requests(model, 2, policy="int4-srft")
+    got = []
+    for _ in range(2):
+        events = {}
+
+        def listen(evs, comps, _store=events):
+            for rid, toks in evs:
+                _store.setdefault(rid, []).extend(toks)
+
+        eng.step_listeners.append(listen)
+        eng.admit_packed([Request(rid=r.rid, prompt=r.prompt,
+                                  max_new_tokens=r.max_new_tokens)
+                          for r in reqs])
+        while eng.has_work:
+            eng.step()
+        eng.step_listeners.remove(listen)
+        got.append(events)
+        # PRNG advances between runs; pin it back so the second
+        # admission replays the identical split sequence
+        eng._sample_key = jax.random.fold_in(eng._init_key, 0x5A5A)
+    assert got[0] == got[1]
+
+
+def test_packed_admission_rejects_mixed_lengths(lm):
+    model, params = lm
+    eng = _mk_engine(model, params, policy="bf16", capacity=2)
+    reqs = [Request(rid=0, prompt=np.zeros(8, np.int32), max_new_tokens=2),
+            Request(rid=1, prompt=np.zeros(12, np.int32), max_new_tokens=2)]
+    with pytest.raises(ValueError, match="length"):
+        eng.admit_packed(reqs)
+    with pytest.raises(ValueError, match="slots"):
+        eng.admit_packed(
+            [Request(rid=i, prompt=np.zeros(8, np.int32), max_new_tokens=2)
+             for i in range(3)]
+        )
+
+
+# --------------------------------------------------------------------------
+# backpressure: rejection consumes nothing engine-side
+# --------------------------------------------------------------------------
+def test_backpressure_rejects_before_engine_touch(lm):
+    model, params = lm
+    eng = _mk_engine(model, params, policy="bf16")
+    key_before = np.asarray(eng._sample_key).copy()
+    pipe = ServingPipeline(eng, admit_queue=2)  # never started
+    reqs = _requests(model, 3, policy="bf16")
+    pipe.submit(reqs[0])
+    pipe.submit(reqs[1])
+    with pytest.raises(Backpressure, match="full"):
+        pipe.submit(reqs[2])
+    assert pipe.fanout.open_streams == 2  # rejected rid unregistered
+    snap = pipe.metrics.snapshot()
+    assert snap["requests_received"] == 2
+    assert snap["requests_rejected"] == 1
+    # the engine saw nothing: no PRNG split, no pending admission
+    np.testing.assert_array_equal(np.asarray(eng._sample_key), key_before)
+    assert not eng.has_work
+    eng.step_listeners.clear()
+
+
+def test_submit_validates_at_intake(lm):
+    """A malformed request bounces with ValueError (HTTP 400) at
+    submit -- it must never reach the admission thread."""
+    model, params = lm
+    pipe = ServingPipeline(_mk_engine(model, params, policy="bf16"))
+    with pytest.raises(ValueError):
+        pipe.submit(Request(rid=0, prompt=np.zeros(8, np.int32),
+                            max_new_tokens=S_MAX))  # exceeds s_max
+    with pytest.raises(ValueError):
+        pipe.submit(Request(rid=1, prompt=np.zeros(0, np.int32),
+                            max_new_tokens=2))
+    assert pipe.fanout.open_streams == 0
+    assert pipe.queue_depths()["admit_queue_depth"] == 0
+    pipe.engine.step_listeners.clear()
+
+
+@pytest.mark.slow
+def test_rejected_request_burns_no_admission_sample(lm):
+    """With a temperature sampler, accepted streams are bit-identical
+    whether or not a rejected request arrived between them -- i.e. the
+    429 path never split the engine's sample key."""
+    model, params = lm
+    sampler = Sampler(temperature=0.8)
+    base = _mk_engine(model, params, policy="int4-srft", sampler=sampler)
+    reqs = _requests(model, 3, policy="int4-srft")
+    extra = Request(rid=99, prompt=reqs[0].prompt,
+                    max_new_tokens=reqs[0].max_new_tokens)
+
+    def run(with_reject):
+        eng = _transplant(
+            _mk_engine(model, params, policy="int4-srft", sampler=sampler),
+            base)
+        pipe = ServingPipeline(eng, admit_queue=3)
+        streams = {r.rid: pipe.submit(r) for r in reqs}  # fills queue
+        if with_reject:
+            with pytest.raises(Backpressure):
+                pipe.submit(extra)
+        pipe.start()
+        out = {rid: drain_stream(q, timeout=120.0)
+               for rid, q in streams.items()}
+        assert pipe.shutdown(timeout=60.0)
+        return out
+
+    assert run(False) == run(True)
+
+
+# --------------------------------------------------------------------------
+# shutdown: drain and cancel leave nothing behind
+# --------------------------------------------------------------------------
+@pytest.mark.slow
+def test_cancel_shutdown_releases_all_pages(lm):
+    model, params = lm
+    eng = _mk_engine(model, params, policy="int4-srft", paged=True,
+                     capacity=2)
+    reqs = _requests(model, 4, policy="int4-srft", new_tokens=8)
+    pipe = ServingPipeline(eng, admit_queue=8)
+    streams = {r.rid: pipe.submit(r) for r in reqs}
+    pipe.start()
+    deadline = time.monotonic() + 120
+    while not eng.has_work and time.monotonic() < deadline:
+        time.sleep(0.005)
+    assert eng.has_work, "engine never picked the work up"
+    pipe.shutdown(cancel=True, timeout=60.0)
+    # every stream got a terminal event; none are left open
+    finished = {rid: drain_stream(q, timeout=10.0)
+                for rid, q in streams.items()}
+    assert pipe.fanout.open_streams == 0
+    assert all(reason in ("cancelled", "length")
+               for _, reason in finished.values())
+    assert any(reason == "cancelled" for _, reason in finished.values())
+    # no leaked pages: host refcount mirror all-zero, null page pinned
+    rc = np.asarray(eng._refcount_host).copy()
+    assert rc[NULL_PAGE] == 1
+    rc[NULL_PAGE] = 0
+    assert (rc == 0).all(), f"leaked pages: {np.nonzero(rc)[0]}"
+    assert eng.n_free_slots == eng.capacity
+    assert not eng.has_work
+
+
+# --------------------------------------------------------------------------
+# HTTP/SSE layer (in-process, ephemeral port, stdlib client)
+# --------------------------------------------------------------------------
+@pytest.mark.slow
+def test_http_sse_round_trip(lm):
+    import threading
+    import urllib.error
+    import urllib.request
+
+    model, params = lm
+    eng = _mk_engine(model, params, policy="int4-srft", capacity=2)
+    pipe = ServingPipeline(eng, admit_queue=8).start()
+    server = CompletionServer(pipe, port=0,
+                              vocab_size=SMOL_D64.vocab_size)
+    threading.Thread(target=server.serve_forever, daemon=True).start()
+    url = server.url
+    try:
+        def post(body, timeout=120.0):
+            req = urllib.request.Request(
+                url + "/v1/completions", data=json.dumps(body).encode(),
+                headers={"Content-Type": "application/json"})
+            return urllib.request.urlopen(req, timeout=timeout)
+
+        with post({"prompt": "hello", "max_tokens": 4,
+                   "stream": True}) as resp:
+            assert resp.headers["Content-Type"].startswith(
+                "text/event-stream")
+            toks, done = [], False
+            for raw in resp:
+                line = raw.decode().strip()
+                if not line.startswith("data: "):
+                    continue
+                payload = line[len("data: "):]
+                if payload == "[DONE]":
+                    done = True
+                    break
+                toks.extend(json.loads(payload)["tokens"])
+            assert done and len(toks) == 4
+
+        with post({"prompt": "hello", "max_tokens": 4}) as resp:
+            body = json.loads(resp.read())
+        assert body["tokens"] == toks  # same prompt, greedy => same bits
+        assert body["finish_reason"] == "length"
+
+        with urllib.request.urlopen(url + "/healthz", timeout=30) as resp:
+            health = json.loads(resp.read())
+        assert health["ok"] and health["slots_capacity"] == 2
+
+        with urllib.request.urlopen(url + "/metrics", timeout=30) as resp:
+            metrics = resp.read().decode()
+        assert "server_requests_completed_total 2" in metrics
+        assert "server_ttft_seconds" in metrics
+
+        with pytest.raises(urllib.error.HTTPError) as exc:
+            post({"prompt": "hello", "max_tokens": 10_000}).read()
+        assert exc.value.code == 400
+        with pytest.raises(urllib.error.HTTPError) as exc:
+            post({"prompt": []}).read()
+        assert exc.value.code == 400
+    finally:
+        server.shutdown()
+        assert pipe.shutdown(timeout=60.0)
+
+
+# --------------------------------------------------------------------------
+# shared plumbing: traces, bucketizer, fan-out, metrics
+# --------------------------------------------------------------------------
+def test_bucket_lengths_align_up():
+    assert bucket_lengths(64) == [32, 48, 64]
+    assert bucket_lengths(64, align=16) == [32, 48, 64]
+    assert bucket_lengths(50, align=16) == [32, 48, 64]  # aligned UP
+    assert bucket_lengths(1) == [1]
+
+
+def test_make_requests_seeded_and_run_length_grouped():
+    a = make_requests(6, prompt_len=32, new_tokens=4, seed=0, run_len=2)
+    b = make_requests(6, prompt_len=32, new_tokens=4, seed=0, run_len=2)
+    for ra, rb in zip(a, b):
+        np.testing.assert_array_equal(ra.prompt, rb.prompt)
+    lens = [len(r.prompt) for r in a]
+    assert lens == [16, 16, 24, 24, 32, 32]  # runs of run_len
+    c = make_requests(6, prompt_len=32, new_tokens=4, seed=1, run_len=2)
+    assert any(not np.array_equal(x.prompt, y.prompt)
+               for x, y in zip(a, c))
+    with pytest.raises(ValueError):
+        make_requests(2, prompt_len=32, new_tokens=4, run_len=0)
+
+
+def test_make_trace_arrival_processes():
+    closed = make_trace(4, prompt_len=16, new_tokens=2, arrival="closed")
+    assert [it.arrival_s for it in closed] == [0.0] * 4
+    poisson = make_trace(8, prompt_len=16, new_tokens=2,
+                         arrival="poisson", rate=100.0)
+    times = [it.arrival_s for it in poisson]
+    assert times == sorted(times) and times[0] > 0
+    again = make_trace(8, prompt_len=16, new_tokens=2,
+                       arrival="poisson", rate=100.0)
+    assert [it.arrival_s for it in again] == times
+    for x, y in zip(poisson, again):
+        np.testing.assert_array_equal(x.req.prompt, y.req.prompt)
+    bursty = make_trace(5, prompt_len=16, new_tokens=2, arrival="bursty",
+                        burst=2, burst_gap_s=0.5)
+    assert [it.arrival_s for it in bursty] == [0.0, 0.0, 0.5, 0.5, 1.0]
+    with pytest.raises(ValueError, match="arrival"):
+        make_trace(2, prompt_len=16, new_tokens=2, arrival="uniform")
+
+
+def test_bucketizer_head_groups_exact_lengths(lm):
+    model, params = lm
+    eng = _mk_engine(model, params, policy="bf16")
+    buck = BucketedAdmission(eng, max_group=2)
+    assert buck.head_group_len() == 0
+    for i, L in enumerate((8, 8, 8, 12)):
+        buck.offer(Request(rid=i, prompt=np.zeros(L, np.int32),
+                           max_new_tokens=2))
+    assert buck.depth == 4
+    assert buck.head_group_len() == 2  # capped at max_group
+    assert len(buck.cancel_pending()) == 4
+    assert buck.depth == 0
+    eng.step_listeners.clear()
+
+
+def test_token_fanout_sse_events_and_metrics():
+    metrics = ServerMetrics()
+    fan = TokenFanout(metrics)
+    q = fan.register(7, t_arrival=0.0)
+    with pytest.raises(ValueError, match="duplicate"):
+        fan.register(7, t_arrival=0.0)
+    fan.process([(7, [65, 66])], [], t=0.5)
+    ev = q.get_nowait()
+    assert (ev.tokens, ev.text, ev.finish_reason) == ([65, 66], "AB", None)
+    payload = json.loads(ev.sse)  # pre-serialized by the detok stage
+    assert payload == {"rid": 7, "tokens": [65, 66], "text": "AB",
+                       "finish_reason": None}
+
+    class _C:
+        rid, finish_reason = 7, "length"
+
+    fan.process([], [_C], t=1.0)
+    fin = q.get_nowait()
+    assert fin.finish_reason == "length"
+    assert json.loads(fin.sse)["finish_reason"] == "length"
+    assert fan.open_streams == 0
+    snap = metrics.snapshot()
+    assert snap["tokens_streamed"] == 2
+    assert snap["requests_completed"] == 1
+    assert snap["ttft_s"]["count"] == 1 and snap["ttft_s"]["p50"] == 0.5
+    assert snap["e2e_s"]["p50"] == 1.0
+
+    q2 = fan.register(8, t_arrival=0.0)
+    fan.close_all("cancelled")
+    assert q2.get_nowait().finish_reason == "cancelled"
+    assert metrics.snapshot()["requests_cancelled"] == 1
+
+
+def test_histogram_and_prometheus_rendering():
+    h = Histogram()
+    assert h.summary()["count"] == 0
+    for v in (1.0, 2.0, 3.0, 4.0):
+        h.record(v)
+    s = h.summary()
+    assert s["count"] == 4 and s["p50"] == 2.5 and s["max"] == 4.0
+    m = ServerMetrics()
+    m.ttft.record(0.25)
+    text = m.render_prometheus({"slots_active": 3})
+    assert "server_requests_received_total 0" in text
+    assert 'server_ttft_seconds{quantile="0.5"} 0.250000' in text
+    assert "server_slots_active 3" in text
+
+
+def test_cache_report_data_shapes(lm):
+    model, params = lm
+    assert cache_report_data(None, None) == {"kv_applicable": False}
+    eng = _mk_engine(model, params, policy="int4-srft")
+    data = cache_report_data(eng.policy, eng.cache.get("attn"), engine=eng)
+    assert data["kv_applicable"] and data["policy"] == "int4-srft"
+    assert data["compression_ratio"] > 1.0
+    assert data["layout"] == "slot cache"
+    eng.step_listeners.clear()
