@@ -77,6 +77,8 @@ from repro.core.quant_attention_ref import (
     decode_attention_bf16_blockwise,
     decode_attention_quant,
     decode_attention_quant_blockwise,
+    verify_attention_bf16,
+    verify_attention_quant,
 )
 from repro.core.transforms import Rotation, make_rotation
 
@@ -271,6 +273,49 @@ class KVCachePolicy(Protocol):
         ragged/paged states mask per row against their own lengths and
         must return finite output even for fully-masked rows (§10
         degenerate-lane hygiene)."""
+        ...
+
+    def snapshot_rows(self, state: CacheState) -> Any:
+        """Capture the minimal pytree needed to rewind a speculative
+        verify pass (DESIGN.md §13).  Taken BEFORE the pass's k
+        :meth:`update` calls; passed back to :meth:`verify_attend`
+        (which reconstructs per-query historical cache views from it)
+        and :meth:`truncate_rows` (which restores rejected state).
+        Schemes whose appends are position-addressed (bf16, int8) need
+        only the entry lengths; the int4 mod-W residual ring is an
+        overwrite structure, so its snapshot also carries the O(W) ring
+        buffers.  O(B·W) at most -- never O(S_max)."""
+        ...
+
+    def verify_attend(self, q: jax.Array, state: CacheState, snap: Any, *,
+                      scale: Optional[float] = None,
+                      backend: "AttendBackend | str | None" = None,
+                      kv_block: int = 512,
+                      sliding_window: Optional[int] = None) -> jax.Array:
+        """Score k verify queries in ONE dispatch: ``q`` is ``(B, Hq, k,
+        d)`` (k <= the policy's flush window), ``state`` is the cache
+        AFTER all k tokens were appended, ``snap`` the matching
+        :meth:`snapshot_rows` capture.  Query i attends exactly the
+        length-(L0+i+1) prefix a sequential decode would have seen --
+        per-token bit-identical to k :meth:`attend` calls interleaved
+        with the appends (DESIGN.md §13).  Runs on the GATHER reference
+        path for every backend (the int4 KERNEL backend warns once and
+        falls back; multi-query verify tiles are future kernel work)."""
+        ...
+
+    def truncate_rows(self, state: CacheState, new_length: jax.Array,
+                      snap: Any) -> CacheState:
+        """Roll rows back to ``new_length`` (per-row ``(B,)`` for
+        ragged/paged states, scalar otherwise; ``base_len <= new_length
+        <= length``) after a verify pass rejected a draft tail:  length
+        decrement plus -- for the int4 scheme -- the residual-ring
+        rewind from ``snap`` (``kvcache.rewind_residual``).  Packed/
+        paged storage is NOT rewound: a rolled-back flush slab sits
+        whole at a W-aligned offset past the rewound packed length,
+        masked by every read until the next flush rewrites it whole
+        (the W-alignment invariant, DESIGN.md §13); paged rewinds keep
+        their page mappings (position-deterministic; reclaimed at
+        retirement or by ``paged.truncate_pages``).  Donation-safe."""
         ...
 
     def with_rotations(self, state: CacheState, rot_k: Rotation,
@@ -556,6 +601,30 @@ class BF16Policy:
             q, data, scale=scale, sliding_window=sliding_window
         )
 
+    def snapshot_rows(self, state):
+        # position-addressed appends: entry lengths are the whole rewind
+        return state.data.length
+
+    def verify_attend(self, q, state, snap, *, scale=None, backend=None,
+                      kv_block=512, sliding_window=None):
+        AttendBackend.parse(backend)  # validate; reference serves all
+        data = state.data
+        if state.is_paged:
+            kview, vview = paged.gather_view(data)
+            data = BF16KVCache(k=kview, v=vview, length=data.length)
+        return verify_attention_bf16(
+            q, data, base_len=snap, scale=scale,
+            sliding_window=sliding_window,
+        )
+
+    def truncate_rows(self, state, new_length, snap):
+        del snap  # length-only scheme
+        d = state.data
+        return CacheState(self, d._replace(
+            length=jnp.broadcast_to(new_length, d.length.shape).astype(
+                d.length.dtype)
+        ))
+
     def with_rotations(self, state, rot_k, rot_v):
         return state  # no rotation state
 
@@ -591,6 +660,7 @@ class Int4State(NamedTuple):
 
 
 _KERNEL_SLIDING_WINDOW_WARNED = False
+_KERNEL_VERIFY_WARNED = False
 
 
 @register_policy("int4-srft")
@@ -825,6 +895,61 @@ class Int4SRFTPolicy:
             q, kv, d.rot_k, d.rot_v, scale=scale,
             sliding_window=sliding_window,
         )
+
+    def snapshot_rows(self, state):
+        # the mod-W ring is an overwrite structure: carry the O(B·W)
+        # buffers alongside the entry lengths (DESIGN.md §13)
+        d = state.data
+        if state.is_paged:
+            k_res, v_res = d.kv.residual
+        else:
+            k_res, v_res = d.kv.k_residual, d.kv.v_residual
+        return (k_res, v_res, d.kv.length)
+
+    def verify_attend(self, q, state, snap, *, scale=None, backend=None,
+                      kv_block=512, sliding_window=None):
+        backend = AttendBackend.parse(backend)
+        if backend is AttendBackend.KERNEL:
+            # verify reads are multi-query; the Pallas decode kernel is
+            # single-query.  Serve the pass through the reference path
+            # (same numerics as GATHER) and say so once.
+            global _KERNEL_VERIFY_WARNED
+            if not _KERNEL_VERIFY_WARNED:
+                _KERNEL_VERIFY_WARNED = True
+                warnings.warn(
+                    "int4-srft: the Pallas kernel path does not implement "
+                    "multi-query speculative verify; falling back to the "
+                    "GATHER reference read path for this and subsequent "
+                    "verify passes",
+                    RuntimeWarning,
+                    stacklevel=2,
+                )
+        d = state.data
+        snap_k, snap_v, base_len = snap
+        kv = self._dense_kv_view(d) if state.is_paged else d.kv
+        return verify_attention_quant(
+            q, kv, d.rot_k, d.rot_v,
+            snap_k_res=snap_k, snap_v_res=snap_v, base_len=base_len,
+            scale=scale, sliding_window=sliding_window,
+        )
+
+    def truncate_rows(self, state, new_length, snap):
+        d = state.data
+        snap_k, snap_v, base_len = snap
+        if state.is_paged:
+            pdd = d.kv
+            k_res = kvcache.rewind_residual(
+                pdd.residual[0], snap_k, base_len, new_length)
+            v_res = kvcache.rewind_residual(
+                pdd.residual[1], snap_v, base_len, new_length)
+            return CacheState(self, d._replace(kv=pdd._replace(
+                residual=(k_res, v_res),
+                length=jnp.broadcast_to(new_length, pdd.length.shape).astype(
+                    pdd.length.dtype),
+            )))
+        return CacheState(self, d._replace(kv=kvcache.truncate_rows(
+            d.kv, new_length, snap_k, snap_v, base_len
+        )))
 
     def nbytes(self, state, *, persistent_only=True):
         """Cache bytes.  ``persistent_only`` counts the O(S) packed codes +
@@ -1062,6 +1187,39 @@ class Int8PerTokenPolicy:
             q, BF16KVCache(k=k, v=v, length=d.length),
             scale=scale, sliding_window=sliding_window,
         )
+
+    def snapshot_rows(self, state):
+        # per-token quantization is position-addressed: appends at
+        # position t overwrite (codes, scale) for t wholesale, so the
+        # entry lengths are the whole rewind
+        return state.data.length
+
+    def verify_attend(self, q, state, snap, *, scale=None, backend=None,
+                      kv_block=512, sliding_window=None):
+        AttendBackend.parse(backend)  # validate; reference serves all
+        d = state.data
+        if state.is_paged:
+            kc, ks, vc, vs = paged.gather_view(d)
+            d = Int8State(k_codes=kc, k_scales=ks, v_codes=vc, v_scales=vs,
+                          length=d.length)
+        k = quant.dequantize_per_token(
+            quant.Quantized(d.k_codes, d.k_scales, 8)
+        )
+        v = quant.dequantize_per_token(
+            quant.Quantized(d.v_codes, d.v_scales, 8)
+        )
+        return verify_attention_bf16(
+            q, BF16KVCache(k=k, v=v, length=d.length),
+            base_len=snap, scale=scale, sliding_window=sliding_window,
+        )
+
+    def truncate_rows(self, state, new_length, snap):
+        del snap  # length-only scheme
+        d = state.data
+        return CacheState(self, d._replace(
+            length=jnp.broadcast_to(new_length, d.length.shape).astype(
+                d.length.dtype)
+        ))
 
     def nbytes(self, state, *, persistent_only=True):
         d = state.data

@@ -57,6 +57,8 @@ __all__ = [
     "bf16_decode_update_ragged",
     "prefill_chunk_ragged",
     "bf16_prefill_chunk_ragged",
+    "rewind_residual",
+    "truncate_rows",
 ]
 
 
@@ -406,6 +408,62 @@ def bf16_prefill_chunk_ragged(
         jax.vmap(put)(cache.k, k.astype(jnp.bfloat16), cache.length),
         jax.vmap(put)(cache.v, v.astype(jnp.bfloat16), cache.length),
         cache.length + C,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Speculative rollback (DESIGN.md §13): residual-ring rewind
+# ---------------------------------------------------------------------------
+
+def rewind_residual(
+    final_res: jax.Array,  # (B, Hkv, W, d) ring after k appends
+    snap_res: jax.Array,   # (B, Hkv, W, d) ring at pass entry (length L0)
+    base_len: jax.Array,   # () or (B,): L0
+    new_len: jax.Array,    # () or (B,): rewind target L', L0 <= L' <= L0+k
+) -> jax.Array:
+    """Rewind a mod-W residual ring to what a sequential run stopped at
+    ``new_len`` would hold.
+
+    Slot ``s`` was written by this pass's append of position
+    ``L0 + j(s)`` with ``j(s) = (s - L0) mod W`` (at most once: a verify
+    pass appends k <= W tokens).  Keep the final value exactly when that
+    appended position survives the rewind (``L0 + j(s) < L'``); restore
+    the snapshot otherwise -- including rows that appended nothing
+    (``L' == L0``: the junk slot an inactive row wrote is restored).
+    Packed storage is never rewound: a rolled-back flush's slab sits
+    entirely at W-aligned offsets >= L' - L' %% W, is masked by every
+    read, and the next flush to become readable rewrites it whole
+    (W-alignment invariant, DESIGN.md §13)."""
+    W = final_res.shape[-2]
+    s = jnp.arange(W)
+    if base_len.ndim:
+        j = jnp.mod(s[None, :] - base_len[:, None], W)  # (B, W)
+        keep = (base_len[:, None] + j) < new_len[:, None]
+        keep = keep[:, None, :, None]
+    else:
+        j = jnp.mod(s - base_len, W)
+        keep = ((base_len + j) < new_len)[None, None, :, None]
+    return jnp.where(keep, final_res, snap_res)
+
+
+def truncate_rows(
+    cache: QuantKVCache,
+    new_len: jax.Array,  # () or (B,) matching cache.length
+    snap_k_res: jax.Array,
+    snap_v_res: jax.Array,
+    base_len: jax.Array,  # () or (B,): lengths at verify-pass entry
+) -> QuantKVCache:
+    """Roll a quantized cache back to ``new_len`` after a verify pass:
+    length decrement + residual-ring rewind (:func:`rewind_residual`).
+    Donation-safe: ``where`` over same-shape buffers, packed storage
+    untouched."""
+    return cache._replace(
+        k_residual=rewind_residual(cache.k_residual, snap_k_res,
+                                   base_len, new_len),
+        v_residual=rewind_residual(cache.v_residual, snap_v_res,
+                                   base_len, new_len),
+        length=jnp.broadcast_to(new_len, cache.length.shape).astype(
+            cache.length.dtype),
     )
 
 

@@ -67,6 +67,7 @@ __all__ = [
     "write_chunk",
     "insert_row",
     "reset_rows",
+    "truncate_pages",
     "int4_update_paged",
     "int4_prefill_chunk_paged",
     "meta_nbytes",
@@ -408,6 +409,33 @@ def insert_row(pd: PagedData, dense_leaves: tuple, residual_rows: tuple,
         pools=tuple(put(p, d) for p, d in zip(pd.pools, dense_leaves)),
         residual=residual, page_table=page_table, length=length, pool=pool,
     )
+
+
+def truncate_pages(pd: PagedData, new_lengths: jax.Array) -> PagedData:
+    """Roll per-row lengths back to ``new_lengths`` and release the
+    fully-vacated tail pages (decref + NULL the table entries).
+
+    The paged counterpart of a dense length decrement (speculative
+    rollback, DESIGN.md §13).  A page is released exactly when the
+    rewound row no longer covers any of its positions -- table entry
+    ``j`` survives iff ``j < ceil(L'_b / page_size)`` -- so a COW
+    sibling still referencing a released page keeps it alive through
+    the refcount (the decref is one reference, not a free).  Inside the
+    decode scan the engine does NOT call this: speculative rewinds there
+    are pure length decrements (page mappings are position-deterministic
+    and the slack pages are pre-allocated at admission), and pages are
+    reclaimed wholesale at retirement.  This is the host-side/structural
+    API: preemption, early cancellation, and the property suite's
+    tail-page fork tests use it."""
+    MP = pd.max_pages
+    ps = pd.page_size
+    keep_pages = -(-new_lengths // ps)  # (B,) ceil: pages still covered
+    j = jnp.arange(MP)[None, :]
+    drop = j >= keep_pages[:, None]  # (B, MP) entries to release
+    pool = pool_free(pd.pool, pd.page_table, drop)
+    page_table = jnp.where(drop, NULL_PAGE, pd.page_table)
+    length = jnp.minimum(pd.length, new_lengths).astype(pd.length.dtype)
+    return pd._replace(page_table=page_table, length=length, pool=pool)
 
 
 def reset_rows(pd: PagedData, mask: jax.Array) -> PagedData:

@@ -26,6 +26,8 @@ __all__ = [
     "decode_attention_quant",
     "decode_attention_bf16",
     "decode_attention_bf16_blockwise",
+    "verify_attention_quant",
+    "verify_attention_bf16",
 ]
 
 
@@ -322,4 +324,155 @@ def decode_attention_bf16_blockwise(
     a0 = jnp.zeros((B, Hkv, G, 1, d), jnp.float32)
     (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), jnp.arange(n_blk))
     out = (acc / jnp.maximum(l, 1e-30)[..., None]).reshape(B, Hq, 1, d)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Speculative verify: k queries against per-query historical cache views
+# ---------------------------------------------------------------------------
+#
+# A verify pass (DESIGN.md §13) appends k draft tokens to the cache FIRST
+# (k unrolled updates -- byte-identical to k sequential decode steps) and
+# then scores all k queries in ONE attention dispatch.  Query i must see
+# exactly the cache a sequential decode would have seen after its own
+# append, i.e. the length-(L0+i+1) prefix:
+#
+#   * packed storage is append-only within a pass (slabs are written
+#     whole at W-aligned offsets and never mutated after), so the FINAL
+#     packed arrays restricted to [0, plen_i) with plen_i = L_i - L_i %% W
+#     are bit-identical to what step i saw;
+#   * the residual ring is a mod-W overwrite structure, so query i's ring
+#     view is reconstructed from two rings: slot s comes from the FINAL
+#     ring when it was (re)written by this pass at a position the query
+#     may see (plen_i + s >= L0) and from the entry SNAPSHOT otherwise.
+#     With k <= W the pass writes at most W distinct slots, so the final
+#     ring holds position plen_i + s exactly whenever that position was
+#     appended this pass -- no collision, no per-write bookkeeping.
+#
+# The q-axis einsum forms below are bitwise equal to per-query single
+# attends on XLA CPU (asserted by tests/test_spec_decode.py parity).
+
+
+def _per_query_lengths(base_len: jax.Array, kq: int):
+    """(B?, kq) view lengths L_i = L0 + i + 1 for the i-th verify query."""
+    i = jnp.arange(kq)
+    if base_len.ndim:
+        return base_len[:, None] + i[None, :] + 1  # (B, kq)
+    return (base_len + i + 1)[None, :]  # (1, kq)
+
+
+def verify_attention_quant(
+    q: jax.Array,  # (B, Hq, kq, d) raw queries (post-RoPE), kq <= W
+    cache: QuantKVCache,  # FINAL state: all kq tokens already appended
+    rot_k: Rotation,
+    rot_v: Rotation,
+    *,
+    snap_k_res: jax.Array,  # (B, Hkv, W, d) residual ring at pass entry
+    snap_v_res: jax.Array,
+    base_len: jax.Array,  # () or (B,): lengths at pass entry (L0)
+    scale: float | None = None,
+    sliding_window: int | None = None,
+) -> jax.Array:
+    """Score kq verify queries, each against its own historical prefix.
+
+    Per-token bit-identical to kq sequential :func:`decode_attention_quant`
+    calls interleaved with the appends (see module comment above).
+    Returns (B, Hq, kq, d) in the original basis.
+    """
+    B, Hq, kq, d = q.shape
+    Hkv = cache.k_packed.shape[1]
+    G = Hq // Hkv
+    W = cache.window
+    sm_scale = scale if scale is not None else d ** -0.5
+    NEG = -1e30
+
+    q_eff = jnp.einsum(
+        "...d,ed->...e", q.astype(jnp.float32), rot_k.folded_query_matrix()
+    )
+    qg = q_eff.reshape(B, Hkv, G, kq, d)
+
+    Li = _per_query_lengths(base_len, kq)  # (B?, kq)
+    plen_q = Li - Li % W  # (B?, kq) per-query packed length
+    Li5 = Li[:, None, None, :, None]  # (B?,1,1,kq,1)
+    plen5 = plen_q[:, None, None, :, None]
+
+    # ---- packed part: final arrays, per-query plen bound ----
+    yk, yv, _ = kvcache.gather_rotated(cache)
+    s_max = yk.shape[-2]
+    logits_p = jnp.einsum("bhgqd,bhsd->bhgqs", qg, yk) * sm_scale
+    pos_p = jnp.arange(s_max)[None, None, None, None, :]
+    mask_p = pos_p < plen5
+    if sliding_window is not None:
+        mask_p &= pos_p >= (Li5 - sliding_window)
+    logits_p = jnp.where(mask_p, logits_p, NEG)
+    m_p = jnp.max(logits_p, axis=-1)  # (B,Hkv,G,kq)
+    e_p = jnp.exp(logits_p - m_p[..., None])
+    l_p = jnp.sum(e_p, axis=-1)
+    acc_p = jnp.einsum("bhgqs,bhsd->bhgqd", e_p, yv)
+
+    # ---- residual part: two-ring select (final vs snapshot) ----
+    base = base_len[:, None, None] if base_len.ndim \
+        else base_len[None, None, None]  # (B?,1,1)
+    s = jnp.arange(W)[None, None, :]  # (1,1,W)
+    from_final = plen_q[..., None] + s >= base  # (B?,kq,W)
+    sel = from_final[:, None, :, :, None]  # (B?,1,kq,W,1)
+    ring_k = jnp.where(sel, cache.k_residual[:, :, None],
+                       snap_k_res[:, :, None])  # (B,Hkv,kq,W,d)
+    ring_v = jnp.where(sel, cache.v_residual[:, :, None],
+                       snap_v_res[:, :, None])
+    logits_r = jnp.einsum("bhgqd,bhqsd->bhgqs", qg, ring_k) * sm_scale
+    pos_r = plen5 + jnp.arange(W)[None, None, None, None, :]
+    mask_r = pos_r < Li5
+    if sliding_window is not None:
+        mask_r &= pos_r >= (Li5 - sliding_window)
+    logits_r = jnp.where(mask_r, logits_r, NEG)
+    m_r = jnp.max(logits_r, axis=-1)
+    e_r = jnp.exp(logits_r - m_r[..., None])
+    l_r = jnp.sum(e_r, axis=-1)
+    acc_r = jnp.einsum("bhgqs,bhqsd->bhgqd", e_r, ring_v)
+
+    # ---- combine (same two-part online softmax as decode) ----
+    m = jnp.maximum(m_p, m_r)
+    w_p = jnp.exp(m_p - m)
+    w_r = jnp.exp(m_r - m)
+    denom = jnp.maximum(w_p * l_p + w_r * l_r, 1e-30)
+    out_rot = (w_p[..., None] * acc_p + w_r[..., None] * acc_r) \
+        / denom[..., None]
+    out_rot = out_rot.reshape(B, Hq, kq, d)
+    return rot_v.inverse(out_rot).astype(q.dtype)
+
+
+def verify_attention_bf16(
+    q: jax.Array,  # (B, Hq, kq, d)
+    cache: BF16KVCache,  # FINAL state: all kq tokens already appended
+    *,
+    base_len: jax.Array,  # () or (B,): lengths at pass entry
+    scale: float | None = None,
+    sliding_window: int | None = None,
+) -> jax.Array:
+    """kq-query verify read over the dense bf16 cache.
+
+    No snapshot needed: bf16 appends write position t to index t, so the
+    FINAL buffers restricted to [0, L_i) ARE what sequential step i saw.
+    Per-token bit-identical to kq :func:`decode_attention_bf16` calls
+    (empty-row-safe softmax preserved per query)."""
+    B, Hq, kq, d = q.shape
+    Hkv = cache.k.shape[1]
+    G = Hq // Hkv
+    sm_scale = scale if scale is not None else d ** -0.5
+    k = cache.k.astype(jnp.float32)
+    v = cache.v.astype(jnp.float32)
+    Li = _per_query_lengths(base_len, kq)  # (B?, kq)
+    Li5 = Li[:, None, None, :, None]
+    qg = q.astype(jnp.float32).reshape(B, Hkv, G, kq, d)
+    logits = jnp.einsum("bhgqd,bhsd->bhgqs", qg, k) * sm_scale
+    pos = jnp.arange(k.shape[-2])[None, None, None, None, :]
+    mask = pos < Li5
+    if sliding_window is not None:
+        mask &= pos >= (Li5 - sliding_window)
+    logits = jnp.where(mask, logits, -jnp.inf)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - jnp.where(jnp.isfinite(m), m, 0.0))
+    p = e / jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhgqs,bhsd->bhgqd", p, v).reshape(B, Hq, kq, d)
     return out.astype(q.dtype)

@@ -97,7 +97,7 @@ import numpy as np
 
 from repro.core.cache_api import AttendBackend
 from repro.core.paged import NULL_PAGE, PagedData
-from repro.launch.engine import GREEDY, Sampler
+from repro.launch.engine import GREEDY, Sampler, draft_tokens
 
 __all__ = ["Request", "Completion", "BatchEngine"]
 
@@ -174,7 +174,8 @@ class BatchEngine:
                  page_size: int = 16, n_pages: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
                  prefill_budget: Optional[int] = None,
-                 prefix_reuse: bool = True):
+                 prefix_reuse: bool = True,
+                 spec_k: Optional[int] = None):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         if chunk < 1:
@@ -193,6 +194,27 @@ class BatchEngine:
         self.donate = donate
         self._rots = rots
         self._init_key = key if key is not None else jax.random.PRNGKey(0)
+
+        # self-speculative decoding (DESIGN.md §13): each scan step of
+        # the decode chunk becomes a draft-verify-accept-rollback pass
+        # that advances every live row by 1..spec_k tokens
+        self.spec_k = spec_k
+        if spec_k is not None:
+            if self.sampler.temperature != 0.0:
+                raise ValueError(
+                    "spec_k requires greedy sampling (temperature == 0): "
+                    "exact-match acceptance against the verify argmax is "
+                    "what keeps per-row output bit-identical"
+                )
+            if spec_k < 2:
+                raise ValueError(f"spec_k must be >= 2, got {spec_k}")
+            W = getattr(self.policy, "window", None)
+            if W is not None and spec_k > W:
+                raise ValueError(
+                    f"spec_k={spec_k} must be <= the policy flush window "
+                    f"W={W}: a verify pass appends at most one "
+                    f"residual-ring wrap (DESIGN.md §13)"
+                )
 
         self.paged = paged
         if paged:
@@ -289,6 +311,20 @@ class BatchEngine:
         self._slot_toks: list[list[int]] = [[] for _ in range(capacity)]
         self._queue: deque[Request] = deque()
         self._sample_key = jax.random.fold_in(self._init_key, 0x5A5A)
+
+        if spec_k is not None:
+            # per-slot drafter history: prompt + every sampled token.
+            # Device-resident (the spec chunk carries it); admission
+            # reseeds one row host-side.  Capacity: total tokens per row
+            # is bounded by s_max - spec_k + 1 (_validate slack) and each
+            # pass writes spec_k wide at hlen, so s_max + spec_k covers
+            # the k-wide tail write with room to spare.
+            self._hist_cap = s_max + spec_k
+            self._hist = jnp.zeros((capacity, self._hist_cap), jnp.int32)
+            self._hlen = jnp.zeros((capacity,), jnp.int32)
+            self._spec_chunk_fns: dict[int, Any] = {}
+            self.n_drafted = 0   # draft positions scored (excl. bonus)
+            self.n_accepted = 0  # draft positions accepted (excl. bonus)
 
         if paged:
             # host-side pool bookkeeping: a refcount mirror drives
@@ -498,7 +534,11 @@ class BatchEngine:
             del self._prefix_seqs[k]
 
     def _pages_needed(self, prompt_len: int, max_new: int) -> int:
-        return -(-(prompt_len + max_new) // self.page_size)
+        # spec_k - 1 slack: verify passes transiently append past the
+        # last kept position, and the paged read path clamps page-table
+        # lookups -- unmapped transient tokens would alias page 0
+        slack = self.spec_k - 1 if self.spec_k is not None else 0
+        return -(-(prompt_len + max_new + slack) // self.page_size)
 
     def _plan_pages(self, req: Request):
         """Host-side admission plan: walk the prefix index page by page
@@ -656,6 +696,91 @@ class BatchEngine:
             self._chunk_fns[n_steps] = fn
         return fn
 
+    def _spec_chunk_fn(self, n_steps: int):
+        """Speculative decode chunk (DESIGN.md §13): ``n_steps`` scan
+        iterations, each a draft-verify-accept-rollback pass advancing
+        every live row 1..spec_k tokens.  Emits ``(capacity, n_steps *
+        spec_k)`` token/valid grids -- the host extraction loop reads
+        them exactly like the plain chunk's (valid rows are the accepted
+        prefix of each pass's k-block).  Per-row acceptance widths are
+        the ragged advance: ``truncate_cache`` rolls every row back to
+        its own accepted length inside the dispatch."""
+        fn = self._spec_chunk_fns.get(n_steps)
+        if fn is None:
+            k = self.spec_k
+
+            def run(params, tok, cache, active, budget, hist, hlen, key):
+                def body(carry, _):
+                    tok, cache, active, budget, hist, hlen, key, nd, na \
+                        = carry
+                    L0 = cache["pos"]  # (capacity,) entry lengths
+                    drafts = draft_tokens(hist, hlen, k)  # (B, k-1)
+                    block = jnp.concatenate([tok, drafts], axis=1)
+                    logits, cache, snaps = self.model.decode_verify(
+                        params, block, cache, kv_block=self.kv_block,
+                        backend=self.backend, active=active,
+                    )
+                    key, _ = jax.random.split(key)  # greedy: drawn, unused
+                    g = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                    # exact-match acceptance per row: longest prefix of
+                    # drafts equal to the verified greedy tokens, +1 for
+                    # the always-emitted bonus token
+                    match = (block[:, 1:] == g[:, :-1]).astype(jnp.int32)
+                    a = jnp.sum(jnp.cumprod(match, axis=1), axis=1)  # (B,)
+                    m = jnp.minimum(a + 1, budget)  # per-row budget clamp
+                    if self.eos_id is not None:
+                        # an eos inside the accepted prefix ends the row
+                        # there: tokens past it were never sampled in the
+                        # sequential run
+                        is_eos = g == self.eos_id
+                        m = jnp.where(is_eos.any(axis=1),
+                                      jnp.minimum(m, jnp.argmax(is_eos,
+                                                                axis=1) + 1),
+                                      m)
+                    m = jnp.where(active, m, 0)
+                    valid = jnp.arange(k)[None, :] < m[:, None]  # (B, k)
+                    nxt = jnp.take_along_axis(
+                        g, jnp.clip(m - 1, 0, k - 1)[:, None], axis=1
+                    )
+                    nxt = jnp.where(active[:, None], nxt, tok)
+                    budget = budget - m.astype(budget.dtype)
+                    alive = active & (budget > 0)
+                    if self.eos_id is not None:
+                        alive = alive & (nxt[:, 0] != self.eos_id)
+                    # ragged rollback: every row to its own accepted
+                    # length (inactive rows appended nothing; L0 + 0
+                    # restores them to their snapshot, a no-op)
+                    cache = self.model.truncate_cache(cache, L0 + m, snaps)
+                    hist2 = jax.vmap(
+                        lambda h, row, s: jax.lax.dynamic_update_slice(
+                            h, row, (s,))
+                    )(hist, g, hlen)
+                    hist = jnp.where(active[:, None], hist2, hist)
+                    hlen = hlen + m
+                    nd = nd + jnp.sum(jnp.where(active, k - 1, 0))
+                    na = na + jnp.sum(jnp.where(active, m - 1, 0))
+                    return ((nxt, cache, alive, budget, hist, hlen, key,
+                             nd, na), (g, valid))
+
+                carry0 = (tok, cache, active, budget, hist, hlen, key,
+                          jnp.int32(0), jnp.int32(0))
+                carry, (toks, valid) = jax.lax.scan(
+                    body, carry0, None, length=n_steps
+                )
+                tok, cache, active, budget, hist, hlen, _, nd, na = carry
+                toks = jnp.moveaxis(toks, 0, 1).reshape(
+                    self.capacity, n_steps * k)
+                valid = jnp.moveaxis(valid, 0, 1).reshape(
+                    self.capacity, n_steps * k)
+                return (tok, cache, active, budget, hist, hlen, toks,
+                        valid, nd, na)
+
+            fn = jax.jit(
+                run, donate_argnums=(2, 5, 6) if self.donate else ()
+            )
+            self._spec_chunk_fns[n_steps] = fn
+        return fn
+
     # -------------------------------------------------------------- schedule
     def _validate(self, req: Request) -> int:
         """Shared request validation (submit + packed admission).
@@ -667,10 +792,16 @@ class BatchEngine:
             raise ValueError(
                 f"request {req.rid}: max_new_tokens must be >= 1"
             )
-        if n + req.max_new_tokens > self.s_max:
+        # speculative rows need spec_k - 1 tokens of slack past the last
+        # decoded position: a verify pass appends k tokens BEFORE the
+        # rollback, and a clamped out-of-bounds append would corrupt
+        # resident bytes instead of failing loudly
+        slack = self.spec_k - 1 if self.spec_k is not None else 0
+        if n + req.max_new_tokens + slack > self.s_max:
+            extra = f" + spec_k-1 ({slack})" if slack else ""
             raise ValueError(
                 f"request {req.rid}: prompt ({n}) + max_new_tokens "
-                f"({req.max_new_tokens}) exceeds s_max={self.s_max}"
+                f"({req.max_new_tokens}){extra} exceeds s_max={self.s_max}"
             )
         return n
 
@@ -784,6 +915,8 @@ class BatchEngine:
         once the row is in the slot cache and ``tok0`` is drawn."""
         t0 = int(tok0[0, 0])
         self._slot_req[slot] = req
+        if self.spec_k is not None:
+            self._seed_hist(slot, req, t0)
         if req.resume_tok is not None:
             # t0 was already counted/streamed before the preemption
             self._slot_toks[slot] = []
@@ -799,6 +932,19 @@ class BatchEngine:
         if done:
             return self._retire(slot)
         return None
+
+    def _seed_hist(self, slot: int, req: Request, t0: int) -> None:
+        """(Re)seed one slot's drafter history: prompt followed by the
+        admission token (a preemption resume's ``prompt`` already
+        absorbed everything generated before, so the same layout covers
+        both admission flavors).  Admission-rate host work -- the decode
+        chunks carry the history on device."""
+        prompt = np.asarray(req.prompt, np.int32).ravel()
+        row = np.zeros((self._hist_cap,), np.int32)
+        row[:prompt.shape[0]] = prompt
+        row[prompt.shape[0]] = t0
+        self._hist = self._hist.at[slot].set(jnp.asarray(row))
+        self._hlen = self._hlen.at[slot].set(prompt.shape[0] + 1)
 
     # ------------------------------------------------- chunked admission
     def _find_donor(self, prompt: np.ndarray) -> tuple[int, Optional[np.ndarray]]:
@@ -1189,12 +1335,25 @@ class BatchEngine:
         # tokens (clipped to the longest remaining budget -- no masked
         # tail steps when every live request is nearly done)
         n_steps = int(min(self.chunk, self.budget[self.active].max()))
-        fn = self._chunk_fn(n_steps)
         self._sample_key, sub = jax.random.split(self._sample_key)
-        (self.tok, self.cache, active_dev, budget_dev, toks,
-         valid) = fn(self.params, self.tok, self.cache,
-                     jnp.asarray(self.active), jnp.asarray(self.budget),
-                     sub)
+        if self.spec_k is not None:
+            # each scan step is one verify pass emitting 1..spec_k
+            # tokens per live row; the flattened (capacity, n_steps *
+            # spec_k) grids feed the same extraction loop below
+            fn = self._spec_chunk_fn(n_steps)
+            (self.tok, self.cache, active_dev, budget_dev, self._hist,
+             self._hlen, toks, valid, nd, na) = fn(
+                self.params, self.tok, self.cache,
+                jnp.asarray(self.active), jnp.asarray(self.budget),
+                self._hist, self._hlen, sub)
+            self.n_drafted += int(nd)
+            self.n_accepted += int(na)
+        else:
+            fn = self._chunk_fn(n_steps)
+            (self.tok, self.cache, active_dev, budget_dev, toks,
+             valid) = fn(self.params, self.tok, self.cache,
+                         jnp.asarray(self.active), jnp.asarray(self.budget),
+                         sub)
         toks = np.asarray(toks)
         valid = np.asarray(valid)
         self.budget = np.asarray(budget_dev).copy()

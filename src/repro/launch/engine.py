@@ -61,7 +61,7 @@ import jax.numpy as jnp
 
 from repro.core.cache_api import AttendBackend
 
-__all__ = ["Sampler", "GREEDY", "Engine", "generate"]
+__all__ = ["Sampler", "GREEDY", "Engine", "generate", "draft_tokens"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -96,6 +96,52 @@ class Sampler:
 GREEDY = Sampler()
 
 
+def draft_tokens(hist: jax.Array, hlen: jax.Array, k: int) -> jax.Array:
+    """n-gram / prompt-lookup drafter (DESIGN.md §13): propose ``k - 1``
+    continuation tokens from the request's own history.
+
+    ``hist`` is ``(B, H)`` int32 -- prompt followed by every token
+    sampled so far, with ``hist[:, hlen - 1]`` the current token; ``hlen``
+    is a () int32 when rows advance in lockstep (one fused engine) or a
+    per-row ``(B,)`` int32 (the ragged batch engine: each slot's history
+    has its own length).  Finds the most recent earlier position whose
+    (previous, current) bigram matches the tail (unigram fallback) and
+    proposes the tokens that followed it; with no match it proposes the
+    current token repeated.  Entirely in-trace (one pass over ``hist``,
+    no host sync) and allowed to be WRONG: drafts only ever gate how many
+    verified tokens are accepted, never what they are -- greedy verify
+    output is bit-identical to plain decode for any drafts whatsoever.
+    Returns ``(B, k - 1)`` int32.
+    """
+    B, H = hist.shape
+    pos = jnp.arange(H)[None, :]  # (1, H)
+    if jnp.ndim(hlen):
+        # ragged: per-row tails via clipped gathers (rows with hlen == 0
+        # -- empty slots -- read garbage that never matters: their drafts
+        # are masked out by the caller's ``active`` vector)
+        hl = hlen[:, None]  # (B, 1)
+        t = jnp.take_along_axis(hist, jnp.clip(hl - 1, 0, H - 1), axis=1)
+        prev = jnp.take_along_axis(hist, jnp.clip(hl - 2, 0, H - 1), axis=1)
+        can = pos < hl - 1
+    else:
+        t = jax.lax.dynamic_slice_in_dim(hist, hlen - 1, 1, axis=1)  # (B,1)
+        prev = jax.lax.dynamic_slice_in_dim(
+            hist, jnp.maximum(hlen - 2, 0), 1, axis=1
+        )
+        # candidate p must have a successor inside the realized history
+        can = pos < hlen - 1
+    m1 = can & (hist == t)
+    m2 = m1 & (pos >= 1) \
+        & (jnp.concatenate([hist[:, :1], hist[:, :-1]], axis=1) == prev)
+    p1 = jnp.max(jnp.where(m1, pos, -1), axis=1)  # (B,) most recent match
+    p2 = jnp.max(jnp.where(m2, pos, -1), axis=1)
+    pstar = jnp.where(p2 >= 0, p2, p1)  # bigram preferred
+    j = jnp.arange(1, k)[None, :]
+    gidx = jnp.clip(pstar[:, None] + j, 0, H - 1)
+    drafts = jnp.take_along_axis(hist, gidx, axis=1)
+    return jnp.where(pstar[:, None] >= 0, drafts, t).astype(jnp.int32)
+
+
 class Engine:
     """Fused generation for one (model, backend, sampler) configuration.
 
@@ -118,6 +164,7 @@ class Engine:
         )
         self._decode_fns: dict[int, Any] = {}
         self._generate_fns: dict[int, Any] = {}
+        self._spec_fns: dict[tuple, Any] = {}
 
     # ------------------------------------------------------------- internals
     def _prefill_impl(self, params, prompt, cache):
@@ -200,6 +247,143 @@ class Engine:
         if key is None:
             key = jax.random.PRNGKey(0)
         return fn(params, prompt, cache, key)
+
+    # ----------------------------------------------- speculative decoding
+    def _check_spec(self, cache, spec_k: int, batch: int):
+        if self.sampler.temperature != 0.0:
+            raise ValueError(
+                "speculative decoding requires greedy sampling "
+                "(temperature == 0): exact-match acceptance against the "
+                "verify argmax is what keeps output bit-identical"
+            )
+        if spec_k < 2:
+            raise ValueError(f"spec_k must be >= 2, got {spec_k}")
+        if batch != 1:
+            raise ValueError(
+                "Engine.decode_spec serves a single stream (batch 1): a "
+                "non-ragged cache has one shared length, so per-row "
+                "acceptance widths are impossible -- use BatchEngine "
+                "with spec_k for batched speculative decoding"
+            )
+        pol = cache["attn"].policy
+        W = getattr(pol, "window", None)
+        if W is not None and spec_k > W:
+            raise ValueError(
+                f"spec_k={spec_k} must be <= the policy flush window "
+                f"W={W}: a verify pass appends at most one residual-ring "
+                f"wrap (DESIGN.md §13)"
+            )
+
+    def _spec_body(self, params, n_tokens: int, spec_k: int):
+        """lax.scan body: one draft-verify-accept-rollback pass.
+
+        Emits 1..spec_k tokens per firing into the carried output buffer;
+        firings after the budget is spent are skipped via ``lax.cond``
+        (no append past ``n_tokens``, so cache state stays exactly what a
+        sequential run leaves behind)."""
+        k = spec_k
+
+        def do_pass(op):
+            out_buf, tok, cache, key, hist, hlen, count, nd, na = op
+            L0 = cache["pos"]  # () int32: entry length
+            drafts = draft_tokens(hist, hlen, k)  # (B, k-1)
+            block = jnp.concatenate([tok, drafts], axis=1)  # (B, k)
+            logits, cache, snaps = self.model.decode_verify(
+                params, block, cache, kv_block=self.kv_block,
+                backend=self.backend,
+            )
+            key, _ = jax.random.split(key)  # greedy: drawn, unused
+            g = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # (B, k)
+            # exact-match acceptance: longest prefix of drafts that equals
+            # the verified greedy tokens, +1 for the bonus token
+            match = (block[:, 1:] == g[:, :-1]).astype(jnp.int32)
+            a = jnp.sum(jnp.cumprod(match, axis=1), axis=1)[0]  # ()
+            m = jnp.minimum(a + 1, n_tokens - count)  # budget clamp
+            out_buf = jax.lax.dynamic_update_slice(out_buf, g, (0, count))
+            # rejected garbage past position count + m is overwritten by
+            # the next pass's k-wide write before the final [:n_tokens]
+            # slice can see it
+            cache = self.model.truncate_cache(cache, L0 + m, snaps)
+            tok = jax.lax.dynamic_slice(g, (0, m - 1), (g.shape[0], 1))
+            hist = jax.lax.dynamic_update_slice(hist, g, (0, hlen))
+            return (out_buf, tok, cache, key, hist, hlen + m, count + m,
+                    nd + k - 1, na + m - 1)
+
+        def body(carry, _):
+            count = carry[6]
+            carry = jax.lax.cond(
+                count < n_tokens, do_pass, lambda op: op, carry
+            )
+            return carry, None
+
+        return body
+
+    def decode_spec(self, params, tok, cache, n_tokens: int, *,
+                    prompt: jax.Array, spec_k: int,
+                    key: Optional[jax.Array] = None):
+        """Self-speculative fused decode (DESIGN.md §13): ONE dispatch
+        scanning draft-verify passes until ``n_tokens`` tokens are out.
+
+        ``tok`` (1, 1) is the last sampled token (not yet in the cache);
+        ``prompt`` (1, S) seeds the prompt-lookup drafter.  Greedy only;
+        returns ``(tokens (1, n_tokens), cache, stats)`` with ``tokens``
+        bit-identical to :meth:`decode` and ``stats`` the device counters
+        ``{"drafted": (), "accepted": ()}`` (accepted/drafted = the
+        acceptance rate; both count draft positions, excluding the
+        always-emitted bonus token).  The cache must have
+        ``spec_k - 1`` tokens of capacity slack past the last decoded
+        position (verify appends before rollback).  Input cache donated.
+        """
+        self._check_spec(cache, spec_k, tok.shape[0])
+        S = prompt.shape[1]
+        sig = (n_tokens, spec_k, S)
+        fn = self._spec_fns.get(sig)
+        if fn is None:
+            def run(params, tok, cache, prompt, key):
+                B = tok.shape[0]
+                H = S + n_tokens + spec_k
+                hist = jnp.zeros((B, H), jnp.int32)
+                hist = jax.lax.dynamic_update_slice(
+                    hist, prompt.astype(jnp.int32), (0, 0))
+                hist = jax.lax.dynamic_update_slice(hist, tok, (0, S))
+                out_buf = jnp.zeros((B, n_tokens + spec_k), jnp.int32)
+                carry = (out_buf, tok, cache, key, hist,
+                         jnp.int32(S + 1), jnp.int32(0),
+                         jnp.int32(0), jnp.int32(0))
+                carry, _ = jax.lax.scan(
+                    self._spec_body(params, n_tokens, spec_k), carry, None,
+                    length=n_tokens,
+                )
+                out_buf, _, cache, _, _, _, _, nd, na = carry
+                return out_buf[:, :n_tokens], cache, {"drafted": nd,
+                                                      "accepted": na}
+
+            fn = jax.jit(run, donate_argnums=(2,) if self.donate else ())
+            self._spec_fns[sig] = fn
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        return fn(params, tok, cache, prompt, key)
+
+    def generate_spec(self, params, prompt, cache, n_tokens: int, *,
+                      spec_k: int, key: Optional[jax.Array] = None):
+        """Prefill + speculative decode, matching :meth:`generate`'s
+        output bit-for-bit (greedy): the first token comes from the
+        prefill logits, the remaining ``n_tokens - 1`` from
+        :meth:`decode_spec`.  Returns ``(tokens (1, n_tokens), cache,
+        stats)``."""
+        # validate BEFORE the prefill donates the cache: a bad spec_k
+        # must not consume the caller's buffers
+        self._check_spec(cache, spec_k, prompt.shape[0])
+        logits, cache = self.prefill(params, prompt, cache)
+        tok0 = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        if n_tokens == 1:
+            return tok0, cache, {"drafted": jnp.int32(0),
+                                 "accepted": jnp.int32(0)}
+        toks, cache, stats = self.decode_spec(
+            params, tok0, cache, n_tokens - 1, prompt=prompt,
+            spec_k=spec_k, key=key,
+        )
+        return jnp.concatenate([tok0, toks], axis=1), cache, stats
 
 
 @functools.lru_cache(maxsize=64)

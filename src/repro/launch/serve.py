@@ -140,6 +140,13 @@ def main():
                          "(default: one chunk) -- the prefill-throughput "
                          "vs decode-latency knob: higher admits faster, "
                          "lower bounds the per-quantum stall")
+    ap.add_argument("--spec-k", type=int, default=None,
+                    help="self-speculative decoding (DESIGN.md §13): "
+                         "each decode pass drafts K-1 tokens by prompt "
+                         "lookup, verifies all K in one dispatch and "
+                         "keeps the exact-match prefix -- greedy only, "
+                         "output bit-identical to plain decode (int4: "
+                         "K must be <= the flush window W)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature (0 = greedy)")
     ap.add_argument("--top-k", type=int, default=0,
@@ -222,6 +229,10 @@ def main():
     s_max = args.s_max
     if s_max is None:
         s_max = args.prompt_len + args.new_tokens + window
+        if args.spec_k:
+            # verify passes transiently append spec_k tokens past the
+            # last kept position (BatchEngine._validate enforces this)
+            s_max += args.spec_k
         s_max += (-s_max) % max(window, 1)
     engine = BatchEngine(
         model, params, capacity=args.max_batch, s_max=s_max,
@@ -230,6 +241,7 @@ def main():
         paged=args.paged, page_size=args.page_size, n_pages=args.pool_pages,
         prefill_chunk=args.prefill_chunk,
         prefill_budget=args.prefill_budget,
+        spec_k=args.spec_k,
     )
     pname = policy.name if policy is not None else "-"
     layout = (f"paged pool: {engine.n_pages - 1} pages x "
@@ -239,9 +251,11 @@ def main():
                  f"{engine.prefill_budget} tok/quantum"
                  if args.prefill_chunk else "monolithic prefill")
     mode = "http/sse pipeline" if args.http else "closed-loop queue"
+    spec = (f" spec-k={args.spec_k} (self-speculative, bit-identical)"
+            if args.spec_k else "")
     print(f"[serve] arch={cfg.name} policy={pname} "
           f"backend={backend.value} max-batch={args.max_batch} "
-          f"new={args.new_tokens} chunk={args.chunk} "
+          f"new={args.new_tokens} chunk={args.chunk}{spec} "
           f"({mode}; continuous batching: {layout}, {admission}, "
           f"donated scan chunks)")
 
@@ -288,6 +302,11 @@ def _serve_queue(engine: BatchEngine, policy, args) -> None:
         print(f"  admission: {engine.n_prefill_chunks} prefill chunks, "
               f"{engine.n_reused_tokens} prompt tokens skipped via "
               f"token-level prefix reuse")
+    if args.spec_k:
+        rate = engine.n_accepted / max(engine.n_drafted, 1)
+        print(f"  speculative: {engine.n_accepted}/{engine.n_drafted} "
+              f"drafted tokens accepted ({100 * rate:.0f}%; spec-k="
+              f"{args.spec_k}, output bit-identical to plain decode)")
     data = _cache_report(policy, engine.cache.get("attn"), engine=engine)
     _write_stats_json(args.stats_json, {
         "mode": "queue", "interrupted": interrupted,
@@ -397,6 +416,14 @@ def _serve_single_stream(cfg, model, params, prompt, policy, backend,
                          sampler, args, key, rots=None):
     """Recurrent-state families: fused single-stream engine (no ragged
     slot semantics for ssm/hybrid caches yet)."""
+    if getattr(args, "spec_k", None):
+        raise SystemExit(
+            f"error: --spec-k requires the continuous-batching engine, "
+            f"but family={cfg.family} is served single-stream: recurrent "
+            f"state (ssm/hybrid/audio) has no truncate_rows rollback "
+            f"path, so a rejected draft could not be rewound.  Drop "
+            f"--spec-k or serve a pure-attention arch (dense/moe/vlm)."
+        )
     if getattr(args, "http", False):
         print(f"[note] --http needs a pure-attention family "
               f"(got {cfg.family}); serving the closed-loop path")

@@ -376,6 +376,13 @@ class ServingPipeline:
             gauges["pool_pages_total"] = pool["n_pages"]
             gauges["pool_utilization"] = float(pool["utilization"])
             gauges["pool_preemptions_total"] = pool["preemptions"]
+        if getattr(eng, "spec_k", None):
+            gauges["spec_k"] = eng.spec_k
+            gauges["spec_tokens_drafted_total"] = int(eng.n_drafted)
+            gauges["spec_tokens_accepted_total"] = int(eng.n_accepted)
+            gauges["spec_acceptance_rate"] = float(
+                eng.n_accepted / max(eng.n_drafted, 1)
+            )
         return self.metrics.render_prometheus(gauges)
 
     # ------------------------------------------------------------ stage loops

@@ -127,4 +127,11 @@ def cache_report_data(policy, state, engine=None) -> dict:
     if engine is not None and getattr(engine, "prefill_chunk", None):
         out["prefill_chunks"] = engine.n_prefill_chunks
         out["reused_prompt_tokens"] = engine.n_reused_tokens
+    if engine is not None and getattr(engine, "spec_k", None):
+        out["spec_k"] = engine.spec_k
+        out["spec_tokens_drafted"] = int(engine.n_drafted)
+        out["spec_tokens_accepted"] = int(engine.n_accepted)
+        out["spec_acceptance_rate"] = (
+            engine.n_accepted / max(engine.n_drafted, 1)
+        )
     return out

@@ -23,7 +23,7 @@ from repro.models import common
 from repro.models.flash import flash_attention
 
 __all__ = ["attention_init", "attention_forward", "attention_prefill_chunk",
-           "attention_decode"]
+           "attention_decode", "attention_verify"]
 
 
 def attention_init(key, cfg, *, d_model: int | None = None):
@@ -199,3 +199,46 @@ def attention_decode(
         kv_block=kv_block,
     )
     return _merge_heads(p, o), new_cache
+
+
+def attention_verify(
+    p,
+    x: jax.Array,  # (B, k, d) -- the current token + k-1 draft tokens
+    cfg,
+    cache: CacheState,
+    *,
+    position: jax.Array,  # () shared -- or (B,) per-row (ragged batch)
+    kv_block: int = 512,
+    backend: AttendBackend | str | None = None,
+    active: jax.Array | None = None,  # (B,) bool, ragged caches only
+):
+    """Speculative verify pass (DESIGN.md §13): append k tokens, score
+    all k queries in ONE attend.  Returns ``(y, new_cache, snap)``.
+
+    The k appends are the SAME ``policy.update`` calls a sequential
+    decode makes (unrolled -- byte-identical cache state), and
+    ``policy.verify_attend`` reconstructs each query's historical view
+    from the pre-pass snapshot, so ``y[:, j]`` is bit-identical to the
+    ``attention_decode`` output for token j of a sequential run.  The
+    caller keeps ``snap`` to roll back rejected drafts via
+    ``policy.truncate_rows``.
+    """
+    B, kq, _ = x.shape
+    # scalar -> (k,) shared positions; ragged (B,) -> (B, k): token j of
+    # row b RoPE-rotates at absolute position position_b + j
+    if position.ndim == 0:
+        pos = position + jax.numpy.arange(kq)
+    else:
+        pos = position[:, None] + jax.numpy.arange(kq)[None, :]
+    q, k, v = _project_qkv(p, x, cfg, pos)
+    snap = cache.policy.snapshot_rows(cache)
+    new_cache = cache
+    for j in range(kq):  # unrolled: bit-identical to sequential appends
+        new_cache = new_cache.policy.update(
+            new_cache, k[:, :, j:j + 1], v[:, :, j:j + 1], active=active
+        )
+    o = new_cache.policy.verify_attend(
+        q, new_cache, snap, scale=cfg.head_dim ** -0.5, backend=backend,
+        kv_block=kv_block,
+    )
+    return _merge_heads(p, o), new_cache, snap

@@ -331,6 +331,23 @@ class LM:
             h = ffn.ffn_apply(p["ffn"], h_in, cfg.ffn_activation)
         return x + h, new_cache
 
+    def _block_verify(self, p, x, cache, *, position, kv_block=512,
+                      backend=None, active=None):
+        cfg = self.cfg
+        h, new_cache, snap = attention.attention_verify(
+            p["attn"],
+            common.rmsnorm(p["ln_attn"], x, eps=cfg.norm_eps),
+            cfg, cache, position=position, kv_block=kv_block,
+            backend=backend, active=active,
+        )
+        x = x + h
+        h_in = common.rmsnorm(p["ln_ffn"], x, eps=cfg.norm_eps)
+        if cfg.moe is not None:
+            h, _ = moe.moe_apply(p["moe"], h_in, cfg.moe, d_model=cfg.d_model)
+        else:
+            h = ffn.ffn_apply(p["ffn"], h_in, cfg.ffn_activation)
+        return x + h, new_cache, snap
+
     # ----------------------------------------------------------- full forward
     def forward(self, params, tokens, *, patches=None, rots: Rotations = None,
                 kv_quant_cfg: dict | None = None, remat: bool = True,
@@ -657,6 +674,58 @@ class LM:
             return cache, logits
 
         return body
+
+    def decode_verify(self, params, tokens, cache, *, kv_block: int = 512,
+                      backend=None, active=None):
+        """Speculative verify pass (DESIGN.md §13): ``tokens`` is ``(B,
+        k)`` -- the current token followed by k-1 drafts.  Appends all k
+        to the cache and scores all k positions in ONE dispatch.
+        Returns ``(logits (B,k,V), new cache, snaps)`` where
+        ``logits[:, j]`` is bit-identical to the :meth:`decode_step`
+        logits a sequential greedy run would produce for token j, and
+        ``snaps`` is the per-layer (stacked) ``policy.snapshot_rows``
+        capture :meth:`truncate_cache` rolls rejected drafts back with.
+        Attention families only (recurrent state cannot roll back)."""
+        cfg = self.cfg
+        if cfg.family not in ("dense", "moe", "vlm"):
+            raise NotImplementedError(
+                f"speculative verify needs a pure-attention family "
+                f"(got {cfg.family}: recurrent state has no rollback)"
+            )
+        pos = cache["pos"]
+        kq = tokens.shape[1]
+        x = self._embed(params, tokens)
+
+        def body(x, inp):
+            p, c = inp
+            y, new_c, snap = self._block_verify(
+                p, x, c, position=pos, kv_block=kv_block,
+                backend=backend, active=active,
+            )
+            return y, (new_c, snap)
+
+        x, (new_attn, snaps) = common.scan(
+            body, x, (params["blocks"], cache["attn"])
+        )
+        new_pos = pos + kq if active is None \
+            else jnp.where(active, pos + kq, pos)
+        cache = dict(cache, attn=new_attn, pos=new_pos)
+        logits = self._unembed(params, x)
+        return logits, cache, snaps
+
+    def truncate_cache(self, cache, new_length, snaps):
+        """Roll a :meth:`decode_verify` pass back to ``new_length`` (()
+        or per-row (B,): entry length + accepted tokens): per-layer
+        ``policy.truncate_rows`` over the stacked snapshots, ``pos``
+        pinned to the same lengths.  Donation-safe like the updates."""
+        attn = cache["attn"]
+        pol = attn.policy
+        new_attn = jax.vmap(
+            lambda c, s: pol.truncate_rows(c, new_length, s)
+        )(attn, snaps)
+        pos = jnp.broadcast_to(new_length, cache["pos"].shape).astype(
+            cache["pos"].dtype)
+        return dict(cache, attn=new_attn, pos=pos)
 
     def decode_step(self, params, token, cache, *, kv_block: int = 512,
                     backend=None, active=None):

@@ -1,0 +1,429 @@
+"""Self-speculative decoding on the quantized cache (DESIGN.md §13).
+
+Three invariant families:
+
+* **Parity** -- speculative output must be bit-identical PER ROW to the
+  plain greedy run for every policy x dense/paged layout: the drafter is
+  allowed to be arbitrarily wrong, exact-match acceptance + rollback
+  must make its guesses unobservable in the token stream (including eos
+  cuts and finish reasons).
+* **Rollback** -- ``policy.truncate_rows`` must round-trip bit-exactly:
+  snapshot, append k speculative tokens, verify, truncate back to the
+  accepted length, and the cache must behave byte-for-byte like one
+  that only ever appended the accepted tokens -- including rewinds that
+  cross an int4 flush boundary (the residual ring refilled from the
+  snapshot, the stale packed slab masked until rewritten whole) and
+  paged tail-page truncation with COW siblings holding the pages.
+* **Wiring** -- spec_k validation (greedy-only, k <= W, capacity
+  slack), drafted/accepted counters, and the /metrics gauges.
+
+The ``_check_*`` helpers run two ways: ``test_property_*`` explores
+random shapes under hypothesis (full lane), ``test_grid_*`` sweeps a
+fixed grid without it (fast lane) -- same pattern as
+tests/test_properties.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # pragma: no cover - exercised by the fast CI lane
+    from _hypothesis_stub import given, settings, st
+
+from repro.configs.paper_models import SMOL_D64
+from repro.core.cache_api import AttendBackend, available_policies, get_policy
+from repro.core import paged as paged_mod
+from repro.launch.batch_engine import BatchEngine, Request
+from repro.launch.engine import Engine, Sampler, draft_tokens
+from repro.models import build_model
+
+MAX_EXAMPLES = 15
+POLICIES = list(available_policies())
+
+
+@pytest.fixture(scope="module")
+def lm():
+    model = build_model(SMOL_D64)
+    params = model.init(jax.random.PRNGKey(0))
+    # repetitive prompt so the prompt-lookup drafter actually hits; the
+    # parity claim itself is independent of acceptance rate
+    base = jax.random.randint(jax.random.PRNGKey(1), (1, 6), 0,
+                              SMOL_D64.vocab_size)
+    toks = jnp.tile(base, (1, 5))[:, :23]
+    return model, params, toks
+
+
+# ---------------------------------------------------------------------------
+# fused-engine parity (single stream)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_engine_spec_parity(lm, policy):
+    """generate_spec == generate bitwise for every policy (B=1)."""
+    model, params, toks = lm
+    NEW = 13
+    eng = Engine(model, donate=False)
+    cache = model.init_cache(1, 64, policy=policy, key=jax.random.PRNGKey(7))
+    ref, _ = eng.generate(params, toks, cache, NEW)
+    for k in (2, 4):
+        cache2 = model.init_cache(1, 64, policy=policy,
+                                  key=jax.random.PRNGKey(7))
+        out, _, stats = eng.generate_spec(params, toks, cache2, NEW,
+                                          spec_k=k)
+        np.testing.assert_array_equal(np.asarray(ref), np.asarray(out))
+        assert int(stats["accepted"]) <= int(stats["drafted"])
+
+
+def test_engine_spec_parity_at_window_edge(lm):
+    """spec_k == W (one full residual-ring wrap per pass) still exact."""
+    model, params, toks = lm
+    NEW = 13
+    pol = get_policy("int4-srft")
+    eng = Engine(model, donate=False)
+    cache = model.init_cache(1, 64, policy="int4-srft",
+                             key=jax.random.PRNGKey(7))
+    ref, _ = eng.generate(params, toks, cache, NEW)
+    cache2 = model.init_cache(1, 64, policy="int4-srft",
+                              key=jax.random.PRNGKey(7))
+    out, _, _ = eng.generate_spec(params, toks, cache2, NEW,
+                                  spec_k=pol.window)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(out))
+
+
+def test_engine_spec_validation(lm):
+    model, params, toks = lm
+    cache = model.init_cache(1, 64, policy="int4-srft",
+                             key=jax.random.PRNGKey(7))
+    eng = Engine(model, donate=False)
+    # validation fires BEFORE prefill: the caller's cache survives a
+    # rejected spec_k even on a donating engine
+    with pytest.raises(ValueError, match="spec_k must be >= 2"):
+        Engine(model).generate_spec(params, toks, cache, 8, spec_k=1)
+    W = get_policy("int4-srft").window
+    with pytest.raises(ValueError, match="flush window"):
+        eng.generate_spec(params, toks, cache, 8, spec_k=W + 1)
+    with pytest.raises(ValueError, match="greedy"):
+        Engine(model, sampler=Sampler(temperature=0.7)).generate_spec(
+            params, toks, cache, 8, spec_k=4)
+    cache2 = model.init_cache(2, 64, policy="int4-srft",
+                              key=jax.random.PRNGKey(7))
+    with pytest.raises(ValueError, match="batch 1"):
+        eng.generate_spec(
+            params, jnp.tile(toks, (2, 1)), cache2, 8, spec_k=4)
+
+
+def test_draft_tokens_ragged_matches_scalar():
+    """The (B,) hlen path must propose exactly what the scalar path
+    proposes row by row (the batch engine relies on it)."""
+    rng = np.random.default_rng(0)
+    hist = jnp.asarray(rng.integers(0, 7, size=(3, 24), dtype=np.int64),
+                       jnp.int32)
+    for hl in (3, 9, 17):
+        ragged = draft_tokens(hist, jnp.full((3,), hl, jnp.int32), 5)
+        scalar = draft_tokens(hist, jnp.int32(hl), 5)
+        np.testing.assert_array_equal(np.asarray(ragged),
+                                      np.asarray(scalar))
+
+
+# ---------------------------------------------------------------------------
+# batch-engine parity (ragged rows, dense + paged)
+# ---------------------------------------------------------------------------
+
+def _mixed_requests():
+    rng = np.random.RandomState(3)
+    base = rng.randint(0, SMOL_D64.vocab_size, size=(7,))
+    reqs = []
+    for rid, (plen, new) in enumerate([(14, 9), (21, 15), (7, 5)]):
+        prompt = np.tile(base, 6)[:plen].astype(np.int32)
+        prompt[0] = rid
+        reqs.append(Request(rid=rid, prompt=prompt, max_new_tokens=new))
+    return reqs
+
+
+def _run_batch(lm, policy, paged, spec_k, eos=None):
+    model, params, _ = lm
+    eng = BatchEngine(
+        model, params, capacity=2, s_max=64, policy=policy, chunk=4,
+        key=jax.random.PRNGKey(7), paged=paged, page_size=16,
+        spec_k=spec_k, eos_id=eos,
+    )
+    out = {}
+    for comp in eng.run(_mixed_requests()):
+        out[comp.rid] = (list(map(int, comp.tokens)), comp.finish_reason)
+    return out, eng
+
+
+@pytest.mark.parametrize("paged", [False, True],
+                         ids=["dense", "paged"])
+@pytest.mark.parametrize("policy", POLICIES)
+def test_batch_spec_parity(lm, policy, paged):
+    """Continuous batching + spec: every row's stream and finish reason
+    bit-identical to the plain engine, with slot reuse and per-row
+    (ragged) acceptance widths in play."""
+    ref, _ = _run_batch(lm, policy, paged, None)
+    got, eng = _run_batch(lm, policy, paged, 4)
+    assert got == ref
+    assert 0 <= eng.n_accepted <= eng.n_drafted
+
+
+def test_batch_spec_eos_parity(lm):
+    """An eos inside an accepted block must cut the stream exactly
+    where the sequential run stopped (same tokens, same reason)."""
+    ref_plain, _ = _run_batch(lm, "int4-srft", False, None)
+    eos = ref_plain[1][0][len(ref_plain[1][0]) // 2]  # mid-stream token
+    ref, _ = _run_batch(lm, "int4-srft", False, None, eos=eos)
+    got, _ = _run_batch(lm, "int4-srft", False, 4, eos=eos)
+    assert got == ref
+    assert any(r == "eos" for _, r in got.values())
+
+
+def test_batch_spec_validation(lm):
+    model, params, _ = lm
+    with pytest.raises(ValueError, match="greedy"):
+        BatchEngine(model, params, capacity=2, s_max=64, spec_k=4,
+                    sampler=Sampler(temperature=0.5))
+    with pytest.raises(ValueError, match="spec_k must be >= 2"):
+        BatchEngine(model, params, capacity=2, s_max=64, spec_k=1)
+    W = get_policy("int4-srft").window
+    with pytest.raises(ValueError, match="flush window"):
+        BatchEngine(model, params, capacity=2, s_max=64,
+                    policy="int4-srft", spec_k=W + 1)
+    # capacity slack: verify appends spec_k - 1 past the last decoded
+    # position, so prompt + max_new must leave room
+    eng = BatchEngine(model, params, capacity=2, s_max=32, spec_k=4)
+    with pytest.raises(ValueError, match="spec_k-1"):
+        eng.submit(Request(rid=0, prompt=np.zeros((16,), np.int32),
+                           max_new_tokens=16))
+
+
+def test_spec_counters_and_metrics(lm):
+    from repro.launch.server.pipeline import ServingPipeline
+    from repro.launch.server.stats import cache_report_data
+
+    _, eng = _run_batch(lm, "int4-srft", False, 4)
+    assert eng.n_drafted > 0
+    data = cache_report_data(eng.policy, eng.cache["attn"], eng)
+    assert data["spec_k"] == 4
+    assert data["spec_tokens_drafted"] == eng.n_drafted
+    assert data["spec_tokens_accepted"] == eng.n_accepted
+    assert 0.0 <= data["spec_acceptance_rate"] <= 1.0
+    pipe = ServingPipeline(eng)  # not started: metrics_text only
+    try:
+        txt = pipe.metrics_text()
+    finally:
+        eng.step_listeners.remove(pipe._on_step)
+    assert f"server_spec_tokens_drafted_total {eng.n_drafted}" in txt
+    assert f"server_spec_tokens_accepted_total {eng.n_accepted}" in txt
+    assert "server_spec_acceptance_rate" in txt
+
+
+# ---------------------------------------------------------------------------
+# truncate_rows round-trip (policy level)
+# ---------------------------------------------------------------------------
+
+def _seeded_state(pol, pol_name, paged, L0s, W, d=16, s_max=32, seed=0):
+    """Policy state with per-row lengths ``L0s`` built through the same
+    update/insert paths serving uses."""
+    key = jax.random.PRNGKey(seed)
+    B, Hkv = len(L0s), 2
+    if paged:
+        state = pol.init_paged(B, Hkv, s_max, d,
+                               n_pages=B * (s_max // W) + 2,
+                               page_size=W, key=key)
+        for b, L in enumerate(L0s):
+            row = pol.init_state(1, Hkv, s_max, d, key=key, ragged=True)
+            if pol_name == "int4-srft":
+                row = pol.with_rotations(row, state.data.rot_k,
+                                         state.data.rot_v)
+            if L:
+                kk = jax.random.normal(jax.random.fold_in(key, 100 + b),
+                                       (1, Hkv, L, d))
+                vv = jax.random.normal(jax.random.fold_in(key, 200 + b),
+                                       (1, Hkv, L, d))
+                row = pol.prefill(row, kk, vv)
+            shared = jnp.zeros((s_max // W,), jnp.int32)
+            state = pol.insert_row_paged(
+                state, row, jnp.int32(b), shared, jnp.int32(0),
+                jnp.int32(s_max // W))
+        return state
+    state = pol.init_state(B, Hkv, s_max, d, key=key, ragged=True)
+    for b, L in enumerate(L0s):
+        for t in range(L):
+            kk = jax.random.normal(
+                jax.random.fold_in(key, 1000 + 31 * b + t), (B, Hkv, 1, d))
+            vv = jax.random.normal(
+                jax.random.fold_in(key, 2000 + 31 * b + t), (B, Hkv, 1, d))
+            state = pol.update(state, kk, vv,
+                               active=jnp.arange(B) == b)
+    return state
+
+
+def _check_truncate_roundtrip(pol_name, paged, L0s, ms, k_spec, W, seed):
+    """Snapshot -> k_spec appends -> truncate to L0 + m must behave
+    byte-identically to a run that only ever appended the accepted m
+    tokens: one further update + attend compares the caches through the
+    read path (which sees every byte that can ever matter)."""
+    d = 16
+    pol = get_policy(pol_name, group=8, window=W)
+    state = _seeded_state(pol, pol_name, paged, L0s, W, d=d, seed=seed)
+    B, Hkv, Hq = len(L0s), 2, 4
+    key = jax.random.PRNGKey(seed + 7)
+    ks = [jax.random.normal(jax.random.fold_in(key, 31 + j),
+                            (B, Hkv, 1, d)) for j in range(k_spec)]
+    vs = [jax.random.normal(jax.random.fold_in(key, 61 + j),
+                            (B, Hkv, 1, d)) for j in range(k_spec)]
+
+    snap = pol.snapshot_rows(state)
+    spec = state
+    for j in range(k_spec):
+        spec = pol.update(spec, ks[j], vs[j])
+    m = jnp.asarray(ms, jnp.int32)
+    L0 = snap if not isinstance(snap, tuple) else snap[-1]
+    trunc = pol.truncate_rows(spec, (L0 + m).astype(jnp.int32), snap)
+
+    ref = state
+    for j in range(k_spec):
+        ref = pol.update(ref, ks[j], vs[j], active=m > j)
+
+    k_next = jax.random.normal(jax.random.fold_in(key, 777), (B, Hkv, 1, d))
+    v_next = jax.random.normal(jax.random.fold_in(key, 778), (B, Hkv, 1, d))
+    q_next = jax.random.normal(jax.random.fold_in(key, 779), (B, Hq, 1, d))
+    o_t = pol.attend(q_next, pol.update(trunc, k_next, v_next),
+                     backend=AttendBackend.GATHER)
+    o_r = pol.attend(q_next, pol.update(ref, k_next, v_next),
+                     backend=AttendBackend.GATHER)
+    np.testing.assert_array_equal(np.asarray(o_t, np.float32),
+                                  np.asarray(o_r, np.float32))
+
+
+TRUNC_GRID = [
+    # L0s, accepted m per row, k_spec, W
+    ([5, 8, 0], [2, 1, 0], 3, 4),
+    ([5, 3, 12], [4, 0, 3], 4, 4),       # rewind crosses a flush at 8
+    ([7, 15, 1], [1, 8, 5], 8, 8),       # full-window pass, W=8
+    ([0, 6], [1, 2], 2, 16),
+]
+
+
+@pytest.mark.parametrize("paged", [False, True], ids=["dense", "paged"])
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("case", range(len(TRUNC_GRID)))
+def test_grid_truncate_roundtrip(policy, paged, case):
+    L0s, ms, k_spec, W = TRUNC_GRID[case]
+    _check_truncate_roundtrip(policy, paged, L0s, ms, k_spec, W, seed=case)
+
+
+def test_grid_flush_boundary_rewind():
+    """The W-alignment invariant, isolated: appends push the int4
+    packed length past a flush boundary, the rewind pulls the length
+    back below it -- the flushed slab must become unobservable again
+    (residual ring restored from the snapshot, stale packed bytes
+    masked)."""
+    # L0 = 5, W = 4: packed_len 4 -> appends reach 9 (flush at 8) ->
+    # rewind to 6 (packed_len back to 4, slab at [4, 8) stale)
+    _check_truncate_roundtrip("int4-srft", False, [5], [1], 4, 4, seed=11)
+    _check_truncate_roundtrip("int4-srft", True, [5], [1], 4, 4, seed=11)
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(
+    data=st.data(),
+    W=st.sampled_from([4, 8]),
+    B=st.integers(min_value=1, max_value=3),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_property_truncate_roundtrip(data, W, B, seed):
+    """Random lengths/acceptance widths: rollback is exact for every
+    policy, any mix of rows, any split around flush boundaries."""
+    k_spec = data.draw(st.integers(min_value=1, max_value=W))
+    L0s = [data.draw(st.integers(min_value=0, max_value=3 * W))
+           for _ in range(B)]
+    ms = [data.draw(st.integers(min_value=0, max_value=k_spec))
+          for _ in range(B)]
+    for policy in POLICIES:
+        _check_truncate_roundtrip(policy, False, L0s, ms, k_spec, W,
+                                  seed=seed)
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(
+    data=st.data(),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_property_truncate_roundtrip_paged(data, seed):
+    W = 4
+    k_spec = data.draw(st.integers(min_value=1, max_value=W))
+    L0s = [data.draw(st.integers(min_value=0, max_value=3 * W))
+           for _ in range(2)]
+    ms = [data.draw(st.integers(min_value=0, max_value=k_spec))
+          for _ in range(2)]
+    for policy in POLICIES:
+        _check_truncate_roundtrip(policy, True, L0s, ms, k_spec, W,
+                                  seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# paged tail-page truncation (host-side structural rollback)
+# ---------------------------------------------------------------------------
+
+def _pd_of(state):
+    d = state.data
+    return d if isinstance(d, paged_mod.PagedData) else d.kv
+
+
+def _with_pd(state, pd):
+    from repro.core.cache_api import CacheState
+    d = state.data
+    if isinstance(d, paged_mod.PagedData):
+        return CacheState(state.policy, pd)
+    return CacheState(state.policy, d._replace(kv=pd))
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_paged_tail_page_fork(policy):
+    """``paged.truncate_pages``: dropping one row's tail pages must
+    decref/NULL exactly the fully-vacated ones and leave a COW sibling
+    sharing the prefix byte-identical."""
+    W, d, s_max = 4, 16, 32
+    pol = get_policy(policy, group=8, window=W)
+    state = _seeded_state(pol, policy, True, [12, 12], W, d=d, s_max=s_max,
+                          seed=5)
+    pd = _pd_of(state)
+    # fork: row 1 adopts row 0's first page (refcount 2), keeps its own
+    # tail pages -- the shape prefix reuse produces
+    ptab = np.asarray(pd.page_table)
+    rc = np.asarray(pd.pool.refcount)
+    shared_page = int(ptab[0, 0])
+    old_p1 = int(ptab[1, 0])
+    ptab2 = ptab.copy()
+    ptab2[1, 0] = shared_page
+    rc2 = rc.copy()
+    rc2[shared_page] += 1
+    rc2[old_p1] -= 1
+    pd = pd._replace(page_table=jnp.asarray(ptab2),
+                     pool=pd.pool._replace(refcount=jnp.asarray(rc2)))
+    state = _with_pd(state, pd)
+
+    Hq = 4
+    q = jax.random.normal(jax.random.PRNGKey(9), (2, Hq, 1, d))
+    before = np.asarray(pol.attend(q, state, backend=AttendBackend.GATHER))
+
+    # truncate row 0 from 12 tokens (3 pages) to 5 (2 pages)
+    new_pd = paged_mod.truncate_pages(_pd_of(state),
+                                      jnp.asarray([5, 12], jnp.int32))
+    state2 = _with_pd(state, new_pd)
+    rc3 = np.asarray(new_pd.pool.refcount)
+    ptab3 = np.asarray(new_pd.page_table)
+    # tail page of row 0 freed, first two kept; the shared page still
+    # held by row 1
+    assert ptab3[0, 2] == paged_mod.NULL_PAGE
+    assert ptab3[0, 0] == shared_page and rc3[shared_page] == 2
+    assert rc3[int(ptab[0, 2])] == rc[int(ptab[0, 2])] - 1
+    assert np.asarray(new_pd.length)[0] == 5
+
+    # the sibling's reads are untouched by the fork's truncation
+    after = np.asarray(pol.attend(q, state2, backend=AttendBackend.GATHER))
+    np.testing.assert_array_equal(before[1], after[1])
