@@ -10,7 +10,10 @@ an ephemeral port and drives the full request cycle a client would:
    (the SSE path is a view of the same engine stream, not a fork);
 4. scrape ``/healthz`` and ``/metrics`` and check the served request
    is visible in the counters;
-5. SIGINT the server and check it drains and exits 0.
+5. saturate the (``--admit-queue 1``) intake with a concurrent burst
+   and check the 429 carries a ``Retry-After`` header plus a
+   ``retry_after_s`` JSON field (ISSUE-8 backpressure contract);
+6. SIGINT the server and check it drains and exits 0.
 
 Everything is stdlib (urllib) -- CI's server-smoke job runs exactly
 this file.  Exit status is non-zero on any failed check.
@@ -22,6 +25,7 @@ import os
 import signal
 import subprocess
 import sys
+import threading
 import time
 import urllib.error
 import urllib.request
@@ -36,7 +40,9 @@ def _boot() -> tuple[subprocess.Popen, str]:
     proc = subprocess.Popen(
         [sys.executable, "-m", "repro.launch.serve", "--smoke", "--http",
          "--port", "0", "--max-batch", "2", "--prompt-len", "16",
-         "--new-tokens", "8", "--policy", "int4-srft"],
+         "--new-tokens", "8", "--policy", "int4-srft",
+         # one waiter max: a concurrent burst must 429 (checked below)
+         "--admit-queue", "1"],
         stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True,
         cwd=REPO, env=env,
     )
@@ -120,6 +126,45 @@ def main() -> None:
                 f"missing {marker!r} in /metrics:\n{metrics}"
             )
         print("[server_smoke] /healthz + /metrics OK")
+
+        # backpressure: with --admit-queue 1, a concurrent burst must
+        # bounce at least one request with 429 + Retry-After.  The
+        # window is one engine dispatch wide, so retry the burst a few
+        # times rather than trusting a single race.
+        rejected = None
+        deadline = time.monotonic() + 120
+        while rejected is None and time.monotonic() < deadline:
+            results = [None] * 6
+
+            def _worker(i):
+                try:
+                    with _post(url, {"prompt": "hello world",
+                                     "max_tokens": 8,
+                                     "stream": False}) as r:
+                        r.read()
+                except urllib.error.HTTPError as e:
+                    results[i] = (e.code, dict(e.headers), e.read())
+
+            threads = [threading.Thread(target=_worker, args=(i,))
+                       for i in range(len(results))]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            rejected = next((r for r in results if r), None)
+        assert rejected is not None, "burst never produced a 429"
+        code, headers, body = rejected
+        assert code == 429, f"burst rejection was {code}, wanted 429"
+        retry_after = headers.get("Retry-After")
+        assert retry_after is not None, (
+            f"429 without Retry-After header: {headers}"
+        )
+        assert int(retry_after) >= 1, f"Retry-After {retry_after!r} < 1"
+        payload = json.loads(body)
+        assert payload["retry_after_s"] == int(retry_after), payload
+        assert payload.get("retry") is True, payload
+        print(f"[server_smoke] 429 backpressure: "
+              f"Retry-After={retry_after}s")
 
         proc.send_signal(signal.SIGINT)
         out, _ = proc.communicate(timeout=120)

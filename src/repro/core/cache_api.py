@@ -68,6 +68,7 @@ from typing import Any, NamedTuple, Optional, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import kvcache, paged, quant
 from repro.core.kvcache import BF16KVCache, QuantKVCache
@@ -363,6 +364,33 @@ class KVCachePolicy(Protocol):
         behind at a flush boundary."""
         ...
 
+    def export_pages(self, state: CacheState, pages) -> tuple:
+        """Snapshot the named physical pages of a paged state to HOST
+        memory (the spill side of the offload tier, DESIGN.md §14).
+        ``pages`` is a host sequence of page ids; the result is one
+        numpy array per pool leaf, shaped ``(..., NP, H, page_size, c)``
+        with any leading layer axes preserved -- the exact resident
+        bytes (packed int4 codes + scales, int8 codes, or bf16 K/V),
+        no dequantization, no recompute.  A later
+        :meth:`import_pages` of these arrays must reproduce the bytes
+        bit-identically."""
+        ...
+
+    def import_pages(self, row: CacheState, payload: tuple, n_tokens
+                     ) -> CacheState:
+        """Seed a dense batch-1 ragged ``row`` from page bytes exported
+        by :meth:`export_pages` (the restore side of the offload tier,
+        DESIGN.md §14): the host-tier analogue of :meth:`adopt_prefix`,
+        with the pages' bytes supplied as ``(NP, H, page_size, c)``
+        device arrays instead of gathered from a resident pool.  Writes
+        positions ``[0, NP*page_size)`` of the row's seq-major leaves
+        and sets its length to ``n_tokens``; a subsequent
+        ``insert_row_paged`` then scatters those tiles into freshly
+        allocated pages byte-identically to the donor's.  Same
+        alignment contract as ``adopt_prefix`` (windowed policies:
+        ``n_tokens`` W-aligned, residual ring stays zero)."""
+        ...
+
     def raw_kv_view(self, state: CacheState) -> tuple[jax.Array, jax.Array]:
         """Best-available RAW-space (pre-rotation, post-RoPE) dense
         ``(B, Hkv, S_max, d)`` K/V views of a dense ragged state, valid
@@ -461,6 +489,24 @@ def _leaf_bytes(*leaves) -> int:
     return sum(x.size * jnp.dtype(x.dtype).itemsize for x in leaves)
 
 
+def _export_pool_pages(pd, pages) -> tuple:
+    """Host snapshot of the named pages from every pool leaf (spill side
+    of the offload tier, DESIGN.md §14): gather along the page axis
+    (axis -4 -- leaves are ``(..., n_pages, H, ps, c)`` with any layer
+    axes leading) and pull to numpy.  A host-side call, never jitted:
+    it runs at retire/preempt time, where the engine already blocks on
+    the device."""
+    idx = jnp.asarray(np.asarray(list(pages), np.int32))
+    return tuple(np.asarray(jnp.take(p, idx, axis=-4)) for p in pd.pools)
+
+
+def _seed_dense_leaf(buf: jax.Array, tiles: jax.Array) -> jax.Array:
+    """Write ``(NP, H, ps, c)`` page tiles at positions [0, NP*ps) of a
+    dense batch-1 seq-major leaf (restore side of the offload tier)."""
+    dense = paged.pages_to_dense(tiles).astype(buf.dtype)
+    return jax.lax.dynamic_update_slice(buf, dense, (0, 0, 0, 0))
+
+
 def _insert_row_leaf(batched: jax.Array, row: jax.Array, slot) -> jax.Array:
     """Write a batch-1 leaf into row ``slot`` of a capacity-B leaf.
 
@@ -549,6 +595,17 @@ class BF16Policy:
         d = row.data
         return CacheState(self, BF16KVCache(
             k=kview.astype(d.k.dtype), v=vview.astype(d.v.dtype),
+            length=jnp.full_like(d.length, n_tokens),
+        ))
+
+    def export_pages(self, state, pages):
+        return _export_pool_pages(state.data, pages)
+
+    def import_pages(self, row, payload, n_tokens):
+        d = row.data
+        return CacheState(self, BF16KVCache(
+            k=_seed_dense_leaf(d.k, payload[0]),
+            v=_seed_dense_leaf(d.v, payload[1]),
             length=jnp.full_like(d.length, n_tokens),
         ))
 
@@ -795,6 +852,24 @@ class Int4SRFTPolicy:
             k_scales=ks.astype(d.kv.k_scales.dtype),
             v_packed=vp.astype(d.kv.v_packed.dtype),
             v_scales=vs.astype(d.kv.v_scales.dtype),
+            length=jnp.full_like(d.kv.length, n_tokens),
+        )
+        return CacheState(self, d._replace(kv=kv))
+
+    def export_pages(self, state, pages):
+        return _export_pool_pages(state.data.kv, pages)
+
+    def import_pages(self, row, payload, n_tokens):
+        # page-aligned n_tokens (engine contract, and page_size % W == 0)
+        # keeps the residual ring in its zero init state -- the same
+        # flush-boundary argument as adopt_prefix
+        d = row.data
+        kp, ks, vp, vs = payload
+        kv = d.kv._replace(
+            k_packed=_seed_dense_leaf(d.kv.k_packed, kp),
+            k_scales=_seed_dense_leaf(d.kv.k_scales, ks),
+            v_packed=_seed_dense_leaf(d.kv.v_packed, vp),
+            v_scales=_seed_dense_leaf(d.kv.v_scales, vs),
             length=jnp.full_like(d.kv.length, n_tokens),
         )
         return CacheState(self, d._replace(kv=kv))
@@ -1125,6 +1200,20 @@ class Int8PerTokenPolicy:
             k_scales=ks.astype(d.k_scales.dtype),
             v_codes=vc.astype(d.v_codes.dtype),
             v_scales=vs.astype(d.v_scales.dtype),
+            length=jnp.full_like(d.length, n_tokens),
+        ))
+
+    def export_pages(self, state, pages):
+        return _export_pool_pages(state.data, pages)
+
+    def import_pages(self, row, payload, n_tokens):
+        d = row.data
+        kc, ks, vc, vs = payload
+        return CacheState(self, Int8State(
+            k_codes=_seed_dense_leaf(d.k_codes, kc),
+            k_scales=_seed_dense_leaf(d.k_scales, ks),
+            v_codes=_seed_dense_leaf(d.v_codes, vc),
+            v_scales=_seed_dense_leaf(d.v_scales, vs),
             length=jnp.full_like(d.length, n_tokens),
         ))
 

@@ -61,6 +61,7 @@ __all__ = [
     "init_paged",
     "gather_view",
     "read_pages",
+    "pages_to_dense",
     "append_token",
     "append_chunk",
     "write_slab",
@@ -264,10 +265,22 @@ def read_pages(pd: PagedData, pages: jax.Array) -> tuple:
 
     def g(pool_leaf):
         t = jnp.take(pool_leaf, pages, axis=0)  # (NP, H, ps, c)
-        NP, H, ps, c = t.shape
-        return t.transpose(1, 0, 2, 3).reshape(1, H, NP * ps, c)
+        return pages_to_dense(t)
 
     return tuple(g(p) for p in pd.pools)
+
+
+def pages_to_dense(tiles: jax.Array) -> jax.Array:
+    """Lay ``(NP, H, page_size, c)`` page tiles out as a dense batch-1
+    ``(1, H, NP*page_size, c)`` seq-major leaf -- the layout
+    :func:`read_pages` gathers and :func:`insert_row`'s scatter inverts.
+    The host-RAM offload tier (DESIGN.md §14) rides this both ways:
+    ``policy.export_pages`` snapshots page tiles to host in this tile
+    order, and ``policy.import_pages`` replays them into a dense staging
+    row -- so a later ``insert_row`` writes byte-identical tiles into
+    freshly allocated pages."""
+    NP, H, ps, c = tiles.shape
+    return tiles.transpose(1, 0, 2, 3).reshape(1, H, NP * ps, c)
 
 
 # ---------------------------------------------------------------------------

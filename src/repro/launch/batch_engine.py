@@ -98,6 +98,7 @@ import numpy as np
 from repro.core.cache_api import AttendBackend
 from repro.core.paged import NULL_PAGE, PagedData
 from repro.launch.engine import GREEDY, Sampler, draft_tokens
+from repro.launch.prefix_store import PrefixStore
 
 __all__ = ["Request", "Completion", "BatchEngine"]
 
@@ -175,6 +176,8 @@ class BatchEngine:
                  prefill_chunk: Optional[int] = None,
                  prefill_budget: Optional[int] = None,
                  prefix_reuse: bool = True,
+                 offload_bytes: Optional[int] = None,
+                 offload_dir: Optional[str] = None,
                  spec_k: Optional[int] = None):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
@@ -326,6 +329,23 @@ class BatchEngine:
             self.n_drafted = 0   # draft positions scored (excl. bonus)
             self.n_accepted = 0  # draft positions accepted (excl. bonus)
 
+        # host-RAM offload tier (DESIGN.md §14): parks evicted prefix
+        # pages' bytes behind the device index.  Only meaningful for a
+        # paged pool -- dense engines have no prefix index to back.
+        self.prefix_store: Optional[PrefixStore] = None
+        if offload_bytes is not None and not paged:
+            raise ValueError(
+                "offload_bytes requires paged=True: the host tier stores "
+                "evicted pool pages behind the prefix index (DESIGN.md §14)"
+            )
+        if offload_bytes is not None and prefill_chunk is None:
+            raise ValueError(
+                "offload_bytes requires chunked admission (prefill_chunk): "
+                "a host-tier restore seeds the staging row and resumes "
+                "prefill after the restored tokens -- monolithic admission "
+                "has no resume path (DESIGN.md §14)"
+            )
+
         if paged:
             # host-side pool bookkeeping: a refcount mirror drives
             # admission control, a prefix index maps page-aligned token
@@ -349,6 +369,16 @@ class BatchEngine:
             self._orig: dict[int, tuple[int, int]] = {}  # rid -> (plen, max_new)
             self.n_preemptions = 0
             self.peak_pages = 0
+            if offload_bytes is not None:
+                self.prefix_store = PrefixStore(offload_bytes, offload_dir)
+            # tier traffic: device COW hit / host restore / full prefill,
+            # counted once per chunked admission (DESIGN.md §14)
+            self.n_spilled_pages = 0
+            self.n_restored_pages = 0
+            self.n_restored_tokens = 0
+            self.n_reuse_hits_device = 0
+            self.n_reuse_hits_host = 0
+            self.n_reuse_misses = 0
 
         # jit specializes per prompt-length shape on its own; one wrapper
         self._prefill_fn = jax.jit(
@@ -376,6 +406,9 @@ class BatchEngine:
         )
         self._seed_fn = jax.jit(
             self._seed_impl, donate_argnums=(0,) if donate else ()
+        )
+        self._import_fn = jax.jit(
+            self._import_impl, donate_argnums=(0,) if donate else ()
         )
         self._raw_view_fn = jax.jit(self._raw_view_impl,
                                     static_argnums=(1, 2))
@@ -431,6 +464,19 @@ class BatchEngine:
         pol = self.policy
         attn = jax.vmap(pol.adopt_prefix, in_axes=(0, 0, None, None))(
             row["attn"], batched["attn"], pages, n_tok
+        )
+        return dict(row, attn=attn, pos=jnp.full_like(row["pos"], n_tok))
+
+    def _import_impl(self, row, payload, n_tok):
+        """Host-tier restore seed (DESIGN.md §14): write exported page
+        tiles into the staging row (vmapped over layers) and set its
+        length -- chunked prefill then resumes AFTER the restored
+        tokens, exactly like a device-tier adopt.  The unchanged COW
+        insert plan later scatters these exact bytes into fresh pool
+        pages, so the restored pages are bit-identical to the donor's."""
+        pol = self.policy
+        attn = jax.vmap(pol.import_pages, in_axes=(0, 0, None))(
+            row["attn"], payload, n_tok
         )
         return dict(row, attn=attn, pos=jnp.full_like(row["pos"], n_tok))
 
@@ -550,14 +596,54 @@ class BatchEngine:
         total = self._pages_needed(prompt.shape[-1], req.max_new_tokens)
         shared: list[int] = []
         for i in range(prompt.shape[-1] // ps):
-            page = self._prefix_pages.get(prompt[:(i + 1) * ps].tobytes())
-            if page is None or self._refcount_host[page] == 0:
+            key = prompt[:(i + 1) * ps].tobytes()
+            page = self._prefix_pages.get(key)
+            if page is None or self._refcount_host[page] == 0 \
+                    or not self._page_backed(page, i, key):
                 break
             shared.append(page)
         n_new = total - len(shared)
         if n_new > int((self._refcount_host == 0).sum()):
             return None
         return shared, n_new
+
+    def _page_backed(self, page: int, idx: int, key: bytes) -> bool:
+        """True iff some LIVE slot's page table maps ``page`` at entry
+        ``idx`` and that slot's prompt spells the key's tokens -- the
+        ground truth a prefix-index hit must agree with.  Free-time
+        pruning (:meth:`_release_slots`) keeps stale entries out of the
+        index; this guard makes a stale COW hit *structurally*
+        impossible even if a page is freed and reallocated to different
+        content between a free and the next index prune (the
+        free->realloc->plan window, DESIGN.md §14)."""
+        end = (idx + 1) * self.page_size
+        for s in range(self.capacity):
+            req = self._slot_req[s]
+            if req is None or int(self._ptab_host[s, idx]) != page:
+                continue
+            p = np.asarray(req.prompt, np.int32)
+            if p.shape[-1] >= end and p[:end].tobytes() == key:
+                return True
+        return False
+
+    def _donor_live(self, toks: np.ndarray, pages: np.ndarray,
+                    n_tokens: int) -> bool:
+        """Token-level analogue of :meth:`_page_backed`: a donor entry
+        is only usable while some live slot still maps exactly these
+        pages for exactly these tokens."""
+        npg = -(-n_tokens // self.page_size)
+        want = pages[:npg]
+        for s in range(self.capacity):
+            req = self._slot_req[s]
+            if req is None:
+                continue
+            if not np.array_equal(self._ptab_host[s, :npg], want):
+                continue
+            p = np.asarray(req.prompt, np.int32)
+            if p.shape[-1] >= n_tokens \
+                    and np.array_equal(p[:n_tokens], toks[:n_tokens]):
+                return True
+        return False
 
     def _register_prefix(self, req: Request, slot: int) -> None:
         """Index this row's full prompt pages for future COW admissions.
@@ -577,6 +663,58 @@ class BatchEngine:
         self._prefix_seqs[prompt.tobytes()] = (
             prompt.copy(), row[:n_pp].copy()
         )
+
+    def _release_slots(self, slots) -> None:
+        """Free-time hook, called BEFORE the reset that drops these
+        slots' page references, while the page bytes are still resident.
+
+        Two jobs (DESIGN.md §14): (1) spill registered prefix pages
+        about to hit refcount zero into the host store -- their exported
+        bytes restore bit-identically later; (2) prune every prefix
+        index entry those dying pages back.  Free-time pruning closes
+        the stale-index window: a freed page can be reallocated with
+        different content before the next ``_sync_pool``, whose
+        refcount==0 sweep cannot see a page that died and was reborn in
+        between.  Page tables are fixed at admission (pages cover
+        prompt + max_new up front), so the host mirrors are current here
+        even though the last device sync predates recent decode steps."""
+        if not self.paged:
+            return
+        slots = list(np.atleast_1d(np.asarray(slots, np.int64)))
+        if not slots:
+            return
+        drops = np.zeros((self.n_pages,), np.int32)
+        for s in slots:
+            pages = self._ptab_host[int(s)]
+            np.add.at(drops, pages[pages != NULL_PAGE], 1)
+        rc = self._refcount_host
+        dying = (rc > 0) & (rc - drops <= 0)
+        dying[NULL_PAGE] = False
+        if not dying.any():
+            return
+        if self.prefix_store is not None:
+            spill = [(k, p) for k, p in self._prefix_pages.items()
+                     if dying[p]]
+            fresh = [(k, p) for k, p in spill
+                     if k not in self.prefix_store]
+            if fresh:
+                leaves = self.policy.export_pages(
+                    self.cache["attn"], [p for _, p in fresh]
+                )
+                for j, (k, _) in enumerate(fresh):
+                    self.prefix_store.put(
+                        k, tuple(leaf[:, j] for leaf in leaves)
+                    )
+                self.n_spilled_pages += len(fresh)
+            for k, _ in spill:
+                # content is deterministic in the key's tokens (§10), so
+                # a re-spill of a present key is just a recency touch
+                self.prefix_store.touch(k)
+        for k in [k for k, p in self._prefix_pages.items() if dying[p]]:
+            del self._prefix_pages[k]
+        for k in [k for k, (_, pgs) in self._prefix_seqs.items()
+                  if dying[pgs].any()]:
+            del self._prefix_seqs[k]
 
     def _preempt_one(self, protect_from_seq: int) -> bool:
         """Preempt the least-recently-admitted live slot to the FRONT of
@@ -618,6 +756,7 @@ class BatchEngine:
         self._slot_toks[slot] = []
         self.active[slot] = False
         self.budget[slot] = 0
+        self._release_slots([slot])
         mask = np.zeros((self.capacity,), bool)
         mask[slot] = True
         self.cache = self._reset_fn(self.cache, jnp.asarray(mask))
@@ -645,7 +784,34 @@ class BatchEngine:
             else 0
         pool_bytes = self.policy.nbytes(self.cache["attn"])
         page_bytes = pool_bytes / self.n_pages
+        # host-side footprint (DESIGN.md §14): the device accounting
+        # above is blind to the mirrors, the prefix-index keys, and the
+        # offload tier -- all host RAM the pool spends to run
+        key_bytes = sum(len(k) for k in self._prefix_pages)
+        seq_bytes = sum(len(k) + t.nbytes + pg.nbytes
+                        for k, (t, pg) in self._prefix_seqs.items())
+        host_bytes = {
+            "refcount_mirror": int(rc.nbytes),
+            "page_table_mirror": int(self._ptab_host.nbytes),
+            "prefix_index": int(key_bytes + seq_bytes),
+            "offload_store": int(self.prefix_store.nbytes)
+            if self.prefix_store is not None else 0,
+        }
+        host_bytes["total"] = sum(host_bytes.values())
+        offload = {
+            "enabled": self.prefix_store is not None,
+            "spilled_pages": self.n_spilled_pages,
+            "restored_pages": self.n_restored_pages,
+            "restored_tokens": self.n_restored_tokens,
+            "hits_device": self.n_reuse_hits_device,
+            "hits_host": self.n_reuse_hits_host,
+            "misses": self.n_reuse_misses,
+        }
+        if self.prefix_store is not None:
+            offload["store"] = self.prefix_store.stats()
         return {
+            "host_bytes": host_bytes,
+            "offload": offload,
             "n_pages": usable,
             "page_size": self.page_size,
             "pages_used": used,
@@ -903,6 +1069,7 @@ class BatchEngine:
         retire): the admission loop may re-admit this very slot within
         the same quantum, and a deferred reset would wipe the new
         tenant's row (and, paged, free its pages)."""
+        self._release_slots([slot])
         mask = np.zeros((self.capacity,), bool)
         mask[slot] = True
         self.cache = self._reset_fn(self.cache, jnp.asarray(mask))
@@ -965,9 +1132,10 @@ class BatchEngine:
                 continue
             neq = np.nonzero(toks[:n] != prompt[:n])[0]
             t = int(neq[0]) if neq.size else n
-            if t > best_t:
+            t = (t // self._align) * self._align
+            if t > best_t and t >= self.page_size \
+                    and self._donor_live(toks, pages, t):
                 best_t, best_pages = t, pages
-        best_t = (best_t // self._align) * self._align
         if best_t < self.page_size:
             # below one page nothing can be COW-shared and the compute
             # skip is noise; incidental 1-2 token matches between
@@ -975,6 +1143,27 @@ class BatchEngine:
             # admissions needlessly read dequantized prefixes
             return 0, None
         return best_t, best_pages
+
+    def _find_host_prefix(self, prompt: np.ndarray
+                          ) -> tuple[int, Optional[list]]:
+        """Deepest contiguous page-aligned prefix of ``prompt`` present
+        in the host store (DESIGN.md §14).  Returns ``(n_tokens,
+        page_payloads)`` in page order, ``(0, None)`` on a miss.  The
+        final prompt token is always computed (its logits draw the
+        admission sample), so at most ``(len - 1) // page_size`` pages
+        are consulted -- the same cap the device-tier plan obeys."""
+        if self.prefix_store is None:
+            return 0, None
+        ps = self.page_size
+        payloads: list[tuple] = []
+        for i in range((int(prompt.shape[-1]) - 1) // ps):
+            pl = self.prefix_store.get(prompt[:(i + 1) * ps].tobytes())
+            if pl is None:
+                break
+            payloads.append(pl)
+        if not payloads:
+            return 0, None
+        return len(payloads) * ps, payloads
 
     def _start_pending(self, req: Request, slot: int) -> None:
         """Open a chunked admission: build the batch-1 staging row and
@@ -995,12 +1184,32 @@ class BatchEngine:
         shared_t = 0
         if self.paged and self.prefix_reuse and req.resume_tok is None:
             shared_t, donor_pages = self._find_donor(prompt)
-            if shared_t:
+            host_t, host_payloads = self._find_host_prefix(prompt)
+            if host_t > shared_t:
+                # host-tier restore (DESIGN.md §14): device_put the
+                # exported page tiles and seed the staging row -- a
+                # memcpy, not a recompute.  The deeper tier wins; a
+                # device COW hit at equal depth is preferred (no copy).
+                payload = tuple(
+                    jnp.asarray(np.stack([pl[j] for pl in host_payloads],
+                                         axis=1))
+                    for j in range(len(host_payloads[0]))
+                )
+                row = self._import_fn(row, payload,
+                                      jnp.asarray(host_t, jnp.int32))
+                shared_t = host_t
+                self.n_restored_pages += len(host_payloads)
+                self.n_restored_tokens += host_t
+                self.n_reuse_hits_host += 1
+            elif shared_t:
                 pages = np.full((self.max_pages,), NULL_PAGE, np.int32)
                 npg = -(-shared_t // self.page_size)
                 pages[:npg] = donor_pages[:npg]
                 row = self._seed_fn(row, self.cache, jnp.asarray(pages),
                                     jnp.asarray(shared_t, jnp.int32))
+                self.n_reuse_hits_device += 1
+            else:
+                self.n_reuse_misses += 1
         cfg = self.model.cfg
         if shared_t:
             raw_k, raw_v = self._raw_view_fn(row, shared_t, n_total)
@@ -1121,6 +1330,10 @@ class BatchEngine:
                 )
             self.active[:] = False
             self.budget[:] = 0
+            # drain spills every registered resident prefix to the host
+            # tier (if configured) before the pool-wide free, so a
+            # post-drain engine sharing the store restores warm
+            self._release_slots(list(range(self.capacity)))
             self.cache = self._reset_fn(
                 self.cache, jnp.asarray(np.ones((self.capacity,), bool))
             )
@@ -1373,6 +1586,7 @@ class BatchEngine:
         if newly_retired.any():  # free the rows: lengths back to zero
             # (paged: one page-table reference dropped per mapped page;
             # COW prefix pages survive while other rows hold them)
+            self._release_slots(np.nonzero(newly_retired)[0])
             self.cache = self._reset_fn(self.cache,
                                         jnp.asarray(newly_retired))
             if self.paged:

@@ -1,0 +1,259 @@
+"""Host-RAM (optionally disk-backed) LRU store of evicted prefix pages.
+
+The paged pool's COW prefix index (DESIGN.md §10-11) only matches
+prompts whose pages are still *resident*: when the last row referencing
+a registered prefix retires or is preempted, the pages are freed and the
+next request with that prompt re-prefills from scratch.  This module is
+the tier behind that index (DESIGN.md §14): at free time the engine
+exports the dying pages' bytes (``policy.export_pages`` -- packed int4
+codes + scales, int8 codes, or bf16 K/V, exactly as resident) and parks
+them here; a future admission that misses the device index restores
+them with ``policy.import_pages`` -- a memcpy, not a recompute -- and
+the restored bytes are bit-identical to the donor's resident pages.
+
+Keys are the same page-aligned token-prefix bytes the device index
+uses (``prompt[:(i+1)*page_size].tobytes()``), one entry per page, so a
+prefix of N pages restores as N contiguous key hits from the start.
+Because page content is a deterministic function of the tokens (the §10
+recompute guarantee), re-spilling an already-stored key is a no-op that
+just refreshes recency.
+
+Capacity is a byte budget over the RAM tier (int4 pages are ~3.2x
+smaller than bf16 pages, so the same budget holds ~3.2x the prefix
+tokens -- the paper's compression win becomes tier *depth* for free).
+On overflow the LRU tail is spilled to ``spill_dir`` when one is
+configured (a third tier; loaded entries promote back to RAM) or
+dropped.  Disk entries are written as ``.npz`` files of raw byte views
+plus dtype/shape metadata, so quantized dtypes (ml_dtypes bfloat16)
+round-trip bit-exactly through numpy's own format.
+"""
+from __future__ import annotations
+
+import hashlib
+import io
+import json
+import os
+import threading
+from collections import OrderedDict
+from typing import Optional
+
+import numpy as np
+
+__all__ = ["PrefixStore"]
+
+
+def _payload_nbytes(payload: tuple) -> int:
+    return int(sum(a.nbytes for a in payload))
+
+
+def _resolve_dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+class _RamEntry:
+    __slots__ = ("payload", "nbytes")
+
+    def __init__(self, payload: tuple):
+        self.payload = payload
+        self.nbytes = _payload_nbytes(payload)
+
+
+class _DiskEntry:
+    __slots__ = ("path", "nbytes")
+
+    def __init__(self, path: str, nbytes: int):
+        self.path = path
+        self.nbytes = nbytes
+
+
+class PrefixStore:
+    """Byte-bounded LRU over exported page payloads.
+
+    ``payload`` is what ``policy.export_pages`` hands back for ONE page:
+    a tuple of numpy arrays (one per pool leaf, layer axes leading).
+    Thread-safe: the engine writes under its own lock while serving
+    threads scrape :meth:`stats` for ``/metrics``.
+    """
+
+    def __init__(self, capacity_bytes: int,
+                 spill_dir: Optional[str] = None):
+        if capacity_bytes < 0:
+            raise ValueError(
+                f"capacity_bytes must be >= 0, got {capacity_bytes}"
+            )
+        self.capacity_bytes = int(capacity_bytes)
+        self.spill_dir = spill_dir
+        if spill_dir is not None:
+            os.makedirs(spill_dir, exist_ok=True)
+        self._lock = threading.Lock()
+        self._entries: "OrderedDict[bytes, _RamEntry | _DiskEntry]" \
+            = OrderedDict()
+        self.ram_bytes = 0
+        self.disk_bytes = 0
+        # tier traffic counters (surfaced in pool stats / /metrics)
+        self.hits = 0
+        self.misses = 0
+        self.puts = 0
+        self.evictions = 0     # dropped outright (no disk tier)
+        self.disk_spills = 0
+        self.disk_loads = 0
+
+    # ------------------------------------------------------------- disk tier
+    def _disk_path(self, key: bytes) -> str:
+        return os.path.join(self.spill_dir,
+                            hashlib.sha1(key).hexdigest() + ".npz")
+
+    def _disk_write(self, key: bytes, payload: tuple) -> _DiskEntry:
+        arrs, meta = {}, []
+        for i, a in enumerate(payload):
+            a = np.ascontiguousarray(a)
+            arrs[f"leaf{i}"] = a.reshape(-1).view(np.uint8)
+            meta.append({"dtype": a.dtype.name, "shape": list(a.shape)})
+        arrs["meta"] = np.frombuffer(
+            json.dumps(meta).encode(), np.uint8
+        ).copy()
+        path = self._disk_path(key)
+        buf = io.BytesIO()
+        np.savez(buf, **arrs)
+        with open(path, "wb") as f:
+            f.write(buf.getvalue())
+        return _DiskEntry(path, _payload_nbytes(payload))
+
+    def _disk_read(self, ent: _DiskEntry) -> Optional[tuple]:
+        try:
+            with np.load(ent.path) as z:
+                meta = json.loads(bytes(z["meta"]).decode())
+                out = []
+                for i, m in enumerate(meta):
+                    raw = z[f"leaf{i}"]
+                    out.append(
+                        raw.view(_resolve_dtype(m["dtype"]))
+                        .reshape(m["shape"])
+                    )
+                return tuple(out)
+        except (OSError, KeyError, ValueError):
+            return None  # vanished/corrupt spill file: treat as a miss
+
+    def _disk_drop(self, ent: _DiskEntry) -> None:
+        try:
+            os.remove(ent.path)
+        except OSError:
+            pass
+
+    # -------------------------------------------------------------- RAM tier
+    def _evict_to_cap(self) -> None:
+        """Push the LRU tail out of RAM until the byte budget holds.
+        Disk-tier entries do not count against the RAM budget and keep
+        their LRU position (a later RAM insert never re-evicts them)."""
+        while self.ram_bytes > self.capacity_bytes:
+            victim_key = next(
+                (k for k, e in self._entries.items()
+                 if isinstance(e, _RamEntry)), None,
+            )
+            if victim_key is None:
+                break
+            ent = self._entries.pop(victim_key)
+            self.ram_bytes -= ent.nbytes
+            if self.spill_dir is not None:
+                dent = self._disk_write(victim_key, ent.payload)
+                self._entries[victim_key] = dent
+                self._entries.move_to_end(victim_key, last=False)
+                self.disk_bytes += dent.nbytes
+                self.disk_spills += 1
+            else:
+                self.evictions += 1
+
+    # --------------------------------------------------------------- surface
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def __contains__(self, key: bytes) -> bool:
+        with self._lock:
+            return key in self._entries
+
+    def touch(self, key: bytes) -> None:
+        """Refresh recency without reading (re-spill of a present key)."""
+        with self._lock:
+            if key in self._entries:
+                self._entries.move_to_end(key)
+
+    def put(self, key: bytes, payload: tuple) -> None:
+        """Insert one page's exported bytes.  Present keys only refresh
+        recency: page content is deterministic in the key's tokens, so
+        the stored bytes cannot differ."""
+        with self._lock:
+            if key in self._entries:
+                self._entries.move_to_end(key)
+                return
+            ent = _RamEntry(tuple(np.ascontiguousarray(a)
+                                  for a in payload))
+            self.puts += 1
+            if ent.nbytes > self.capacity_bytes:
+                # a single page over budget skips RAM entirely
+                if self.spill_dir is not None:
+                    dent = self._disk_write(key, ent.payload)
+                    self._entries[key] = dent
+                    self.disk_bytes += dent.nbytes
+                    self.disk_spills += 1
+                else:
+                    self.evictions += 1
+                return
+            self._entries[key] = ent
+            self.ram_bytes += ent.nbytes
+            self._evict_to_cap()
+
+    def get(self, key: bytes) -> Optional[tuple]:
+        """Look one page up; a disk-tier hit loads and promotes the
+        entry back into RAM (evicting colder RAM entries if needed)."""
+        with self._lock:
+            ent = self._entries.get(key)
+            if ent is None:
+                self.misses += 1
+                return None
+            if isinstance(ent, _DiskEntry):
+                payload = self._disk_read(ent)
+                self._entries.pop(key)
+                self.disk_bytes -= ent.nbytes
+                self._disk_drop(ent)
+                if payload is None:
+                    self.misses += 1
+                    return None
+                self.disk_loads += 1
+                rent = _RamEntry(payload)
+                if rent.nbytes <= self.capacity_bytes:
+                    self._entries[key] = rent
+                    self.ram_bytes += rent.nbytes
+                    self._evict_to_cap()
+                self.hits += 1
+                return payload
+            self._entries.move_to_end(key)
+            self.hits += 1
+            return ent.payload
+
+    @property
+    def nbytes(self) -> int:
+        return self.ram_bytes + self.disk_bytes
+
+    def stats(self) -> dict:
+        with self._lock:
+            n_disk = sum(1 for e in self._entries.values()
+                         if isinstance(e, _DiskEntry))
+            return {
+                "capacity_bytes": self.capacity_bytes,
+                "ram_bytes": self.ram_bytes,
+                "disk_bytes": self.disk_bytes,
+                "pages_ram": len(self._entries) - n_disk,
+                "pages_disk": n_disk,
+                "hits": self.hits,
+                "misses": self.misses,
+                "puts": self.puts,
+                "evictions": self.evictions,
+                "disk_spills": self.disk_spills,
+                "disk_loads": self.disk_loads,
+            }

@@ -128,6 +128,17 @@ def main():
                     help="physical pages in the pool (default: the dense "
                          "slot footprint; smaller values oversubscribe "
                          "and exercise LRU preemption)")
+    ap.add_argument("--offload-bytes", type=int, default=None,
+                    help="host-RAM budget (bytes) for the prefix-page "
+                         "offload tier (DESIGN.md §14): pages backing "
+                         "registered prefixes are spilled here at "
+                         "free time and restored as a memcpy on the "
+                         "next hit instead of re-prefilling "
+                         "(requires --paged + --prefill-chunk)")
+    ap.add_argument("--offload-dir", default=None,
+                    help="optional disk spill directory behind the "
+                         "host tier: RAM-evicted prefix pages land "
+                         "here and promote back on a hit")
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="chunked admission prefill (DESIGN.md §11): "
                          "split each prompt into N-token chunks "
@@ -241,11 +252,15 @@ def main():
         paged=args.paged, page_size=args.page_size, n_pages=args.pool_pages,
         prefill_chunk=args.prefill_chunk,
         prefill_budget=args.prefill_budget,
+        offload_bytes=args.offload_bytes, offload_dir=args.offload_dir,
         spec_k=args.spec_k,
     )
     pname = policy.name if policy is not None else "-"
+    offload = (f", host offload {args.offload_bytes / 2**20:.0f} MiB"
+               + (f" (+disk {args.offload_dir})" if args.offload_dir else "")
+               if args.offload_bytes else "")
     layout = (f"paged pool: {engine.n_pages - 1} pages x "
-              f"{engine.page_size} tok, COW prefix sharing"
+              f"{engine.page_size} tok, COW prefix sharing{offload}"
               if args.paged else "ragged slot cache")
     admission = (f"chunked prefill: {args.prefill_chunk} tok/chunk, "
                  f"{engine.prefill_budget} tok/quantum"
@@ -409,6 +424,23 @@ def _cache_report(policy, state, *, engine=None, indent="  ") -> dict:
               f"live of {stats['pool_bytes']/1e3:.1f} KB pool "
               f"(dense slot equivalent {stats['dense_equiv_bytes']/1e3:.1f}"
               f" KB)")
+        hb = stats["host_bytes"]
+        mirrors = hb["refcount_mirror"] + hb["page_table_mirror"]
+        print(f"{indent}host bytes: {hb['total']/1e3:.1f} KB "
+              f"(mirrors {mirrors/1e3:.1f} KB, "
+              f"prefix index {hb['prefix_index']/1e3:.1f} KB, "
+              f"offload store {hb['offload_store']/1e3:.1f} KB)")
+        off = stats["offload"]
+        if off["enabled"]:
+            st = off["store"]
+            print(f"{indent}offload tier (DESIGN.md §14): "
+                  f"{off['spilled_pages']} pages spilled, "
+                  f"{off['restored_pages']} restored "
+                  f"({off['restored_tokens']} tokens); hits "
+                  f"device={off['hits_device']} host={off['hits_host']} "
+                  f"miss={off['misses']}; store {st['ram_bytes']/1e3:.1f} "
+                  f"KB RAM + {st['disk_bytes']/1e3:.1f} KB disk "
+                  f"of {st['capacity_bytes']/1e3:.1f} KB")
     return data
 
 

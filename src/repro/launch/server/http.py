@@ -46,11 +46,13 @@ class _Handler(BaseHTTPRequestHandler):
         if self.server.verbose:
             super().log_message(fmt, *args)
 
-    def _json(self, code: int, obj) -> None:
+    def _json(self, code: int, obj, headers=None) -> None:
         body = json.dumps(obj).encode()
         self.send_response(code)
         self.send_header("Content-Type", "application/json")
         self.send_header("Content-Length", str(len(body)))
+        for k, v in (headers or {}).items():
+            self.send_header(k, v)
         self.end_headers()
         self.wfile.write(body)
 
@@ -94,7 +96,13 @@ class _Handler(BaseHTTPRequestHandler):
         try:
             stream = self.server.pipeline.submit(req)
         except Backpressure as e:
-            self._json(429, {"error": str(e), "retry": True})
+            # Retry-After makes 429 actionable: the pipeline derives the
+            # hold-off from its own queue depth at rejection time, so
+            # well-behaved clients back off proportionally to the actual
+            # backlog instead of hammering a full queue
+            self._json(429, {"error": str(e), "retry": True,
+                             "retry_after_s": e.retry_after},
+                       headers={"Retry-After": str(e.retry_after)})
             return
         except ValueError as e:  # engine-side validation (s_max etc.)
             self._json(400, {"error": str(e)})

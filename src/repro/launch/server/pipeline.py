@@ -41,6 +41,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import math
 import queue
 import threading
 import time
@@ -56,7 +57,14 @@ __all__ = ["Backpressure", "StreamEvent", "TokenFanout",
 
 class Backpressure(RuntimeError):
     """Intake rejected: admission queue full or server draining.  The
-    HTTP layer maps this to 429; nothing engine-side was consumed."""
+    HTTP layer maps this to 429 with a ``Retry-After`` of
+    ``retry_after`` seconds (integer, >= 1 -- derived from queue depth
+    and the admission hold-off at rejection time); nothing engine-side
+    was consumed."""
+
+    def __init__(self, msg: str, retry_after: int = 1):
+        super().__init__(msg)
+        self.retry_after = max(int(retry_after), 1)
 
 
 @dataclasses.dataclass
@@ -312,7 +320,8 @@ class ServingPipeline:
         stream is touched (a 429'd client changes nothing for anyone
         else)."""
         if self._closing:
-            raise Backpressure("server is draining")
+            raise Backpressure("server is draining",
+                               retry_after=self._retry_after())
         # validate NOW (raises ValueError -> HTTP 400): a bad request
         # must bounce at intake, not blow up the admission thread later
         self.engine._validate(req)
@@ -325,12 +334,22 @@ class ServingPipeline:
             with self.metrics.lock:
                 self.metrics.rejected += 1
             raise Backpressure(
-                f"admission queue full ({self.admit_queue_cap})"
+                f"admission queue full ({self.admit_queue_cap})",
+                retry_after=self._retry_after(),
             ) from None
         with self.metrics.lock:
             self.metrics.received += 1
         self._admit_wake.set()
         return stream
+
+    def _retry_after(self) -> int:
+        """Retry-After seconds for a 429: how long the CURRENT backlog
+        plausibly takes to clear -- one admission hold-off beat per
+        queued request (the floor the admission loop drains at), rounded
+        up to whole seconds (the header's unit), never below 1."""
+        backlog = self._admit_q.qsize() + self.bucketizer.depth
+        hold = max(self.admit_hold_s, 0.001)
+        return max(1, math.ceil(backlog * hold))
 
     def replay(self, items, *, drain_timeout: float = 600.0) -> float:
         """Open-loop trace replay (the load harness): submit each item
@@ -376,6 +395,17 @@ class ServingPipeline:
             gauges["pool_pages_total"] = pool["n_pages"]
             gauges["pool_utilization"] = float(pool["utilization"])
             gauges["pool_preemptions_total"] = pool["preemptions"]
+            gauges["host_bytes_total"] = pool["host_bytes"]["total"]
+            off = pool["offload"]
+            gauges["prefix_hits_device_total"] = off["hits_device"]
+            gauges["prefix_hits_host_total"] = off["hits_host"]
+            gauges["prefix_misses_total"] = off["misses"]
+            if off["enabled"]:
+                gauges["offload_spilled_pages_total"] = off["spilled_pages"]
+                gauges["offload_restored_pages_total"] = off["restored_pages"]
+                gauges["offload_restored_tokens_total"] = off["restored_tokens"]
+                gauges["offload_ram_bytes"] = off["store"]["ram_bytes"]
+                gauges["offload_disk_bytes"] = off["store"]["disk_bytes"]
         if getattr(eng, "spec_k", None):
             gauges["spec_k"] = eng.spec_k
             gauges["spec_tokens_drafted_total"] = int(eng.n_drafted)

@@ -11,6 +11,7 @@ of parsing stdout.
 """
 from __future__ import annotations
 
+import random
 import threading
 from typing import Optional
 
@@ -21,30 +22,57 @@ __all__ = ["Histogram", "ServerMetrics", "cache_report_data"]
 
 class Histogram:
     """Latency accumulator: record seconds, summarize percentiles.
-    Plain value list + numpy percentile -- exact quantiles, fine at
-    load-harness scale (thousands of samples, not millions)."""
 
-    def __init__(self):
+    Bounded: up to ``cap`` samples are kept verbatim (exact quantiles --
+    load-harness scale fits entirely under the default cap), beyond that
+    the kept set becomes a uniform reservoir (Vitter's Algorithm R, a
+    deterministic RNG so two identical runs summarize identically) and
+    quantiles are estimates over it.  ``count``/``sum``/``max``/``mean``
+    stay exact at any scale -- a long-running ``serve.py --http`` no
+    longer grows its metrics without bound."""
+
+    def __init__(self, cap: int = 4096):
+        if cap <= 0:
+            raise ValueError(f"Histogram cap must be positive, got {cap}")
         self._v: list[float] = []
+        self._cap = cap
+        self._rng = random.Random(0)
+        self._count = 0
+        self._sum = 0.0
+        self._max = 0.0
 
     def record(self, x: float) -> None:
-        self._v.append(float(x))
+        x = float(x)
+        self._count += 1
+        self._sum += x
+        self._max = x if self._count == 1 else max(self._max, x)
+        if len(self._v) < self._cap:
+            self._v.append(x)
+        else:
+            j = self._rng.randrange(self._count)
+            if j < self._cap:
+                self._v[j] = x
 
     @property
     def count(self) -> int:
-        return len(self._v)
+        return self._count
+
+    @property
+    def sum(self) -> float:
+        return self._sum
 
     def summary(self) -> dict:
         if not self._v:
             return {"count": 0, "mean": 0.0, "p50": 0.0, "p99": 0.0,
-                    "max": 0.0}
+                    "max": 0.0, "sum": 0.0}
         v = np.asarray(self._v)
         return {
-            "count": int(v.size),
-            "mean": float(v.mean()),
+            "count": self._count,
+            "mean": self._sum / self._count,
             "p50": float(np.percentile(v, 50)),
             "p99": float(np.percentile(v, 99)),
-            "max": float(v.max()),
+            "max": self._max,
+            "sum": self._sum,
         }
 
 
@@ -98,6 +126,7 @@ class ServerMetrics:
                 f'server_{name}_seconds{{quantile="0.99"}} {s["p99"]:.6f}'
             )
             lines.append(f"server_{name}_seconds_count {s['count']}")
+            lines.append(f"server_{name}_seconds_sum {s['sum']:.6f}")
         for key, val in (gauges or {}).items():
             lines.append(f"server_{key} {val:g}" if isinstance(val, float)
                          else f"server_{key} {val}")

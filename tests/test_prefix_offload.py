@@ -1,0 +1,436 @@
+"""Hierarchical prefix cache: host-RAM page offload (DESIGN.md §14).
+
+The tier-crossing oracle (ISSUE-8): evict -> spill -> restore -> decode
+must be bit-identical, per row, to the never-evicted path (a device-tier
+COW hit on the donor's still-resident pages).  Layered evidence:
+
+* **Store mechanics**: byte-bounded LRU semantics, recency on re-put,
+  disk spill/promote round-trip, corrupt-spill-file tolerance -- pure
+  host code, no model.
+
+* **Policy byte round-trip**: for every policy, ``export_pages`` ->
+  ``import_pages`` reproduces EXACTLY the state ``adopt_prefix`` builds
+  from the resident pages -- the §14 bit-identity argument at its root
+  (both paths place the same page bytes at the same dense offsets).
+
+* **Engine oracle**: retire (spill) -> re-admit (host restore) streams
+  bit-identically to an engine where the donor stayed resident, for
+  every policy, including a restore racing a long chunked admission and
+  a disk-tier round-trip.  Pool refcounts return to zero afterwards.
+
+* **Stale-index regression** (ISSUE-8 bugfix): a page freed and
+  reallocated to different content before the next ``_sync_pool`` must
+  never satisfy ``_plan_pages`` -- this test emulates the deferred-sync
+  free->realloc->plan window in one locked region and fails on pre-PR
+  code (which only pruned the index at sync time, guarded by a
+  refcount that the reborn page re-satisfies).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import SMOL_D64
+from repro.core import paged as paged_mod
+from repro.core.cache_api import available_policies, get_policy
+from repro.core.paged import NULL_PAGE
+from repro.launch.batch_engine import BatchEngine, Request
+from repro.launch.prefix_store import PrefixStore
+from repro.models import build_model
+
+S_MAX = 64
+PAGE = 16
+CAPACITY = 3
+
+_LM_CACHE: dict = {}
+
+
+def _lm():
+    if not _LM_CACHE:
+        model = build_model(SMOL_D64)
+        _LM_CACHE["m"] = (model, model.init(jax.random.PRNGKey(0)))
+    return _LM_CACHE["m"]
+
+
+@pytest.fixture(scope="module")
+def lm():
+    return _lm()
+
+
+def _mk_engine(model, params, *, policy="int4-srft", **kw):
+    kw.setdefault("page_size", PAGE)
+    kw.setdefault("prefill_chunk", PAGE)
+    return BatchEngine(model, params, capacity=CAPACITY, s_max=S_MAX,
+                       policy=policy, backend="gather", chunk=4,
+                       key=jax.random.PRNGKey(7), paged=True, **kw)
+
+
+def _prompt(n, seed=40):
+    return np.asarray(jax.random.randint(
+        jax.random.PRNGKey(seed), (n,), 0, SMOL_D64.vocab_size))
+
+
+def _run(eng, reqs):
+    return {c.rid: c for c in eng.run(list(reqs))}
+
+
+def _assert_pool_clean(eng):
+    rc = np.asarray(eng._pd().pool.refcount)[0]
+    assert rc[NULL_PAGE] == 1
+    assert (np.delete(rc, NULL_PAGE) == 0).all(), rc
+
+
+def _tree_equal(a, b):
+    return jax.tree.all(jax.tree.map(
+        lambda x, y: bool((np.asarray(x) == np.asarray(y)).all()), a, b
+    ))
+
+
+# ---------------------------------------------------------------------------
+# Store mechanics (pure host code)
+# ---------------------------------------------------------------------------
+
+def _payload(seed, nbytes=64):
+    rng = np.random.default_rng(seed)
+    return (rng.integers(0, 255, nbytes // 2, dtype=np.uint8),
+            rng.standard_normal(nbytes // 16).astype(np.float32))
+
+
+def test_store_lru_evicts_by_bytes():
+    one = sum(a.nbytes for a in _payload(0))
+    st = PrefixStore(capacity_bytes=2 * one)
+    st.put(b"a", _payload(1))
+    st.put(b"b", _payload(2))
+    st.touch(b"a")            # refresh: b is now the LRU tail
+    st.put(b"c", _payload(3))  # evicts b
+    assert b"a" in st and b"c" in st and b"b" not in st
+    assert st.get(b"b") is None
+    assert st.nbytes == 2 * one
+    s = st.stats()
+    assert s["evictions"] == 1 and s["pages_ram"] == 2
+    # present-key put refreshes recency without growing the store
+    st.put(b"a", _payload(1))
+    st.put(b"d", _payload(4))  # evicts c, not a
+    assert b"a" in st and b"c" not in st
+
+
+def test_store_get_returns_exact_bytes():
+    st = PrefixStore(capacity_bytes=1 << 16)
+    pl = _payload(7)
+    st.put(b"k", pl)
+    got = st.get(b"k")
+    assert len(got) == len(pl)
+    for a, b in zip(got, pl):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(a, b)
+    assert st.stats()["hits"] == 1
+
+
+def test_store_disk_spill_and_promote(tmp_path):
+    one = sum(a.nbytes for a in _payload(0))
+    st = PrefixStore(capacity_bytes=one, spill_dir=str(tmp_path))
+    st.put(b"a", _payload(1))
+    st.put(b"b", _payload(2))   # a spills to disk
+    s = st.stats()
+    assert s["pages_ram"] == 1 and s["pages_disk"] == 1
+    assert s["disk_spills"] == 1 and len(list(tmp_path.iterdir())) == 1
+    got = st.get(b"a")          # disk hit: loads, promotes, drops file
+    for x, y in zip(got, _payload(1)):
+        np.testing.assert_array_equal(x, y)
+    s = st.stats()
+    assert s["disk_loads"] == 1 and s["pages_disk"] == 1  # b spilled now
+    assert b"b" in st
+    # bfloat16 leaves round-trip through the byte-view npz format
+    import ml_dtypes
+    bf = np.arange(32, dtype=np.float32).astype(ml_dtypes.bfloat16)
+    st2 = PrefixStore(capacity_bytes=0, spill_dir=str(tmp_path / "bf"))
+    st2.put(b"x", (bf,))
+    (back,) = st2.get(b"x")
+    assert back.dtype == bf.dtype
+    np.testing.assert_array_equal(back.view(np.uint16), bf.view(np.uint16))
+
+
+def test_store_tolerates_vanished_spill_file(tmp_path):
+    st = PrefixStore(capacity_bytes=0, spill_dir=str(tmp_path))
+    st.put(b"a", _payload(1))
+    for f in tmp_path.iterdir():
+        f.unlink()
+    assert st.get(b"a") is None   # corrupt/vanished file is a miss
+    assert st.stats()["misses"] == 1
+
+
+def test_store_rejects_negative_capacity():
+    with pytest.raises(ValueError, match="capacity"):
+        PrefixStore(capacity_bytes=-1)
+
+
+# ---------------------------------------------------------------------------
+# Policy byte round-trip: export -> import == adopt_prefix (resident)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", available_policies())
+def test_policy_export_import_matches_adopt(policy):
+    """``import_pages`` over exported bytes must build EXACTLY the
+    staging row ``adopt_prefix`` builds from the same pages while
+    resident -- the §14 bit-identity argument: both paths then feed the
+    identical COW insert plan, so restored pool pages cannot differ
+    from never-evicted ones."""
+    pol = get_policy(policy)
+    B, H, d, S = 2, 2, 64, 32
+    key = jax.random.PRNGKey(0)
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, H, S, d), jnp.bfloat16)
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, H, S, d), jnp.bfloat16)
+    row = pol.prefill(
+        pol.init_state(1, H, S_MAX, d, key=key, ragged=True), k, v)
+    max_pages = S_MAX // PAGE
+    pg = pol.init_paged(B, H, S_MAX, d, n_pages=2 * max_pages + 1,
+                        page_size=PAGE, key=key)
+    null_plan = jnp.full((max_pages,), NULL_PAGE, jnp.int32)
+    pg = pol.insert_row_paged(pg, row, 0, null_plan, jnp.int32(0),
+                              jnp.int32(max_pages))
+    pd = pg.data.kv if policy == "int4-srft" else pg.data
+    pages = np.asarray(pd.page_table)[0, : S // PAGE]
+
+    payload = pol.export_pages(pg, [int(p) for p in pages])
+    for leaf in payload:
+        assert isinstance(leaf, np.ndarray)  # host bytes, ready to park
+
+    fresh = pol.init_state(1, H, S_MAX, d, key=key, ragged=True)
+    plan = np.full((max_pages,), NULL_PAGE, np.int32)
+    plan[: S // PAGE] = pages
+    ref = pol.adopt_prefix(fresh, pg, jnp.asarray(plan), jnp.int32(S))
+    got = pol.import_pages(fresh, tuple(jnp.asarray(a) for a in payload),
+                           jnp.int32(S))
+    assert _tree_equal(ref.data, got.data), (
+        f"{policy}: imported staging row diverged from resident adopt"
+    )
+
+
+# ---------------------------------------------------------------------------
+# Engine oracle: evict -> restore -> decode == never-evicted
+# ---------------------------------------------------------------------------
+
+def _transplant(dst, src):
+    for attr in ("_chunk_fns", "_prefill_fn", "_chunk_prefill_fn",
+                 "_insert_fn", "_insert_paged_fn", "_reset_fn", "_seed_fn",
+                 "_import_fn", "_raw_view_fn", "_slice_row_fn",
+                 "_slice_axes"):
+        setattr(dst, attr, getattr(src, attr))
+    return dst
+
+
+def _restore_vs_resident(model, params, policy, **offload_kw):
+    """Shared oracle body: (a) offload engine retires the donor, spills
+    its prefix pages, then restores from the host tier on re-admission;
+    (b) reference engine keeps the donor RESIDENT (both requests live
+    at once -> device COW hit).  The restored stream must match the
+    resident-hit stream bit for bit."""
+    prompt = _prompt(40)
+    off = _mk_engine(model, params, policy=policy, **offload_kw)
+    _run(off, [Request(rid=0, prompt=prompt, max_new_tokens=8)])
+    assert off.n_spilled_pages == 2  # 40 tokens -> 2 full prefix pages
+    got = _run(off, [Request(rid=1, prompt=prompt, max_new_tokens=8)])
+    assert off.n_reuse_hits_host == 1
+    assert off.n_restored_tokens == 32  # (40 - 1) // 16 pages x 16
+
+    ref_eng = _transplant(_mk_engine(model, params, policy=policy), off)
+    ref = _run(ref_eng, [Request(rid=0, prompt=prompt, max_new_tokens=8),
+                         Request(rid=1, prompt=prompt, max_new_tokens=8)])
+    assert ref_eng.n_reuse_hits_device >= 1  # donor stayed resident
+    np.testing.assert_array_equal(
+        got[1].tokens, ref[1].tokens,
+        err_msg=f"{policy}: restored stream != never-evicted stream",
+    )
+    assert got[1].finish_reason == ref[1].finish_reason
+    _assert_pool_clean(off)
+    _assert_pool_clean(ref_eng)
+    return off
+
+
+def test_restore_bit_identical_fast(lm):
+    model, params = lm
+    _restore_vs_resident(model, params, "int4-srft",
+                         offload_bytes=1 << 24)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("policy", available_policies())
+def test_restore_bit_identical_all_policies(lm, policy):
+    model, params = lm
+    _restore_vs_resident(model, params, policy, offload_bytes=1 << 24)
+
+
+@pytest.mark.slow
+def test_restore_from_disk_tier(lm, tmp_path):
+    """A zero-byte RAM budget forces every spill straight to disk; the
+    restore then round-trips through the npz spill files and must stay
+    bit-identical."""
+    model, params = lm
+    eng = _restore_vs_resident(model, params, "int4-srft",
+                               offload_bytes=0,
+                               offload_dir=str(tmp_path))
+    s = eng.prefix_store.stats()
+    assert s["disk_spills"] >= 2 and s["disk_loads"] >= 2
+    assert s["ram_bytes"] == 0
+
+
+@pytest.mark.slow
+def test_restore_racing_chunked_admission(lm):
+    """The restore admission lands while a long fresh prompt is still
+    being chunk-prefilled and other rows decode -- scheduler
+    interleaving must not perturb the restored stream (same §11
+    argument as chunked-vs-monolithic parity)."""
+    model, params = lm
+    prompt = _prompt(40)
+    long_p = _prompt(48, seed=99)
+
+    off = _mk_engine(model, params, policy="int4-srft",
+                     offload_bytes=1 << 24, prefill_budget=PAGE)
+    _run(off, [Request(rid=0, prompt=prompt, max_new_tokens=8)])
+    assert off.n_spilled_pages == 2
+    got = _run(off, [Request(rid=2, prompt=long_p, max_new_tokens=6),
+                     Request(rid=1, prompt=prompt, max_new_tokens=8)])
+    assert off.n_reuse_hits_host == 1
+
+    ref_eng = _transplant(_mk_engine(model, params, policy="int4-srft"),
+                          off)
+    ref = _run(ref_eng, [Request(rid=0, prompt=prompt, max_new_tokens=8),
+                         Request(rid=1, prompt=prompt, max_new_tokens=8)])
+    np.testing.assert_array_equal(
+        got[1].tokens, ref[1].tokens,
+        err_msg="restore racing a chunked admission diverged",
+    )
+    _assert_pool_clean(off)
+
+
+def test_cancel_during_pending_restore_leaks_nothing(lm):
+    """cancel_all with a restore-seeded admission still pending: the
+    staging row holds the imported bytes but no pool pages yet, so the
+    drain must return every refcount to zero (restore is cancel-safe
+    by construction -- it touches no refcounts until the insert)."""
+    model, params = lm
+    long_p = _prompt(56)
+    eng = _mk_engine(model, params, policy="int4-srft",
+                     offload_bytes=1 << 24)
+    # donor covers only the first 2 pages, so the restore skips 32 of
+    # 56 tokens and the remaining 24 span two prefill quanta
+    _run(eng, [Request(rid=0, prompt=long_p[:40], max_new_tokens=8)])
+    assert eng.n_spilled_pages == 2
+    eng.submit(Request(rid=1, prompt=long_p, max_new_tokens=8))
+    eng.step()  # opens the pending admission (restore-seeded)
+    assert eng.n_reuse_hits_host == 1
+    assert eng._pending is not None  # still mid-prefill
+    comps = eng.cancel_all()
+    assert {c.rid for c in comps} == {1}
+    _assert_pool_clean(eng)
+
+
+def test_offload_requires_paged_and_chunked(lm):
+    model, params = lm
+    with pytest.raises(ValueError, match="paged"):
+        BatchEngine(model, params, capacity=2, s_max=S_MAX,
+                    policy="bf16", backend="gather", chunk=4,
+                    key=jax.random.PRNGKey(7), paged=False,
+                    offload_bytes=1 << 20)
+    with pytest.raises(ValueError, match="chunked"):
+        BatchEngine(model, params, capacity=2, s_max=S_MAX,
+                    policy="bf16", backend="gather", chunk=4,
+                    key=jax.random.PRNGKey(7), paged=True, page_size=PAGE,
+                    offload_bytes=1 << 20)
+
+
+def test_spill_respects_store_capacity(lm):
+    """The host tier is budgeted: with room for one page, spilling two
+    prefix pages keeps exactly the most recent and the next admission
+    falls back to a partial restore -- never an over-budget store."""
+    model, params = lm
+    prompt = _prompt(40)
+    probe = _mk_engine(model, params, policy="int4-srft",
+                       offload_bytes=1 << 24)
+    _run(probe, [Request(rid=0, prompt=prompt, max_new_tokens=8)])
+    one_page = probe.prefix_store.stats()["ram_bytes"] // 2
+
+    eng = _transplant(_mk_engine(model, params, policy="int4-srft",
+                                 offload_bytes=one_page), probe)
+    _run(eng, [Request(rid=0, prompt=prompt, max_new_tokens=8)])
+    s = eng.prefix_store.stats()
+    assert s["ram_bytes"] <= one_page and s["pages_ram"] == 1
+    assert s["evictions"] == 1
+    got = _run(eng, [Request(rid=1, prompt=prompt, max_new_tokens=8)])
+    # page-1's key survived but page-0's did not: the contiguous walk
+    # from the start misses, so this admission prefills from scratch --
+    # and still decodes the same stream (full prefill reference)
+    assert eng.n_reuse_hits_host == 0
+    assert len(got[1].tokens) == 8
+    _assert_pool_clean(eng)
+
+
+# ---------------------------------------------------------------------------
+# Stale prefix-index regression (ISSUE-8 bugfix)
+# ---------------------------------------------------------------------------
+
+def test_stale_prefix_index_window_regression(lm):
+    """Free -> realloc -> plan in ONE locked region: slot 0's pages are
+    freed device-side without the free-site index prune (emulating a
+    deferred host sync), then a DIFFERENT prompt is admitted and the
+    allocator hands it the same physical page ids.  Pre-PR code keeps
+    the old prompt's index entries (the reborn pages re-satisfy the
+    ``refcount == 0`` guard at the next sync) and _plan_pages returns a
+    COW hit on pages now holding other content; post-PR the live-slot
+    ownership guard rejects it."""
+    model, params = lm
+    pA = _prompt(32, seed=1)
+    pB = _prompt(32, seed=2)
+    eng = BatchEngine(model, params, capacity=CAPACITY, s_max=S_MAX,
+                      policy="bf16", backend="gather", chunk=4,
+                      key=jax.random.PRNGKey(7), paged=True,
+                      page_size=PAGE)
+    eng.submit(Request(rid=0, prompt=pA, max_new_tokens=8))
+    eng.step()  # admit A: its 2 full prompt pages are now indexed
+    keyA = pA.astype(np.int32)[:PAGE].tobytes()
+    pagesA = eng._ptab_host[0, :2].copy()
+    assert eng._prefix_pages[keyA] == pagesA[0]
+
+    with eng.lock:
+        # 1) free slot 0 on device WITHOUT the free-site bookkeeping --
+        #    the deferred-sync window under test
+        mask = np.zeros((CAPACITY,), bool)
+        mask[0] = True
+        eng.cache = eng._reset_fn(eng.cache, jnp.asarray(mask))
+        eng._slot_req[0] = None
+        eng._slot_toks[0] = []
+        eng.active[0] = False
+        eng.budget[0] = 0
+        # 2) admit B: pool_alloc hands out the lowest free page ids --
+        #    exactly A's just-freed pages, now holding B's bytes
+        eng._queue.append(Request(rid=1, prompt=pB, max_new_tokens=8))
+        eng._admit_monolithic(eng._admit_seq, [], [])
+        slotB = next(s for s in range(CAPACITY)
+                     if eng._slot_req[s] is not None
+                     and eng._slot_req[s].rid == 1)
+        assert np.array_equal(eng._ptab_host[slotB, :2], pagesA), (
+            "setup: B must reuse A's freed page ids for the window "
+            "to exist"
+        )
+        # 3) plan A again IN THE SAME LOCKED REGION: the pages exist,
+        #    their refcount is nonzero -- but they hold B's content now
+        plan = eng._plan_pages(Request(rid=2, prompt=pA,
+                                       max_new_tokens=8))
+    assert plan is not None
+    shared, _ = plan
+    assert shared == [], (
+        f"stale COW hit: _plan_pages returned pages {shared} for prompt "
+        f"A, but those pages were reallocated to prompt B"
+    )
+
+
+def test_free_time_prune_drops_index_entries(lm):
+    """The engine's own free sites prune at free time: after the last
+    reference to a registered prefix dies, its index entries are gone
+    BEFORE the locked region ends (not merely at the next sync)."""
+    model, params = lm
+    pA = _prompt(32, seed=1)
+    eng = _mk_engine(model, params, policy="bf16")
+    _run(eng, [Request(rid=0, prompt=pA, max_new_tokens=4)])
+    assert eng._prefix_pages == {} and eng._prefix_seqs == {}
+    _assert_pool_clean(eng)

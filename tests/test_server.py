@@ -443,6 +443,64 @@ def test_histogram_and_prometheus_rendering():
     assert "server_slots_active 3" in text
 
 
+def test_histogram_bounded_memory_and_sum():
+    """ISSUE-8 bugfix: the histogram must not grow without bound, and
+    the Prometheus exposition must carry a ``_sum`` so (sum, count)
+    form a proper summary.  Under the cap quantiles stay exact; past it
+    the kept set is a fixed-size reservoir while count/sum/max remain
+    exact."""
+    h = Histogram(cap=64)
+    for i in range(10_000):
+        h.record(float(i))
+    assert len(h._v) == 64  # bounded: no leak
+    s = h.summary()
+    assert s["count"] == 10_000
+    assert s["sum"] == pytest.approx(sum(float(i) for i in range(10_000)))
+    assert s["max"] == 9999.0
+    assert s["mean"] == pytest.approx(4999.5)
+    # reservoir quantiles are estimates of the uniform stream
+    assert 2000.0 < s["p50"] < 8000.0
+    # determinism: an identical stream summarizes identically
+    h2 = Histogram(cap=64)
+    for i in range(10_000):
+        h2.record(float(i))
+    assert h2.summary() == s
+
+    m = ServerMetrics()
+    m.ttft.record(0.25)
+    m.ttft.record(0.75)
+    text = m.render_prometheus()
+    assert "server_ttft_seconds_count 2" in text
+    assert "server_ttft_seconds_sum 1.000000" in text
+    assert "server_itl_seconds_sum 0.000000" in text
+
+
+def test_backpressure_carries_retry_after(lm):
+    """ISSUE-8 bugfix: a 429 must tell clients WHEN to retry.  Both
+    rejection paths (queue full, draining) raise Backpressure with an
+    integer retry_after >= 1 -- what http.py emits as Retry-After."""
+    model, params = lm
+    eng = _mk_engine(model, params, policy="bf16")
+    pipe = ServingPipeline(eng, admit_queue=2)  # never started
+    reqs = _requests(model, 3, policy="bf16")
+    pipe.submit(reqs[0])
+    pipe.submit(reqs[1])
+    with pytest.raises(Backpressure, match="full") as exc:
+        pipe.submit(reqs[2])
+    assert isinstance(exc.value.retry_after, int)
+    assert exc.value.retry_after >= 1
+    pipe._closing = True  # draining path
+    with pytest.raises(Backpressure, match="draining") as exc:
+        pipe.submit(reqs[2])
+    assert exc.value.retry_after >= 1
+    # deeper backlog can only lengthen the hold-off
+    pipe.admit_hold_s = 2.0
+    with pytest.raises(Backpressure) as exc:
+        pipe.submit(reqs[2])
+    assert exc.value.retry_after >= 4  # 2 queued x 2 s, ceiled
+    eng.step_listeners.clear()
+
+
 def test_cache_report_data_shapes(lm):
     model, params = lm
     assert cache_report_data(None, None) == {"kv_applicable": False}
@@ -451,4 +509,32 @@ def test_cache_report_data_shapes(lm):
     assert data["kv_applicable"] and data["policy"] == "int4-srft"
     assert data["compression_ratio"] > 1.0
     assert data["layout"] == "slot cache"
+    eng.step_listeners.clear()
+
+
+def test_pool_stats_report_host_bytes(lm):
+    """ISSUE-8 bugfix: host-side memory (mirrors, prefix-index keys,
+    offload store) is part of the pool report -- the offload tier's
+    budget must be observable in --stats-json and /metrics."""
+    model, params = lm
+    eng = _mk_engine(model, params, policy="int4-srft", paged=True,
+                     prefill_chunk=16, offload_bytes=1 << 20)
+    for c in eng.run([Request(rid=0, prompt=np.zeros(32, np.int32),
+                              max_new_tokens=4)]):
+        pass
+    stats = eng.pool_stats()
+    hb = stats["host_bytes"]
+    assert hb["refcount_mirror"] == eng._refcount_host.nbytes
+    assert hb["page_table_mirror"] == eng._ptab_host.nbytes
+    assert hb["total"] == sum(v for k, v in hb.items() if k != "total")
+    off = stats["offload"]
+    assert off["enabled"] and off["spilled_pages"] == 2
+    assert hb["offload_store"] == off["store"]["ram_bytes"]
+    data = cache_report_data(eng.policy, eng.cache.get("attn"), engine=eng)
+    assert data["pool"]["host_bytes"] == hb
+    pipe = ServingPipeline(eng)  # never started: just the /metrics text
+    text = pipe.metrics_text()
+    assert "server_host_bytes_total" in text
+    assert "server_offload_spilled_pages_total 2" in text
+    assert "server_prefix_hits_host_total 0" in text
     eng.step_listeners.clear()
