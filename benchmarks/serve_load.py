@@ -57,7 +57,12 @@ import numpy as np
 from benchmarks.common import fmt_table, save_record
 from repro.configs.paper_models import PAPER_MODELS
 from repro.launch.batch_engine import BatchEngine, Request
-from repro.launch.server import ServingPipeline, SyncServer, make_trace
+from repro.launch.server import (
+    ServingPipeline,
+    SyncServer,
+    TraceRecorder,
+    make_trace,
+)
 from repro.launch.server.pipeline import drain_stream
 from repro.models import build_model
 
@@ -145,6 +150,63 @@ def _trial(mk, items, mode, *, capacity, host_work_s,
     return row
 
 
+def _tracing_trial(mk, items, enabled: bool, *, capacity,
+                   host_work_s) -> dict:
+    """One pre-staged closed-burst replay with the flight recorder ON
+    or OFF -- identical grouping and device work either way, so the
+    mean-ITL delta is the recorder's hot-path cost (one perf_counter
+    read + one GIL-atomic deque append per event)."""
+    eng = mk()
+    trace = TraceRecorder(capacity=1 << 16, enabled=enabled)
+    eng.trace = trace
+    pipe = ServingPipeline(eng, max_group=capacity,
+                           admit_queue=max(len(items), 8), trace=trace)
+    pipe.fanout.host_work_s = host_work_s
+    t0 = time.perf_counter()
+    for item in items:
+        pipe.submit(item.req)
+    pipe.start()
+    pipe.drain(timeout=600.0)
+    makespan = time.perf_counter() - t0
+    pipe.shutdown()
+    snap = pipe.metrics.snapshot()
+    if snap["requests_completed"] != len(items):
+        raise AssertionError(
+            f"tracing={enabled}: {snap['requests_completed']} of "
+            f"{len(items)} requests completed"
+        )
+    return {
+        "mode": "tracing-on" if enabled else "tracing-off",
+        "tracing": enabled,
+        "itl_mean_us": snap["itl_s"]["mean"] * 1e6,
+        "itl_p50_ms": snap["itl_s"]["p50"] * 1e3,
+        "itl_p99_ms": snap["itl_s"]["p99"] * 1e3,
+        "sustained_req_s": len(items) / makespan,
+        "makespan_s": makespan,
+        "tokens": snap["tokens_streamed"],
+        "trace_events": len(trace),
+        "trace_dropped": trace.dropped,
+    }
+
+
+def _tracing_parity(mk, items, capacity) -> bool:
+    """Token streams must be byte-identical with the recorder on and
+    off: instrumentation is host-side timing only, no device work or
+    PRNG stream may move."""
+    streams = {}
+    for enabled in (False, True):
+        eng = mk()
+        trace = TraceRecorder(capacity=1 << 16, enabled=enabled)
+        eng.trace = trace
+        pipe = ServingPipeline(eng, max_group=capacity,
+                               admit_queue=max(len(items), 8),
+                               trace=trace).start()
+        s = {it.req.rid: pipe.submit(it.req) for it in items}
+        streams[enabled] = _collect_streams(s)
+        pipe.shutdown()
+    return streams[True] == streams[False]
+
+
 def measure(model, params, *, capacity, s_max, policy, chunk,
             burst_items, load_items, repeats,
             detok_s) -> tuple[dict, list, bool]:
@@ -220,7 +282,21 @@ def measure(model, params, *, capacity, s_max, policy, chunk,
     p_streams = {it.req.rid: pipe.submit(it.req) for it in burst_items}
     got = _collect_streams(p_streams)
     pipe.shutdown()
-    return best, context, got == ref
+    # tracing overhead (DESIGN.md §15): same burst, recorder on vs
+    # off, at production-shaped host work where per-token cost is the
+    # signal.  Best-of-repeats MIN mean ITL per mode: the minimum is
+    # the noise-floor estimator for a fixed-work replay
+    tbest: dict = {}
+    for _ in range(repeats):
+        for enabled in (False, True):  # alternate: fair drift
+            row = _tracing_trial(mk, burst_items, enabled,
+                                 capacity=capacity, host_work_s=detok_s)
+            key = row["mode"]
+            if key not in tbest \
+                    or row["itl_mean_us"] < tbest[key]["itl_mean_us"]:
+                tbest[key] = row
+    tparity = _tracing_parity(mk, burst_items, capacity)
+    return best, context, got == ref, tbest, tparity
 
 
 def run(*, smoke: bool = False, requests: int = 32, prompt_len: int = 48,
@@ -250,7 +326,7 @@ def run(*, smoke: bool = False, requests: int = 32, prompt_len: int = 48,
           f"capacity={capacity}, chunk={chunk}, policy={policy}, "
           f"detok={detok_us:.0f}us/tok, {repeats} alternating trials")
 
-    best, context, parity_ok = measure(
+    best, context, parity_ok, tbest, tparity = measure(
         model, params, capacity=capacity, s_max=s_max, policy=policy,
         chunk=chunk, burst_items=burst_items, load_items=load_items,
         repeats=repeats, detok_s=detok_us * 1e-6,
@@ -280,6 +356,24 @@ def run(*, smoke: bool = False, requests: int = 32, prompt_len: int = 48,
                   - best[("pipelined", "light")]["makespan_s"])
     speedup = (best[("pipelined", "heavy")]["sustained_req_s"]
                / max(best[("sync", "heavy")]["sustained_req_s"], 1e-9))
+    # tracing overhead (DESIGN.md §15): min mean-ITL per mode across
+    # the alternating trials; the claim holds the recorder to <=1%
+    # mean-ITL overhead (plus a 5us absolute floor -- below that the
+    # delta is timer resolution, not recorder cost)
+    trows = [tbest["tracing-off"], tbest["tracing-on"]]
+    for row in trows:
+        row.update(policy=policy, arrival="closed", requests=requests,
+                   new_tokens=new_tokens, capacity=capacity)
+        for k, v in list(row.items()):
+            if isinstance(v, float):
+                row[k] = round(v, 3)
+    print(fmt_table(trows, ["mode", "itl_mean_us", "itl_p50_ms",
+                            "itl_p99_ms", "sustained_req_s",
+                            "makespan_s", "trace_events"]))
+    itl_off = tbest["tracing-off"]["itl_mean_us"] * 1e-6
+    itl_on = tbest["tracing-on"]["itl_mean_us"] * 1e-6
+    overhead_pct = 100.0 * (itl_on - itl_off) / max(itl_off, 1e-12)
+
     claims = {
         # the tentpole claim, at production-shaped detok cost: the
         # pipelined server sustains >= the sync loop's req/s (2%
@@ -290,15 +384,26 @@ def run(*, smoke: bool = False, requests: int = 32, prompt_len: int = 48,
             bool(best[("pipelined", "heavy")]["sustained_req_s"]
                  >= 0.98 * best[("sync", "heavy")]["sustained_req_s"]),
         "server_streams_bit_identical": bool(parity_ok),
+        # flight recorder stays on in production: <=1% mean-ITL
+        # overhead (5us absolute guard band for timer granularity)
+        "tracing_overhead_bounded":
+            bool(itl_on <= itl_off * 1.01 + 5e-6),
+        # recorder on/off must not move a single token byte
+        "tracing_streams_bit_identical": bool(tparity),
     }
     print(f"host-work makespan growth: sync +{sync_delta:.3f}s, "
           f"pipelined +{pipe_delta:.3f}s; heavy pipelined/sync "
-          f"sustained req/s: {speedup:.3f}x   claims: {claims}")
+          f"sustained req/s: {speedup:.3f}x")
+    print(f"tracing mean-ITL overhead: {overhead_pct:+.2f}% "
+          f"({itl_off*1e6:.1f}us -> {itl_on*1e6:.1f}us)   "
+          f"claims: {claims}")
 
     record = {
         "server_measured": rows,
         "server_pipeline_speedup": round(speedup, 3),
         "server_host_work_absorbed_s": round(sync_delta - pipe_delta, 3),
+        "tracing_measured": trows,
+        "tracing_itl_overhead_pct": round(overhead_pct, 3),
         "smoke": bool(smoke),
         "claims": claims,
     }
@@ -313,6 +418,8 @@ def run(*, smoke: bool = False, requests: int = 32, prompt_len: int = 48,
     root["server_measured"] = rows
     root["server_pipeline_speedup"] = round(speedup, 3)
     root["server_host_work_absorbed_s"] = round(sync_delta - pipe_delta, 3)
+    root["tracing_measured"] = trows
+    root["tracing_itl_overhead_pct"] = round(overhead_pct, 3)
     root.setdefault("claims", {}).update(claims)
     with open(ROOT_RECORD, "w") as f:
         json.dump(root, f, indent=2, default=float)

@@ -13,7 +13,12 @@ an ephemeral port and drives the full request cycle a client would:
 5. saturate the (``--admit-queue 1``) intake with a concurrent burst
    and check the 429 carries a ``Retry-After`` header plus a
    ``retry_after_s`` JSON field (ISSUE-8 backpressure contract);
-6. SIGINT the server and check it drains and exits 0.
+6. pull ``GET /debug/trace`` after the served load and validate it
+   with ``check_trace.py`` (valid Chrome-trace JSON, spans nest, every
+   streamed token covered by its request span), then SIGUSR1 the
+   server and validate the flight-recorder dump it writes;
+7. SIGINT the server, check it drains and exits 0, and validate the
+   final ``--trace-out`` file.
 
 Everything is stdlib (urllib) -- CI's server-smoke job runs exactly
 this file.  Exit status is non-zero on any failed check.
@@ -25,15 +30,18 @@ import os
 import signal
 import subprocess
 import sys
+import tempfile
 import threading
 import time
 import urllib.error
 import urllib.request
 
+from check_trace import check_trace, check_trace_file
+
 REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 
-def _boot() -> tuple[subprocess.Popen, str]:
+def _boot(trace_out: str) -> tuple[subprocess.Popen, str]:
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(REPO, "src")
     env.setdefault("JAX_PLATFORMS", "cpu")
@@ -42,7 +50,7 @@ def _boot() -> tuple[subprocess.Popen, str]:
          "--port", "0", "--max-batch", "2", "--prompt-len", "16",
          "--new-tokens", "8", "--policy", "int4-srft",
          # one waiter max: a concurrent burst must 429 (checked below)
-         "--admit-queue", "1"],
+         "--admit-queue", "1", "--trace-out", trace_out],
         stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True,
         cwd=REPO, env=env,
     )
@@ -95,7 +103,9 @@ def _stream_completion(url: str, prompt, max_tokens: int) -> list[int]:
 
 
 def main() -> None:
-    proc, url = _boot()
+    tmpdir = tempfile.mkdtemp(prefix="server_smoke_trace_")
+    trace_out = os.path.join(tmpdir, "trace.json")
+    proc, url = _boot(trace_out)
     try:
         print(f"[server_smoke] serving at {url}")
 
@@ -110,8 +120,13 @@ def main() -> None:
             f"unstreamed tokens {body['tokens']} != streamed {toks}"
         )
         assert body["finish_reason"] == "length", body
+        timing = body.get("timing")
+        assert timing is not None, f"no timing breakdown in {body}"
+        for key in ("queue_wait_s", "prefill_s", "decode_s", "detok_s",
+                    "total_s"):
+            assert key in timing and timing[key] >= 0, timing
         print(f"[server_smoke] unstreamed completion matches: "
-              f"{body['text']!r}")
+              f"{body['text']!r} (total {timing['total_s']:.3f}s)")
 
         with urllib.request.urlopen(url + "/healthz", timeout=60) as resp:
             health = json.loads(resp.read())
@@ -166,6 +181,44 @@ def main() -> None:
         print(f"[server_smoke] 429 backpressure: "
               f"Retry-After={retry_after}s")
 
+        # flight recorder: /debug/trace after the served load must be
+        # a valid Chrome trace with every streamed token covered by
+        # its request span (check_trace.py enforces the contract)
+        with urllib.request.urlopen(url + "/debug/trace",
+                                    timeout=60) as resp:
+            trace = json.loads(resp.read())
+        problems = check_trace(trace)
+        assert not problems, "\n".join(["/debug/trace invalid:"] + problems)
+        names = {e["name"] for e in trace["traceEvents"]}
+        for need in ("request", "tok.stream", "decode.chunk", "detok"):
+            assert need in names, f"no {need!r} events in /debug/trace"
+        # bucketed admission prefills through admit_packed; chunked
+        # admission through prefill.chunk; direct submit through
+        # engine.prefill -- any of the three covers the prefill stage
+        prefills = {"engine.prefill", "prefill.packed", "prefill.chunk"}
+        assert names & prefills, (
+            f"no prefill span in /debug/trace (have {sorted(names)})"
+        )
+        n_live = len(trace["traceEvents"])
+        with urllib.request.urlopen(url + "/debug/trace?last_s=1e9",
+                                    timeout=60) as resp:
+            windowed = json.loads(resp.read())
+        assert not check_trace(windowed), "windowed /debug/trace invalid"
+        print(f"[server_smoke] /debug/trace OK ({n_live} events)")
+
+        if hasattr(signal, "SIGUSR1"):
+            flight = os.path.join(tmpdir, "trace.flight-1.json")
+            proc.send_signal(signal.SIGUSR1)
+            deadline = time.monotonic() + 60
+            while not os.path.exists(flight) \
+                    and time.monotonic() < deadline:
+                time.sleep(0.1)
+            time.sleep(0.2)  # let the dump thread finish the write
+            problems = check_trace_file(flight)
+            assert not problems, \
+                "\n".join([f"flight dump {flight} invalid:"] + problems)
+            print("[server_smoke] SIGUSR1 flight dump OK")
+
         proc.send_signal(signal.SIGINT)
         out, _ = proc.communicate(timeout=120)
         assert proc.returncode == 0, (
@@ -173,6 +226,11 @@ def main() -> None:
         )
         assert "drained" in out, f"no drain confirmation:\n{out}"
         print("[server_smoke] SIGINT -> drained, exit 0")
+
+        problems = check_trace_file(trace_out)
+        assert not problems, \
+            "\n".join([f"--trace-out {trace_out} invalid:"] + problems)
+        print("[server_smoke] final --trace-out OK")
     finally:
         if proc.poll() is None:
             proc.kill()

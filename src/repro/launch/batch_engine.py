@@ -88,6 +88,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 from collections import deque
 from typing import Any, Callable, Iterator, Optional
 
@@ -178,7 +179,8 @@ class BatchEngine:
                  prefix_reuse: bool = True,
                  offload_bytes: Optional[int] = None,
                  offload_dir: Optional[str] = None,
-                 spec_k: Optional[int] = None):
+                 spec_k: Optional[int] = None,
+                 trace=None):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         if chunk < 1:
@@ -294,6 +296,22 @@ class BatchEngine:
             Callable[[list[tuple[int, list[int]]], list[Completion]], None]
         ] = []
 
+        # request-scoped tracing (DESIGN.md §15): spans/instants into a
+        # lock-cheap ring buffer.  Lazy import: repro.launch.server
+        # imports pipeline -> this module, so a top-level import here
+        # would cycle.  The default recorder is disabled -- every trace
+        # call is then one attribute check.
+        if trace is None:
+            from repro.launch.server.tracing import TraceRecorder
+            trace = TraceRecorder(capacity=1, enabled=False)
+        self._trace = trace
+        # prefix-tier attribution per request outcome (ISSUE-9): which
+        # tier first admitted each live rid (device COW / host restore /
+        # miss; "none" for dense engines), folded into tier_outcomes at
+        # retirement keyed by finish reason.
+        self._admit_tier: dict[int, str] = {}
+        self.tier_outcomes: dict[str, dict[str, int]] = {}
+
         # the slot cache: one ragged CacheState per layer, plus per-row
         # pos.  Row caches built at admission reuse _init_key/_rots so
         # their rotations are bit-identical to the slot cache's (an
@@ -371,6 +389,7 @@ class BatchEngine:
             self.peak_pages = 0
             if offload_bytes is not None:
                 self.prefix_store = PrefixStore(offload_bytes, offload_dir)
+                self.prefix_store.trace = self._trace
             # tier traffic: device COW hit / host restore / full prefill,
             # counted once per chunked admission (DESIGN.md §14)
             self.n_spilled_pages = 0
@@ -417,6 +436,35 @@ class BatchEngine:
         # row, so it is NOT donated here)
         self._slice_axes: Optional[tuple] = None
         self._slice_row_fn = jax.jit(self._slice_row_impl)
+
+    @property
+    def trace(self):
+        return self._trace
+
+    @trace.setter
+    def trace(self, rec) -> None:
+        # the serving front-end swaps in its (enabled) recorder after
+        # construction; keep the offload tier pointed at the same one
+        self._trace = rec
+        if self.prefix_store is not None:
+            self.prefix_store.trace = rec
+
+    @property
+    def n_rejected(self) -> int:
+        """Spec-decode draft positions rolled back (drafted - accepted)."""
+        if self.spec_k is None:
+            return 0
+        return int(self.n_drafted) - int(self.n_accepted)
+
+    def _record_tier(self, rid: int, tier: str) -> None:
+        """First admission wins: a preemption-resume keeps the tier the
+        request was ORIGINALLY admitted from."""
+        self._admit_tier.setdefault(rid, tier)
+
+    def _count_outcome(self, rid: int, reason: str) -> None:
+        tier = self._admit_tier.pop(rid, "none")
+        byo = self.tier_outcomes.setdefault(tier, {})
+        byo[reason] = byo.get(reason, 0) + 1
 
     def _rots_copy(self):
         return None if self._rots is None \
@@ -706,6 +754,8 @@ class BatchEngine:
                         k, tuple(leaf[:, j] for leaf in leaves)
                     )
                 self.n_spilled_pages += len(fresh)
+                self._trace.instant("offload.spill", cat="offload",
+                                    tier="host", pages=len(fresh))
             for k, _ in spill:
                 # content is deterministic in the key's tokens (§10), so
                 # a re-spill of a present key is just a recency touch
@@ -756,6 +806,12 @@ class BatchEngine:
         self._slot_toks[slot] = []
         self.active[slot] = False
         self.budget[slot] = 0
+        ptab = self._ptab_host[slot]
+        self._trace.instant(
+            "engine.preempt", cat="sched", rid=req.rid, slot=int(slot),
+            pages=int((ptab != NULL_PAGE).sum()),
+            carried=len(self._carried[req.rid]),
+        )
         self._release_slots([slot])
         mask = np.zeros((self.capacity,), bool)
         mask[slot] = True
@@ -974,6 +1030,7 @@ class BatchEngine:
     def submit(self, req: Request) -> None:
         with self.lock:
             self._validate(req)
+            self._trace.req_mark(req.rid, "submit")
             # paged admissibility needs no extra check here: the s_max
             # bound above caps any request at max_pages pages, and the
             # constructor floor (n_pages >= max_pages + 1) guarantees
@@ -1014,6 +1071,11 @@ class BatchEngine:
                ) -> Optional[Completion]:
         """Prefill alone, copy into ``slot``, draw the first token.
         ``plan`` is the paged (shared_pages, n_new) admission plan."""
+        tr = self._trace
+        tr.req_mark(req.rid, "submit")  # direct-admission callers
+        tr.req_mark(req.rid, "admit")
+        plen = int(np.asarray(req.prompt).shape[-1])
+        t0p = time.perf_counter()
         prompt = jnp.asarray(np.asarray(req.prompt)[None, :], jnp.int32)
         row = self.model.init_cache(
             1, self.s_max, policy=self.policy, rots=self._rots_copy(),
@@ -1021,8 +1083,10 @@ class BatchEngine:
         )
         logits, row = self._prefill_fn(self.params, prompt, row)
         tok0 = self._draw_tok0(req, logits)
-        self._insert_row(req, slot, row, tok0,
-                         int(np.asarray(req.prompt).shape[-1]), plan)
+        self._insert_row(req, slot, row, tok0, plen, plan)
+        tr.span_at("engine.prefill", t0p, cat="prefill", rid=req.rid,
+                   tokens=plen)
+        tr.req_add(req.rid, "prefill_s", time.perf_counter() - t0p)
         return self._post_insert(req, slot, tok0)
 
     def _draw_tok0(self, req: Request, logits) -> jax.Array:
@@ -1046,6 +1110,16 @@ class BatchEngine:
         share."""
         if self.paged:
             shared, n_new = plan
+            if req.rid not in self._admit_tier:
+                # monolithic/packed admissions attribute their tier
+                # here; chunked ones already did in _start_pending
+                if len(shared):
+                    self._record_tier(req.rid, "device")
+                    self._trace.instant("prefix.adopt", cat="prefix",
+                                        rid=req.rid, tier="device",
+                                        pages=int(len(shared)))
+                else:
+                    self._record_tier(req.rid, "miss")
             sp = np.full((self.max_pages,), NULL_PAGE, np.int32)
             sp[:len(shared)] = shared
             self.cache, self.tok = self._insert_paged_fn(
@@ -1060,6 +1134,7 @@ class BatchEngine:
             self._sync_pool()
             self._register_prefix(req, slot)
         else:
+            self._record_tier(req.rid, "none")
             self.cache, self.tok = self._insert_fn(
                 self.cache, row, jnp.asarray(slot), self.tok, tok0
             )
@@ -1082,6 +1157,7 @@ class BatchEngine:
         once the row is in the slot cache and ``tok0`` is drawn."""
         t0 = int(tok0[0, 0])
         self._slot_req[slot] = req
+        self._trace.req_mark(req.rid, "first_token")
         if self.spec_k is not None:
             self._seed_hist(slot, req, t0)
         if req.resume_tok is not None:
@@ -1170,6 +1246,8 @@ class BatchEngine:
         the raw bf16 K/V side buffers, reserve ``slot``, and -- paged +
         reuse -- seed the row from a donor's resident pages so chunking
         skips the shared tokens entirely."""
+        tr = self._trace
+        tr.req_mark(req.rid, "admit")
         prompt = np.asarray(req.prompt, np.int32)
         n_total = int(prompt.shape[-1])
         row = self.model.init_cache(
@@ -1201,6 +1279,10 @@ class BatchEngine:
                 self.n_restored_pages += len(host_payloads)
                 self.n_restored_tokens += host_t
                 self.n_reuse_hits_host += 1
+                self._record_tier(req.rid, "host")
+                tr.instant("prefix.restore", cat="prefix", rid=req.rid,
+                           tier="host", pages=len(host_payloads),
+                           tokens=host_t)
             elif shared_t:
                 pages = np.full((self.max_pages,), NULL_PAGE, np.int32)
                 npg = -(-shared_t // self.page_size)
@@ -1208,8 +1290,13 @@ class BatchEngine:
                 row = self._seed_fn(row, self.cache, jnp.asarray(pages),
                                     jnp.asarray(shared_t, jnp.int32))
                 self.n_reuse_hits_device += 1
+                self._record_tier(req.rid, "device")
+                tr.instant("prefix.adopt", cat="prefix", rid=req.rid,
+                           tier="device", pages=int(npg), tokens=shared_t)
             else:
                 self.n_reuse_misses += 1
+                self._record_tier(req.rid, "miss")
+                tr.instant("prefix.miss", cat="prefix", rid=req.rid)
         cfg = self.model.cfg
         if shared_t:
             raw_k, raw_v = self._raw_view_fn(row, shared_t, n_total)
@@ -1283,6 +1370,10 @@ class BatchEngine:
         self._slot_toks[slot] = []
         self.active[slot] = False
         self.budget[slot] = 0
+        self._count_outcome(req.rid, reason)
+        self._trace.req_done(req.rid)
+        self._trace.instant("req.retire", cat="request", rid=req.rid,
+                            reason=reason, tokens=int(len(toks)))
         return Completion(
             rid=req.rid, prompt_len=plen,
             tokens=toks, finish_reason=reason,
@@ -1299,6 +1390,8 @@ class BatchEngine:
         if self.paged:
             toks = self._carried.pop(req.rid, []) + toks
             plen, max_new = self._orig.pop(req.rid, (plen, max_new))
+        self._count_outcome(req.rid, "cancelled")
+        self._trace.req_done(req.rid)
         return Completion(
             rid=req.rid, prompt_len=plen,
             tokens=np.asarray(toks, np.int32), finish_reason="cancelled",
@@ -1430,15 +1523,27 @@ class BatchEngine:
     def _admit_packed_locked(self, reqs: list[Request],
                              slots: list[int]) -> None:
         k = len(reqs)
+        tr = self._trace
+        for req in reqs:
+            tr.req_mark(req.rid, "submit")  # direct callers (no submit())
+            tr.req_mark(req.rid, "admit")
         prompts = jnp.asarray(
             np.stack([np.asarray(r.prompt, np.int32) for r in reqs])
         )
         L = int(prompts.shape[-1])
+        t0p = time.perf_counter()
         staged = self.model.init_cache(
             k, self.s_max, policy=self.policy, rots=self._rots_copy(),
             key=self._init_key, ragged=True,
         )
         logits, staged = self._prefill_fn(self.params, prompts, staged)
+        tr.span_at("prefill.packed", t0p, cat="prefill", rows=k, tokens=L,
+                   rids=[r.rid for r in reqs])
+        dt = time.perf_counter() - t0p
+        for req in reqs:
+            # the group shares one dispatch; each request is attributed
+            # the full group duration (it waited on all of it)
+            tr.req_add(req.rid, "prefill_s", dt)
         events: list[tuple[int, list[int]]] = []
         completions: list[Completion] = []
         round_start = self._admit_seq if self.paged else 0
@@ -1496,6 +1601,7 @@ class BatchEngine:
             while pend.n_done < pend.n_total and (
                     spent == 0 or spent < self.prefill_budget):
                 C = min(self.prefill_chunk, pend.n_total - pend.n_done)
+                t0c = time.perf_counter()
                 toks = jnp.asarray(
                     prompt[None, pend.n_done:pend.n_done + C]
                 )
@@ -1506,6 +1612,11 @@ class BatchEngine:
                 pend.n_done += C
                 spent += C
                 self.n_prefill_chunks += 1
+                self._trace.span_at("prefill.chunk", t0c, cat="prefill",
+                                    rid=pend.req.rid, tokens=C,
+                                    done=pend.n_done, total=pend.n_total)
+                self._trace.req_add(pend.req.rid, "prefill_s",
+                                    time.perf_counter() - t0c)
             if pend.n_done < pend.n_total:
                 return  # budget exhausted; decode now
             ok, ev, comps = self._finalize_pending(round_start)
@@ -1524,8 +1635,12 @@ class BatchEngine:
         request.  ``step_listeners`` receive the same pair before it is
         returned (still under the engine lock)."""
         with self.lock:
+            t0 = time.perf_counter()
             events, completions = self._step_locked()
             self._notify(events, completions)
+            self._trace.span_at("engine.step", t0, cat="engine",
+                                streams=len(events),
+                                retired=len(completions))
             return events, completions
 
     def _step_locked(self
@@ -1548,6 +1663,8 @@ class BatchEngine:
         # tokens (clipped to the longest remaining budget -- no masked
         # tail steps when every live request is nearly done)
         n_steps = int(min(self.chunk, self.budget[self.active].max()))
+        t0d = time.perf_counter()
+        n_live = int(self.active.sum())
         self._sample_key, sub = jax.random.split(self._sample_key)
         if self.spec_k is not None:
             # each scan step is one verify pass emitting 1..spec_k
@@ -1571,6 +1688,13 @@ class BatchEngine:
         valid = np.asarray(valid)
         self.budget = np.asarray(budget_dev).copy()
         still_active = np.asarray(active_dev)
+        self._trace.span_at("decode.chunk", t0d, cat="decode",
+                            steps=n_steps, rows=n_live,
+                            spec=self.spec_k is not None)
+        if self.spec_k is not None:
+            self._trace.instant("spec.verify", cat="spec",
+                                drafted=int(nd), accepted=int(na),
+                                rejected=int(nd) - int(na))
 
         for slot in range(self.capacity):
             req = self._slot_req[slot]

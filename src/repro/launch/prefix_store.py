@@ -102,6 +102,10 @@ class PrefixStore:
         self.evictions = 0     # dropped outright (no disk tier)
         self.disk_spills = 0
         self.disk_loads = 0
+        # optional TraceRecorder (duck-typed: the engine assigns its
+        # own; importing server.tracing here would cycle through
+        # repro.launch.server -> pipeline -> batch_engine -> this)
+        self.trace = None
 
     # ------------------------------------------------------------- disk tier
     def _disk_path(self, key: bytes) -> str:
@@ -165,6 +169,9 @@ class PrefixStore:
                 self._entries.move_to_end(victim_key, last=False)
                 self.disk_bytes += dent.nbytes
                 self.disk_spills += 1
+                if self.trace is not None:
+                    self.trace.instant("store.spill", cat="offload",
+                                       tier="disk", bytes=dent.nbytes)
             else:
                 self.evictions += 1
 
@@ -225,6 +232,9 @@ class PrefixStore:
                     self.misses += 1
                     return None
                 self.disk_loads += 1
+                if self.trace is not None:
+                    self.trace.instant("store.load", cat="offload",
+                                       tier="disk", bytes=ent.nbytes)
                 rent = _RamEntry(payload)
                 if rent.nbytes <= self.capacity_bytes:
                     self._entries[key] = rent

@@ -45,7 +45,9 @@ single-stream through launch/engine.py.
 from __future__ import annotations
 
 import argparse
+import itertools
 import json
+import os
 import signal
 import threading
 import time
@@ -62,7 +64,11 @@ from repro.core.transforms import Rotation
 from repro.data import DataIterator, SyntheticCorpus
 from repro.launch.batch_engine import BatchEngine
 from repro.launch.engine import Engine, Sampler
-from repro.launch.server import CompletionServer, ServingPipeline
+from repro.launch.server import (
+    CompletionServer,
+    ServingPipeline,
+    TraceRecorder,
+)
 from repro.launch.server.stats import cache_report_data
 from repro.launch.server.trace import make_requests
 from repro.launch.train import smoke_config
@@ -178,6 +184,20 @@ def main():
     ap.add_argument("--stats-json", default=None,
                     help="write the cache/pool report (and, with "
                          "--http, server metrics) as JSON to this path")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the full trace-recorder ring as Chrome "
+                         "trace-event JSON here at exit (DESIGN.md §15; "
+                         "loads in Perfetto / chrome://tracing)")
+    ap.add_argument("--trace-buffer", type=int, default=65536,
+                    help="trace ring-buffer capacity in events "
+                         "(drop-oldest; bounds recorder memory)")
+    ap.add_argument("--no-trace", action="store_true",
+                    help="disable the trace recorder entirely (it is "
+                         "on by default: measured overhead is <=1% ITL)")
+    ap.add_argument("--flight-window", type=float, default=30.0,
+                    help="SIGUSR1 flight-recorder dump covers the last "
+                         "N seconds of the ring (post-hoc stall "
+                         "diagnosis on a live server)")
     ap.add_argument("--calibrate", action="store_true")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
@@ -245,6 +265,8 @@ def main():
             # last kept position (BatchEngine._validate enforces this)
             s_max += args.spec_k
         s_max += (-s_max) % max(window, 1)
+    trace = TraceRecorder(capacity=args.trace_buffer,
+                          enabled=not args.no_trace)
     engine = BatchEngine(
         model, params, capacity=args.max_batch, s_max=s_max,
         policy=policy, backend=backend, sampler=sampler,
@@ -253,8 +275,9 @@ def main():
         prefill_chunk=args.prefill_chunk,
         prefill_budget=args.prefill_budget,
         offload_bytes=args.offload_bytes, offload_dir=args.offload_dir,
-        spec_k=args.spec_k,
+        spec_k=args.spec_k, trace=trace,
     )
+    _install_flight_recorder(trace, args)
     pname = policy.name if policy is not None else "-"
     offload = (f", host offload {args.offload_bytes / 2**20:.0f} MiB"
                + (f" (+disk {args.offload_dir})" if args.offload_dir else "")
@@ -279,6 +302,38 @@ def main():
     return _serve_queue(engine, policy, args)
 
 
+def _install_flight_recorder(trace: TraceRecorder, args) -> None:
+    """SIGUSR1 -> dump the last ``--flight-window`` seconds of the
+    trace ring to disk (DESIGN.md §15): when a production stall is
+    noticed after the fact, the evidence is still in the buffer.  The
+    dump runs on its own thread -- the signal handler must not block
+    the interrupted serving thread on file IO."""
+    if not hasattr(signal, "SIGUSR1"):  # not on this platform
+        return
+    seq = itertools.count(1)
+
+    def _dump() -> None:
+        base = args.trace_out or "trace.json"
+        root, ext = os.path.splitext(base)
+        path = f"{root}.flight-{next(seq)}{ext or '.json'}"
+        n = trace.write(path, last_s=args.flight_window)
+        print(f"[trace] flight dump: {n} events "
+              f"(last {args.flight_window:g}s) -> {path}", flush=True)
+
+    def _handler(signum, frame):
+        threading.Thread(target=_dump, daemon=True).start()
+
+    signal.signal(signal.SIGUSR1, _handler)
+
+
+def _write_trace_out(trace: TraceRecorder, args) -> None:
+    if not args.trace_out:
+        return
+    n = trace.write(args.trace_out)
+    print(f"  [trace] wrote {n} events ({trace.dropped} dropped) "
+          f"-> {args.trace_out}")
+
+
 def _serve_queue(engine: BatchEngine, policy, args) -> None:
     """The closed-loop stdout path: a seeded mixed-length workload
     (launch/server/trace.py -- the load harness replays the same one)
@@ -293,6 +348,7 @@ def _serve_queue(engine: BatchEngine, policy, args) -> None:
     t0 = time.time()
     n_tok = 0
     done = []
+    timings = {}
     interrupted = False
     try:
         while engine.has_work:
@@ -302,6 +358,9 @@ def _serve_queue(engine: BatchEngine, policy, args) -> None:
             for comp in completions:
                 done.append(comp)
                 _print_completion(comp)
+                t = engine.trace.req_timing(comp.rid)
+                if t is not None:
+                    timings[str(comp.rid)] = t
     except KeyboardInterrupt:
         interrupted = True
         for comp in engine.cancel_all():
@@ -323,12 +382,16 @@ def _serve_queue(engine: BatchEngine, policy, args) -> None:
               f"drafted tokens accepted ({100 * rate:.0f}%; spec-k="
               f"{args.spec_k}, output bit-identical to plain decode)")
     data = _cache_report(policy, engine.cache.get("attn"), engine=engine)
-    _write_stats_json(args.stats_json, {
+    payload = {
         "mode": "queue", "interrupted": interrupted,
         "requests_done": len(done), "tokens": n_tok,
         "aggregate_tok_s": n_tok / max(t_total, 1e-9),
         "cache": data,
-    })
+    }
+    if timings:
+        payload["timings"] = timings
+    _write_stats_json(args.stats_json, payload)
+    _write_trace_out(engine.trace, args)
 
 
 def _serve_http(cfg, engine: BatchEngine, policy, args) -> None:
@@ -337,7 +400,8 @@ def _serve_http(cfg, engine: BatchEngine, policy, args) -> None:
     before exiting (slots retired, pages freed, final stats printed);
     a second SIGINT cancels the drain and closes streams with
     ``finish_reason="cancelled"``."""
-    pipeline = ServingPipeline(engine, admit_queue=args.admit_queue)
+    pipeline = ServingPipeline(engine, admit_queue=args.admit_queue,
+                               trace=engine.trace)
     pipeline.start()
     server = CompletionServer(pipeline, host=args.host, port=args.port,
                               vocab_size=cfg.vocab_size)
@@ -378,6 +442,7 @@ def _serve_http(cfg, engine: BatchEngine, policy, args) -> None:
             "mode": "http", "drained": drained, "server": snap,
             "queues": pipeline.queue_depths(), "cache": data,
         })
+        _write_trace_out(engine.trace, args)
 
 
 def _print_completion(comp) -> None:

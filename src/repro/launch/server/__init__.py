@@ -7,7 +7,9 @@ one batched prefill dispatch (admission.py), a stdlib-only HTTP/SSE
 front-end with /healthz and /metrics (http.py), seeded workload traces
 shared by the CLI and the load harness (trace.py), and the metrics /
 machine-readable cache-report helpers both serving paths print through
-(stats.py).
+(stats.py).  Request-scoped tracing + the engine flight recorder live
+in tracing.py (DESIGN.md §15) -- note trace.py (workload traces) and
+tracing.py (timeline recorder) are different modules.
 """
 from repro.launch.server.admission import BucketedAdmission
 from repro.launch.server.http import CompletionServer
@@ -24,6 +26,7 @@ from repro.launch.server.trace import (
     make_requests,
     make_trace,
 )
+from repro.launch.server.tracing import TraceRecorder
 
 __all__ = [
     "Backpressure",
@@ -35,6 +38,7 @@ __all__ = [
     "StreamEvent",
     "SyncServer",
     "TraceItem",
+    "TraceRecorder",
     "bucket_lengths",
     "cache_report_data",
     "make_requests",

@@ -114,6 +114,8 @@ class BucketedAdmission:
                 if k > eng.n_free_slots:
                     break  # the group waits whole; groups never reshape
                 group = [self._pending.popleft() for _ in range(k)]
+                eng.trace.instant("admit.group", cat="sched", rows=k,
+                                  tokens=_plen(group[0]))
                 eng.admit_packed(group)
                 self.n_groups += 1
                 self.n_packed += k

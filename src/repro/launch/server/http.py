@@ -16,8 +16,12 @@ Endpoints::
         rejected request consumed NOTHING engine-side (no PRNG split,
         no slot), so accepted streams are unaffected.
     GET /healthz           liveness + queue/slot snapshot
-    GET /metrics           Prometheus-style text (counters, TTFT/ITL
+    GET /metrics           strict-Prometheus text (counters, TTFT/ITL
                            quantiles, queue depths, pool utilization)
+    GET /debug/trace       Chrome trace-event JSON snapshot of the
+                           flight recorder (DESIGN.md §15) -- loads in
+                           Perfetto / chrome://tracing.  ``?last_s=N``
+                           restricts to the trailing N seconds.
 
 String prompts are byte-tokenized (token id = byte value, mod the
 vocab when it is smaller than 256) -- the same byte convention
@@ -27,7 +31,9 @@ from __future__ import annotations
 
 import itertools
 import json
+import time
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from urllib.parse import parse_qs, urlparse
 
 import numpy as np
 
@@ -67,17 +73,26 @@ class _Handler(BaseHTTPRequestHandler):
     # -------------------------------------------------------------- routes
     def do_GET(self):  # noqa: N802
         pipe = self.server.pipeline
-        if self.path == "/healthz":
+        parsed = urlparse(self.path)
+        if parsed.path == "/healthz":
             self._json(200, {
                 "ok": True,
                 "slots_active": pipe.engine.n_active,
                 "slots_capacity": pipe.engine.capacity,
                 **pipe.queue_depths(),
             })
-        elif self.path == "/metrics":
+        elif parsed.path == "/metrics":
             self._text(200, pipe.metrics_text(), "text/plain; version=0.0.4")
+        elif parsed.path == "/debug/trace":
+            try:
+                q = parse_qs(parsed.query)
+                last_s = float(q["last_s"][0]) if "last_s" in q else None
+            except (ValueError, TypeError):
+                self._json(400, {"error": "last_s must be a number"})
+                return
+            self._json(200, pipe.trace.export(last_s=last_s))
         else:
-            self._json(404, {"error": f"no route {self.path}"})
+            self._json(404, {"error": f"no route {parsed.path}"})
 
     def do_POST(self):  # noqa: N802
         if self.path != "/v1/completions":
@@ -107,18 +122,25 @@ class _Handler(BaseHTTPRequestHandler):
         except ValueError as e:  # engine-side validation (s_max etc.)
             self._json(400, {"error": str(e)})
             return
+        tr = self.server.pipeline.trace
+        t0 = time.perf_counter()
         if body.get("stream"):
             self._stream_sse(rid, stream)
+            tr.span_at("http.stream", t0, cat="http", rid=rid)
         else:
-            toks, text, reason = [], [], None
+            toks, text, reason, timing = [], [], None, None
             while reason is None:
                 ev = stream.get()
                 toks.extend(ev.tokens)
                 text.append(ev.text)
                 reason = ev.finish_reason
-            self._json(200, {"rid": rid, "tokens": toks,
-                             "text": "".join(text),
-                             "finish_reason": reason})
+                timing = ev.timing
+            resp = {"rid": rid, "tokens": toks, "text": "".join(text),
+                    "finish_reason": reason}
+            if timing is not None:
+                resp["timing"] = timing
+            self._json(200, resp)
+            tr.span_at("http.request", t0, cat="http", rid=rid)
 
     def _stream_sse(self, rid: int, stream) -> None:
         self.send_response(200)

@@ -50,6 +50,7 @@ from typing import Optional
 from repro.launch.batch_engine import BatchEngine, Completion, Request
 from repro.launch.server.admission import BucketedAdmission
 from repro.launch.server.stats import ServerMetrics
+from repro.launch.server.tracing import TraceRecorder
 
 __all__ = ["Backpressure", "StreamEvent", "TokenFanout",
            "ServingPipeline", "SyncServer", "drain_stream"]
@@ -80,6 +81,10 @@ class StreamEvent:
     text: str
     finish_reason: Optional[str] = None
     sse: str = ""
+    # final events only, tracing enabled: the per-request breakdown
+    # (queue_wait_s / prefill_s / decode_s / detok_s / total_s) from
+    # the trace recorder's lifecycle marks (DESIGN.md §15)
+    timing: Optional[dict] = None
 
 
 class TokenFanout:
@@ -89,8 +94,10 @@ class TokenFanout:
     (inline), so both paths pay the SAME per-token host work -- the
     load comparison then measures overlap, not work difference."""
 
-    def __init__(self, metrics: ServerMetrics):
+    def __init__(self, metrics: ServerMetrics, trace=None):
         self.metrics = metrics
+        self.trace = trace if trace is not None \
+            else TraceRecorder(capacity=1, enabled=False)
         # per-token host-work stand-in (seconds), default off.  The
         # smoke model's byte-detok costs microseconds where a real
         # tokenizer's BPE decode + chat-template/JSON work costs
@@ -127,9 +134,11 @@ class TokenFanout:
         events first, then completions -- a request finishing inside a
         batch streams its last tokens before its finish event."""
         m = self.metrics
+        tr = self.trace
         for rid, toks in events:
             if not toks:
                 continue
+            t0w = time.perf_counter()
             with self._lock:
                 q = self._streams.get(rid)
                 t_arr = self._t_arrival.get(rid)
@@ -155,6 +164,9 @@ class TokenFanout:
             if q is not None:
                 q.put(StreamEvent(rid=rid, tokens=toks, text=text,
                                   sse=sse))
+            tr.span_at("detok", t0w, cat="detok", rid=rid, n=len(toks))
+            tr.req_add(rid, "detok_s", time.perf_counter() - t0w)
+            tr.instant("tok.stream", cat="token", rid=rid, n=len(toks))
         for comp in completions:
             with self._lock:
                 q = self._streams.pop(comp.rid, None)
@@ -167,13 +179,18 @@ class TokenFanout:
                     m.completed += 1
                 if t_arr is not None:
                     m.e2e.record(t - t_arr)
+            # popping the timing closes the request's trace track: the
+            # "e" event lands HERE, after its last tokens streamed, so
+            # every tok.stream instant falls inside the request span
+            timing = tr.req_timing(comp.rid)
             if q is not None:
-                sse = json.dumps({"rid": comp.rid, "tokens": [],
-                                  "text": "",
-                                  "finish_reason": comp.finish_reason})
+                payload = {"rid": comp.rid, "tokens": [], "text": "",
+                           "finish_reason": comp.finish_reason}
+                if timing is not None:
+                    payload["timing"] = timing
                 q.put(StreamEvent(rid=comp.rid, tokens=[], text="",
                                   finish_reason=comp.finish_reason,
-                                  sse=sse))
+                                  sse=json.dumps(payload), timing=timing))
 
     def close_all(self, reason: str) -> None:
         """Finish every still-open stream (shutdown: requests that
@@ -186,6 +203,7 @@ class TokenFanout:
         for rid, q in left:
             with self.metrics.lock:
                 self.metrics.cancelled += 1
+            self.trace.req_timing(rid)  # close the trace track, if any
             sse = json.dumps({"rid": rid, "tokens": [], "text": "",
                               "finish_reason": reason})
             q.put(StreamEvent(rid=rid, tokens=[], text="",
@@ -218,8 +236,18 @@ class ServingPipeline:
     def __init__(self, engine: BatchEngine, *,
                  max_group: Optional[int] = None,
                  admit_queue: int = 64, detok_queue: int = 256,
-                 admit_hold_s: float = 0.002):
+                 admit_hold_s: float = 0.002,
+                 trace: Optional[TraceRecorder] = None):
         self.engine = engine
+        # one recorder per serving stack (DESIGN.md §15): adopt the
+        # engine's if the caller already enabled one there, otherwise
+        # create our own (tracing is on by default -- the load bench
+        # holds it to <=1% ITL overhead) and point the engine at it.
+        if trace is None:
+            trace = engine.trace if engine.trace.enabled \
+                else TraceRecorder()
+        self.trace = trace
+        engine.trace = trace
         # micro-batching hold-off: a PARTIAL head group whose newest
         # arrival is younger than this waits one beat before admission
         # fires, so a burst of same-length arrivals lands as ONE packed
@@ -229,7 +257,7 @@ class ServingPipeline:
         # drains never wait.
         self.admit_hold_s = admit_hold_s
         self.metrics = ServerMetrics()
-        self.fanout = TokenFanout(self.metrics)
+        self.fanout = TokenFanout(self.metrics, trace=self.trace)
         self.bucketizer = BucketedAdmission(engine, max_group=max_group)
         self.admit_queue_cap = admit_queue
         self._admit_q: "queue.Queue[Request]" = queue.Queue(
@@ -324,7 +352,7 @@ class ServingPipeline:
                                retry_after=self._retry_after())
         # validate NOW (raises ValueError -> HTTP 400): a bad request
         # must bounce at intake, not blow up the admission thread later
-        self.engine._validate(req)
+        plen = self.engine._validate(req)
         t = time.perf_counter()
         stream = self.fanout.register(req.rid, t)
         try:
@@ -333,12 +361,18 @@ class ServingPipeline:
             self.fanout.unregister(req.rid)
             with self.metrics.lock:
                 self.metrics.rejected += 1
+            self.trace.instant("req.reject", cat="request", rid=req.rid,
+                               reason="queue_full")
             raise Backpressure(
                 f"admission queue full ({self.admit_queue_cap})",
                 retry_after=self._retry_after(),
             ) from None
         with self.metrics.lock:
             self.metrics.received += 1
+        self.trace.req_mark(req.rid, "submit")
+        self.trace.instant("req.submit", cat="request", rid=req.rid,
+                           prompt_len=plen,
+                           max_new=req.max_new_tokens)
         self._admit_wake.set()
         return stream
 
@@ -410,10 +444,23 @@ class ServingPipeline:
             gauges["spec_k"] = eng.spec_k
             gauges["spec_tokens_drafted_total"] = int(eng.n_drafted)
             gauges["spec_tokens_accepted_total"] = int(eng.n_accepted)
+            gauges["spec_tokens_rejected_total"] = int(eng.n_rejected)
             gauges["spec_acceptance_rate"] = float(
                 eng.n_accepted / max(eng.n_drafted, 1)
             )
-        return self.metrics.render_prometheus(gauges)
+        gauges["trace_events"] = len(self.trace)
+        gauges["trace_dropped_total"] = self.trace.dropped
+        labeled = {}
+        outcomes = getattr(eng, "tier_outcomes", None)
+        if outcomes:
+            labeled["prefix_tier_requests_total"] = (
+                "counter",
+                "Retired requests by admission prefix tier and outcome",
+                [({"tier": tier, "outcome": oc}, n)
+                 for tier, byo in sorted(outcomes.items())
+                 for oc, n in sorted(byo.items())],
+            )
+        return self.metrics.render_prometheus(gauges, labeled)
 
     # ------------------------------------------------------------ stage loops
     def _on_step(self, events: list, completions: list[Completion]) -> None:
@@ -451,10 +498,19 @@ class ServingPipeline:
                 if hold:
                     # partial group, arrivals still landing: wait one
                     # beat so the burst packs into one dispatch
+                    self.trace.instant(
+                        "admit.hold", cat="sched",
+                        head_group=self.bucketizer.head_group_len(),
+                        depth=self.bucketizer.depth,
+                    )
                     time.sleep(min(self.admit_hold_s, 0.001))
                     self._admit_wake.set()
                 else:
-                    self.bucketizer.admit()
+                    t0a = time.perf_counter()
+                    moved = self.bucketizer.admit()
+                    if moved:
+                        self.trace.span_at("admit.sweep", t0a,
+                                           cat="sched", admitted=moved)
             if self.engine.has_work:
                 self._work_wake.set()
 
@@ -486,10 +542,16 @@ class SyncServer:
     the pipeline must beat."""
 
     def __init__(self, engine: BatchEngine, *,
-                 max_group: Optional[int] = None):
+                 max_group: Optional[int] = None,
+                 trace: Optional[TraceRecorder] = None):
         self.engine = engine
+        if trace is None:
+            trace = engine.trace if engine.trace.enabled \
+                else TraceRecorder()
+        self.trace = trace
+        engine.trace = trace
         self.metrics = ServerMetrics()
-        self.fanout = TokenFanout(self.metrics)
+        self.fanout = TokenFanout(self.metrics, trace=self.trace)
         self.bucketizer = BucketedAdmission(engine, max_group=max_group)
         self._listener = self._on_step
         engine.step_listeners.append(self._listener)
@@ -498,10 +560,13 @@ class SyncServer:
         self.fanout.process(events, completions, time.perf_counter())
 
     def submit(self, req: Request) -> queue.Queue:
-        self.engine._validate(req)
+        plen = self.engine._validate(req)
         stream = self.fanout.register(req.rid, time.perf_counter())
         with self.metrics.lock:
             self.metrics.received += 1
+        self.trace.req_mark(req.rid, "submit")
+        self.trace.instant("req.submit", cat="request", rid=req.rid,
+                           prompt_len=plen, max_new=req.max_new_tokens)
         self.bucketizer.offer(req)
         return stream
 

@@ -12,12 +12,33 @@ of parsing stdout.
 from __future__ import annotations
 
 import random
+import re
 import threading
 from typing import Optional
 
 import numpy as np
 
-__all__ = ["Histogram", "ServerMetrics", "cache_report_data"]
+__all__ = ["Histogram", "ServerMetrics", "cache_report_data",
+           "sanitize_metric_name"]
+
+_NAME_OK = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+
+
+def sanitize_metric_name(name: str) -> str:
+    """Coerce a caller-supplied gauge name into the Prometheus metric
+    name charset ``[a-zA-Z_:][a-zA-Z0-9_:]*`` (strict scrapers reject
+    anything else).  Invalid characters map to ``_``."""
+    if _NAME_OK.match(name):
+        return name
+    name = re.sub(r"[^a-zA-Z0-9_:]", "_", name)
+    if not name or not re.match(r"[a-zA-Z_:]", name[0]):
+        name = "_" + name
+    return name
+
+
+def _escape_label(value: str) -> str:
+    return (str(value).replace("\\", r"\\").replace("\n", r"\n")
+            .replace('"', r'\"'))
 
 
 class Histogram:
@@ -105,31 +126,69 @@ class ServerMetrics:
                 "e2e_s": self.e2e.summary(),
             }
 
-    def render_prometheus(self, gauges: Optional[dict] = None) -> str:
-        """Prometheus-style text exposition for ``/metrics``: the
-        counters/histograms here plus caller-supplied point-in-time
-        gauges (queue depths, slot occupancy, pool utilization)."""
+    _COUNTER_HELP = {
+        "requests_received": "Requests accepted at intake",
+        "requests_rejected": "Requests bounced with 429 backpressure",
+        "requests_completed": "Requests finished (eos or length)",
+        "requests_cancelled": "Requests cancelled before completion",
+        "tokens_streamed": "Tokens pushed to client streams",
+    }
+    _SUMMARY_HELP = {
+        "ttft": "Arrival to first streamed token, seconds",
+        "itl": "Inter-token latency, seconds",
+        "e2e": "Arrival to completion, seconds",
+    }
+
+    def render_prometheus(self, gauges: Optional[dict] = None,
+                          labeled: Optional[dict] = None) -> str:
+        """Strict-Prometheus text exposition for ``/metrics``.
+
+        Every metric family gets ``# HELP``/``# TYPE`` lines and
+        caller-supplied gauge names are sanitized to the metric-name
+        charset, so strict scrapers parse the page.  ``gauges`` are
+        point-in-time values (queue depths, slot occupancy, pool
+        utilization; names ending ``_total`` are typed counter).
+        ``labeled`` maps family name -> (type, help, [(labels, value)])
+        for labelled sample sets such as per-tier request outcomes.
+        """
         snap = self.snapshot()
-        lines = [
-            f"server_requests_received_total {snap['requests_received']}",
-            f"server_requests_rejected_total {snap['requests_rejected']}",
-            f"server_requests_completed_total {snap['requests_completed']}",
-            f"server_requests_cancelled_total {snap['requests_cancelled']}",
-            f"server_tokens_streamed_total {snap['tokens_streamed']}",
-        ]
-        for name in ("ttft", "itl", "e2e"):
+        lines: list[str] = []
+
+        def fam(name: str, typ: str, help_: str, samples) -> None:
+            lines.append(f"# HELP {name} {help_}")
+            lines.append(f"# TYPE {name} {typ}")
+            lines.extend(samples)
+
+        def fmt(val) -> str:
+            if isinstance(val, bool):
+                return str(int(val))
+            return f"{val:g}" if isinstance(val, float) else f"{val}"
+
+        for key, help_ in self._COUNTER_HELP.items():
+            fam(f"server_{key}_total", "counter", help_,
+                [f"server_{key}_total {snap[key]}"])
+        for name, help_ in self._SUMMARY_HELP.items():
             s = snap[f"{name}_s"]
-            lines.append(
-                f'server_{name}_seconds{{quantile="0.5"}} {s["p50"]:.6f}'
-            )
-            lines.append(
-                f'server_{name}_seconds{{quantile="0.99"}} {s["p99"]:.6f}'
-            )
-            lines.append(f"server_{name}_seconds_count {s['count']}")
-            lines.append(f"server_{name}_seconds_sum {s['sum']:.6f}")
+            base = f"server_{name}_seconds"
+            fam(base, "summary", help_, [
+                f'{base}{{quantile="0.5"}} {s["p50"]:.6f}',
+                f'{base}{{quantile="0.99"}} {s["p99"]:.6f}',
+                f"{base}_count {s['count']}",
+                f"{base}_sum {s['sum']:.6f}",
+            ])
         for key, val in (gauges or {}).items():
-            lines.append(f"server_{key} {val:g}" if isinstance(val, float)
-                         else f"server_{key} {val}")
+            name = sanitize_metric_name(f"server_{key}")
+            typ = "counter" if name.endswith("_total") else "gauge"
+            fam(name, typ, f"Point-in-time {key}", [f"{name} {fmt(val)}"])
+        for key, (typ, help_, samples) in (labeled or {}).items():
+            name = sanitize_metric_name(f"server_{key}")
+            rendered = []
+            for labels, val in samples:
+                lbl = ",".join(
+                    f'{sanitize_metric_name(k)}="{_escape_label(v)}"'
+                    for k, v in sorted(labels.items()))
+                rendered.append(f"{name}{{{lbl}}} {fmt(val)}")
+            fam(name, typ, help_, rendered)
         return "\n".join(lines) + "\n"
 
 
@@ -160,7 +219,15 @@ def cache_report_data(policy, state, engine=None) -> dict:
         out["spec_k"] = engine.spec_k
         out["spec_tokens_drafted"] = int(engine.n_drafted)
         out["spec_tokens_accepted"] = int(engine.n_accepted)
+        out["spec_tokens_rejected"] = int(engine.n_rejected)
         out["spec_acceptance_rate"] = (
             engine.n_accepted / max(engine.n_drafted, 1)
         )
+    if engine is not None and getattr(engine, "tier_outcomes", None) \
+            is not None:
+        # which prefix tier each retired request was admitted from
+        # (device COW / host restore / miss / none), split by outcome
+        out["prefix_tier_outcomes"] = {
+            tier: dict(byo) for tier, byo in engine.tier_outcomes.items()
+        }
     return out

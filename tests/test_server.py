@@ -475,6 +475,37 @@ def test_histogram_bounded_memory_and_sum():
     assert "server_itl_seconds_sum 0.000000" in text
 
 
+def test_histogram_default_cap_exact_aggregates_past_4096():
+    """Past the DEFAULT reservoir cap (4096) the aggregate statistics
+    stay exact -- only quantiles degrade to reservoir estimates -- and
+    two identical streams still summarize identically (the reservoir
+    RNG is seeded)."""
+    n = 5000
+    h = Histogram()
+    for i in range(n):
+        h.record(i * 0.001)
+    assert len(h._v) == 4096  # reservoir capped at the default
+    assert h.count == n and h.sum == pytest.approx(
+        sum(i * 0.001 for i in range(n)))
+    s = h.summary()
+    assert s["count"] == n
+    assert s["max"] == pytest.approx((n - 1) * 0.001)
+    assert s["mean"] == pytest.approx(s["sum"] / n)
+    # the reservoir is a uniform sample of a uniform ramp: its median
+    # estimate lands inside the ramp, not at an endpoint
+    assert 0.0 < s["p50"] < (n - 1) * 0.001
+    h2 = Histogram()
+    for i in range(n):
+        h2.record(i * 0.001)
+    assert h2.summary() == s  # deterministic quantile estimates
+
+
+def test_histogram_cap_validation():
+    for bad in (0, -1, -4096):
+        with pytest.raises(ValueError, match="cap"):
+            Histogram(cap=bad)
+
+
 def test_backpressure_carries_retry_after(lm):
     """ISSUE-8 bugfix: a 429 must tell clients WHEN to retry.  Both
     rejection paths (queue full, draining) raise Backpressure with an
