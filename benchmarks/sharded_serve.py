@@ -1,0 +1,176 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Mesh-sharded serving benchmark (DESIGN.md §16).
+
+Runs the SAME mixed-length request queue through the continuous-
+batching engine twice -- single-device, then mesh-sharded (KV pools
+split by KV head over the 'model' axis of a simulated 8-device host
+mesh, params and scheduler state replicated) -- and records decode
+throughput for both, for dense and paged layouts.
+
+The headline here is NOT the tok/s delta: on a simulated mesh all 8
+"devices" share one CPU's bandwidth, so sharding only adds collective
+overhead (the `sharded_measured` rows are honest about that -- see
+benchmarks/README.md for why the win on real hardware is the per-device
+HBM footprint, column `per_shard_bytes`).  The headline is the
+``sharded_bit_identical`` claim: every per-row token stream AND finish
+reason from the sharded engine must equal the single-device run exactly
+-- parity is asserted before any timing is recorded, and the claim
+(plus rows) is MERGED into BENCH_decode.json without clobbering the
+e2e_decode record this file extends.
+
+Usage:
+    PYTHONPATH=src python benchmarks/sharded_serve.py [--smoke]
+        [--requests N] [--prompt-len L] [--new-tokens T] [--capacity C]
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+
+if __package__ in (None, ""):  # `python benchmarks/sharded_serve.py`
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from benchmarks.common import fmt_table, save_record  # noqa: E402
+from repro.configs.paper_models import SMOL_D64  # noqa: E402
+from repro.launch.batch_engine import BatchEngine, Request  # noqa: E402
+from repro.launch.server.trace import make_requests  # noqa: E402
+from repro.models import build_model  # noqa: E402
+
+ROOT_RECORD = os.path.join(
+    os.path.dirname(__file__), "..", "BENCH_decode.json"
+)
+
+
+def _build_mesh():
+    from jax.sharding import Mesh
+
+    devs = jax.devices()
+    assert len(devs) >= 8, (
+        f"sharded bench needs the simulated 8-device mesh, got "
+        f"{len(devs)} (the module-top XLA_FLAGS must run before jax "
+        f"imports -- do not import this file after initializing jax)"
+    )
+    # a true 8-way mesh; 'model' (=2) divides SMOL_D64's Hkv=2
+    return Mesh(np.array(devs[:8]).reshape(4, 2), ("data", "model"))
+
+
+def _serve(model, params, reqs, *, mesh, policy, paged, capacity,
+           s_max, chunk):
+    eng = BatchEngine(
+        model, params, capacity=capacity, s_max=s_max, policy=policy,
+        backend="gather", chunk=chunk, key=jax.random.PRNGKey(7),
+        paged=paged, page_size=16, mesh=mesh,
+    )
+    streams = {}
+    t0 = time.perf_counter()
+    for comp in eng.run([Request(rid=r.rid, prompt=np.asarray(r.prompt),
+                                 max_new_tokens=r.max_new_tokens)
+                         for r in reqs]):
+        streams[comp.rid] = (tuple(map(int, comp.tokens)),
+                             comp.finish_reason)
+    dt = time.perf_counter() - t0
+    n_tok = sum(len(s[0]) for s in streams.values())
+    per_shard = eng.cache["attn"].nbytes(per_shard=True)
+    return streams, n_tok / dt, dt, per_shard, eng
+
+
+def run(requests: int, prompt_len: int, new_tokens: int, capacity: int,
+        chunk: int, smoke: bool):
+    mesh = _build_mesh()
+    model = build_model(SMOL_D64)
+    params = model.init(jax.random.PRNGKey(0))
+    reqs = make_requests(requests, prompt_len=prompt_len,
+                         new_tokens=new_tokens, seed=3)
+    window = 16
+    s_max = prompt_len + new_tokens + window
+    s_max += (-s_max) % window
+
+    rows, all_equal = [], True
+    for policy in ("bf16", "int4-srft"):
+        for paged in (False, True):
+            kw = dict(policy=policy, paged=paged, capacity=capacity,
+                      s_max=s_max, chunk=chunk)
+            # warm both engines once so rows time steady-state decode,
+            # not XLA compilation (the e2e_decode warm-pass idiom)
+            _serve(model, params, reqs, mesh=None, **kw)
+            ref, tok_s_1, dt1, bytes_1, _ = _serve(
+                model, params, reqs, mesh=None, **kw)
+            _serve(model, params, reqs, mesh=mesh, **kw)
+            got, tok_s_8, dt8, bytes_8, _ = _serve(
+                model, params, reqs, mesh=mesh, **kw)
+            equal = got == ref
+            all_equal &= equal
+            layout = "paged" if paged else "dense"
+            rows.append({
+                "policy": policy, "layout": layout,
+                "mesh": f"{mesh.shape['data']}x{mesh.shape['model']}",
+                "requests": requests, "n_new": new_tokens,
+                "tok_s_single": round(tok_s_1, 1),
+                "tok_s_sharded": round(tok_s_8, 1),
+                "per_shard_bytes_single": int(bytes_1),
+                "per_shard_bytes_sharded": int(bytes_8),
+                "bit_identical": bool(equal),
+            })
+            print(f"[{policy}/{layout}] single {tok_s_1:.1f} tok/s, "
+                  f"sharded {tok_s_8:.1f} tok/s, per-shard KV "
+                  f"{bytes_1} -> {bytes_8} B, bit_identical={equal}")
+
+    shrink = [r["per_shard_bytes_single"] / r["per_shard_bytes_sharded"]
+              for r in rows]
+    claims = {
+        "sharded_bit_identical": bool(all_equal),
+        # the real-hardware motivation: each device holds 1/N of the KV
+        "sharded_kv_per_device_shrinks": bool(min(shrink) > 1.0),
+    }
+    print(fmt_table(
+        rows,
+        ["policy", "layout", "mesh", "tok_s_single", "tok_s_sharded",
+         "bit_identical"],
+    ))
+    print(f"claims: {claims}")
+
+    record = {"sharded_measured": rows, "smoke": bool(smoke),
+              "claims": claims}
+    save_record("sharded_serve", record)
+
+    # merge into the repo-root perf trajectory WITHOUT clobbering the
+    # e2e_decode record this file extends (the serve_load.py pattern)
+    root = {}
+    if os.path.exists(ROOT_RECORD):
+        with open(ROOT_RECORD) as f:
+            root = json.load(f)
+    root["sharded_measured"] = rows
+    root.setdefault("claims", {}).update(claims)
+    with open(ROOT_RECORD, "w") as f:
+        json.dump(root, f, indent=2, default=float)
+    print(f"[record] merged into {os.path.abspath(ROOT_RECORD)}")
+    if not all_equal:
+        raise SystemExit("FAIL: sharded streams diverged from "
+                         "single-device")
+    return record
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="CI-sized run")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--new-tokens", type=int, default=24)
+    ap.add_argument("--capacity", type=int, default=4)
+    ap.add_argument("--chunk", type=int, default=8)
+    args = ap.parse_args()
+    if args.smoke:
+        args.requests = min(args.requests, 6)
+        args.prompt_len = min(args.prompt_len, 32)
+        args.new_tokens = min(args.new_tokens, 16)
+        args.capacity = min(args.capacity, 3)
+    run(args.requests, args.prompt_len, args.new_tokens, args.capacity,
+        args.chunk, args.smoke)

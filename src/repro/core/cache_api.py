@@ -63,6 +63,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import math
 import warnings
 from typing import Any, NamedTuple, Optional, Protocol, runtime_checkable
 
@@ -165,8 +166,10 @@ class CacheState:
         return isinstance(self.data, PagedData) \
             or isinstance(getattr(self.data, "kv", None), PagedData)
 
-    def nbytes(self, *, persistent_only: bool = True) -> int:
-        return self.policy.nbytes(self, persistent_only=persistent_only)
+    def nbytes(self, *, persistent_only: bool = True,
+               per_shard: bool = False) -> int:
+        return self.policy.nbytes(self, persistent_only=persistent_only,
+                                  per_shard=per_shard)
 
 
 @runtime_checkable
@@ -410,16 +413,30 @@ class KVCachePolicy(Protocol):
         null scratch page) and every read path masks them."""
         ...
 
-    def nbytes(self, state: CacheState, *, persistent_only: bool = True
-               ) -> int:
+    def nbytes(self, state: CacheState, *, persistent_only: bool = True,
+               per_shard: bool = False) -> int:
         """Cache bytes.  ``persistent_only=True`` counts the O(S)
         persistent storage (paged states: the whole pool -- that is the
         allocation); False adds transient state (int4 residual window)
-        and, for paged states, page-table + allocator metadata."""
+        and, for paged states, page-table + allocator metadata.
+
+        GLOBAL-LOGICAL by default: on a mesh-sharded state the figure is
+        the whole cache, identical on every process, the same number a
+        single-device run reports.  ``per_shard=True`` instead counts
+        one device's resident bytes -- KV leaves shrink by the 'model'
+        factor while replicated metadata (page table, refcounts,
+        rotations) counts in full (DESIGN.md §16)."""
         ...
 
-    def compression_ratio(self, state: CacheState) -> float:
-        """bf16-equivalent bytes / persistent bytes (paper §4.5)."""
+    def compression_ratio(self, state: CacheState, *,
+                          per_shard: bool = False) -> float:
+        """bf16-equivalent bytes / persistent bytes (paper §4.5).
+
+        Global-logical by default (sharding-invariant).  With
+        ``per_shard=True`` both sides of the ratio are one device's
+        bytes -- for paged states this is slightly LOWER than the
+        global ratio because replicated paging metadata does not shrink
+        with the pool."""
         ...
 
 
@@ -485,8 +502,28 @@ def policy_from_config(cfg, policy: "KVCachePolicy | str | None" = None
     return policy
 
 
-def _leaf_bytes(*leaves) -> int:
-    return sum(x.size * jnp.dtype(x.dtype).itemsize for x in leaves)
+def _leaf_elems(x, *, per_shard: bool = False) -> int:
+    """Element count of one cache leaf.
+
+    Global-logical by default: ``x.size`` on a mesh-sharded jax array is
+    the full logical array, so every ``nbytes`` figure means "the
+    cache", independent of how many devices hold it.  With
+    ``per_shard=True`` the count is one device's addressable shard
+    (``sharding.shard_shape``); replicated leaves -- page tables,
+    refcounts, rotations -- count in FULL on every device, which is
+    exactly their footprint there."""
+    if per_shard:
+        sharding = getattr(x, "sharding", None)
+        if sharding is not None:
+            return int(math.prod(sharding.shard_shape(x.shape)))
+    return int(x.size)
+
+
+def _leaf_bytes(*leaves, per_shard: bool = False) -> int:
+    return sum(
+        _leaf_elems(x, per_shard=per_shard) * jnp.dtype(x.dtype).itemsize
+        for x in leaves
+    )
 
 
 def _export_pool_pages(pd, pages) -> tuple:
@@ -685,15 +722,16 @@ class BF16Policy:
     def with_rotations(self, state, rot_k, rot_v):
         return state  # no rotation state
 
-    def nbytes(self, state, *, persistent_only=True):
+    def nbytes(self, state, *, persistent_only=True, per_shard=False):
         if state.is_paged:
-            n = _leaf_bytes(*state.data.pools)
+            n = _leaf_bytes(*state.data.pools, per_shard=per_shard)
             if not persistent_only:
-                n += paged.meta_nbytes(state.data)
+                n += paged.meta_nbytes(state.data, per_shard=per_shard)
             return n
-        return _leaf_bytes(state.data.k, state.data.v)
+        return _leaf_bytes(state.data.k, state.data.v,
+                           per_shard=per_shard)
 
-    def compression_ratio(self, state) -> float:
+    def compression_ratio(self, state, *, per_shard=False) -> float:
         return 1.0
 
 
@@ -1026,34 +1064,40 @@ class Int4SRFTPolicy:
             d.kv, new_length, snap_k, snap_v, base_len
         )))
 
-    def nbytes(self, state, *, persistent_only=True):
+    def nbytes(self, state, *, persistent_only=True, per_shard=False):
         """Cache bytes.  ``persistent_only`` counts the O(S) packed codes +
         scales (for paged states: the whole page pool -- that is the
         allocation, mirroring how dense states count their full
         capacity); otherwise the O(W) fp32 residual window and, for
         paged states, the page-table + allocator metadata are included.
         The rotation matrices are excluded either way: they are O(d^2)
-        model constants (parameters), not per-token cache."""
+        model constants (parameters), not per-token cache.
+        ``per_shard``: one device's resident bytes instead of the
+        global-logical figure (protocol docstring)."""
         if state.is_paged:
             pd = state.data.kv
-            n = _leaf_bytes(*pd.pools)
+            n = _leaf_bytes(*pd.pools, per_shard=per_shard)
             if not persistent_only:
-                n += _leaf_bytes(*pd.residual) + paged.meta_nbytes(pd)
+                n += _leaf_bytes(*pd.residual, per_shard=per_shard) \
+                    + paged.meta_nbytes(pd, per_shard=per_shard)
             return n
         kv = state.data.kv
-        n = _leaf_bytes(kv.k_packed, kv.k_scales, kv.v_packed, kv.v_scales)
+        n = _leaf_bytes(kv.k_packed, kv.k_scales, kv.v_packed,
+                        kv.v_scales, per_shard=per_shard)
         if not persistent_only:
-            n += _leaf_bytes(kv.k_residual, kv.v_residual)
+            n += _leaf_bytes(kv.k_residual, kv.v_residual,
+                             per_shard=per_shard)
         return n
 
-    def compression_ratio(self, state) -> float:
+    def compression_ratio(self, state, *, per_shard=False) -> float:
         """bf16-equivalent bytes / persistent bytes (paper §4.5)."""
         kv = state.data.kv
         k_packed = kv.pools[0] if state.is_paged else kv.k_packed
         d = k_packed.shape[-1] * 2
-        n_vectors = k_packed.size // (d // 2)  # K vectors incl. layer axis
+        # K vectors incl. layer axis (per-shard: this device's slice)
+        n_vectors = _leaf_elems(k_packed, per_shard=per_shard) // (d // 2)
         bf16 = 2 * 2 * n_vectors * d  # K and V at 2 B/coord
-        return bf16 / self.nbytes(state)
+        return bf16 / self.nbytes(state, per_shard=per_shard)
 
 
 # ---------------------------------------------------------------------------
@@ -1310,17 +1354,18 @@ class Int8PerTokenPolicy:
                 d.length.dtype)
         ))
 
-    def nbytes(self, state, *, persistent_only=True):
+    def nbytes(self, state, *, persistent_only=True, per_shard=False):
         d = state.data
         if state.is_paged:
-            n = _leaf_bytes(*d.pools)
+            n = _leaf_bytes(*d.pools, per_shard=per_shard)
             if not persistent_only:
-                n += paged.meta_nbytes(d)
+                n += paged.meta_nbytes(d, per_shard=per_shard)
             return n
-        return _leaf_bytes(d.k_codes, d.k_scales, d.v_codes, d.v_scales)
+        return _leaf_bytes(d.k_codes, d.k_scales, d.v_codes, d.v_scales,
+                           per_shard=per_shard)
 
-    def compression_ratio(self, state) -> float:
+    def compression_ratio(self, state, *, per_shard=False) -> float:
         d = state.data
         k_codes = d.pools[0] if state.is_paged else d.k_codes
-        bf16 = 2 * 2 * k_codes.size
-        return bf16 / self.nbytes(state)
+        bf16 = 2 * 2 * _leaf_elems(k_codes, per_shard=per_shard)
+        return bf16 / self.nbytes(state, per_shard=per_shard)

@@ -544,9 +544,26 @@ def int4_prefill_chunk_paged(pd: PagedData, rot_k, rot_v, k: jax.Array,
 # Accounting
 # ---------------------------------------------------------------------------
 
-def meta_nbytes(pd: PagedData) -> int:
+def meta_nbytes(pd: PagedData, *, per_shard: bool = False) -> int:
     """Bytes of paging metadata: page table + allocator refcounts.
     Counted under ``persistent_only=False`` so reported compression for
-    paged states is honest about the bookkeeping overhead."""
-    return (pd.page_table.size * pd.page_table.dtype.itemsize
-            + pd.pool.refcount.size * pd.pool.refcount.dtype.itemsize)
+    paged states is honest about the bookkeeping overhead.
+
+    Under mesh-sharded serving (DESIGN.md §16) this metadata is
+    REPLICATED -- every shard routes positions through the same page
+    table -- so the ``per_shard`` figure (one device's resident copy)
+    equals the global one; the flag exists so callers summing a
+    per-device footprint never double-book a "shard" of it."""
+
+    def elems(x) -> int:
+        if per_shard:
+            sharding = getattr(x, "sharding", None)
+            if sharding is not None:
+                n = 1
+                for s in sharding.shard_shape(x.shape):
+                    n *= int(s)
+                return n
+        return int(x.size)
+
+    return (elems(pd.page_table) * pd.page_table.dtype.itemsize
+            + elems(pd.pool.refcount) * pd.pool.refcount.dtype.itemsize)

@@ -88,9 +88,43 @@ class _Policy:
         return None
 
 
+class _ServeExact:
+    """Bit-exact tensor-parallel serving (DESIGN.md §16).
+
+    The serving stack shards the KV cache by head and replicates params
+    and scheduler state.  GSPMD's sharding propagation would otherwise
+    pull the Q/K/V projections and the ``wo`` contraction into
+    head-sharded partial computations -- numerically fine, but XLA:CPU
+    matmul reduction order depends on the operand widths (the §9
+    width-matched-oracle effect), so the stored cache bytes and logits
+    would drift from a single-device run in the last ulp.  This policy
+    pins those activations replicated: projections run at full logical
+    width (identical bytes), only the attend against the head-sharded
+    cache -- the bandwidth-dominant read -- is computed per shard, and
+    its per-head outputs are all-gathered (exact data movement) before
+    the full-width output projection.
+    """
+
+    def __init__(self, mesh):
+        self.mesh = mesh
+        self.name = "serve_exact"
+
+    def spec_for(self, kind: str, shape) -> P | None:
+        if kind in ("qkv_proj", "attn_out", "kv_full", "residual",
+                    "logits"):
+            return P()  # explicit full replication
+        return None
+
+
 @contextlib.contextmanager
 def use_policy(mesh, name: str = "sp_fsdp"):
-    tok = _ACTIVE.set(_Policy(mesh, name) if name != "baseline" else None)
+    if name == "baseline":
+        pol = None
+    elif name == "serve_exact":
+        pol = _ServeExact(mesh)
+    else:
+        pol = _Policy(mesh, name)
+    tok = _ACTIVE.set(pol)
     try:
         yield
     finally:

@@ -98,7 +98,9 @@ import numpy as np
 
 from repro.core.cache_api import AttendBackend
 from repro.core.paged import NULL_PAGE, PagedData
-from repro.launch.engine import GREEDY, Sampler, draft_tokens
+from repro.launch.engine import (
+    GREEDY, Sampler, draft_tokens, resolve_mesh_backend, _serve_policy_ctx,
+)
 from repro.launch.prefix_store import PrefixStore
 
 __all__ = ["Request", "Completion", "BatchEngine"]
@@ -180,7 +182,7 @@ class BatchEngine:
                  offload_bytes: Optional[int] = None,
                  offload_dir: Optional[str] = None,
                  spec_k: Optional[int] = None,
-                 trace=None):
+                 trace=None, mesh=None):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         if chunk < 1:
@@ -189,8 +191,14 @@ class BatchEngine:
         self.params = params
         self.capacity = capacity
         self.policy = model.cache_policy(policy)
-        self.backend = (
-            None if backend is None else AttendBackend.parse(backend)
+        # multi-device serving (DESIGN.md §16): KV pools sharded by head
+        # over the mesh's 'model' axis, scheduler state and params
+        # replicated.  All host-side bookkeeping below (mirrors, prefix
+        # index, admission control) is sharding-oblivious: readbacks see
+        # the same replicated metadata a single device would hold.
+        self.mesh = mesh
+        self.backend = resolve_mesh_backend(
+            None if backend is None else AttendBackend.parse(backend), mesh
         )
         self.sampler = sampler if sampler is not None else GREEDY
         self.kv_block = kv_block
@@ -319,13 +327,19 @@ class BatchEngine:
         # every cache here is eventually donated, and donating a buffer
         # that aliases the caller's ``rots`` would delete it out from
         # under the next admission.
-        self.cache = model.init_cache(
+        self.cache = self._shard_cache_tree(model.init_cache(
             capacity, s_max, policy=self.policy, rots=self._rots_copy(),
             key=self._init_key, ragged=True,
             n_pages=self.n_pages if paged else None,
             page_size=page_size if paged else None,
+        ))
+        if mesh is not None:
+            # replicate params + per-slot scheduler arrays: full-width
+            # (bit-exact) projections, and any device can own any slot
+            self.params = self._replicate_tree(params)
+        self.tok = self._replicate_tree(
+            jnp.zeros((capacity, 1), jnp.int32)  # last sampled
         )
-        self.tok = jnp.zeros((capacity, 1), jnp.int32)  # last sampled
         self.active = np.zeros((capacity,), bool)  # host mirror
         self.budget = np.zeros((capacity,), np.int32)  # decode steps left
         self._slot_req: list[Optional[Request]] = [None] * capacity
@@ -341,8 +355,10 @@ class BatchEngine:
             # pass writes spec_k wide at hlen, so s_max + spec_k covers
             # the k-wide tail write with room to spare.
             self._hist_cap = s_max + spec_k
-            self._hist = jnp.zeros((capacity, self._hist_cap), jnp.int32)
-            self._hlen = jnp.zeros((capacity,), jnp.int32)
+            self._hist = self._replicate_tree(
+                jnp.zeros((capacity, self._hist_cap), jnp.int32))
+            self._hlen = self._replicate_tree(
+                jnp.zeros((capacity,), jnp.int32))
             self._spec_chunk_fns: dict[int, Any] = {}
             self.n_drafted = 0   # draft positions scored (excl. bonus)
             self.n_accepted = 0  # draft positions accepted (excl. bonus)
@@ -401,41 +417,46 @@ class BatchEngine:
 
         # jit specializes per prompt-length shape on its own; one wrapper
         self._prefill_fn = jax.jit(
-            lambda p, t, c: self.model.prefill(p, t, c),
+            self._traced(lambda p, t, c: self.model.prefill(p, t, c)),
             donate_argnums=(2,) if donate else (),
         )
         self._chunk_fns: dict[int, Any] = {}
         self._insert_fn = jax.jit(
-            self._insert_impl, donate_argnums=(0,) if donate else ()
+            self._traced(self._insert_impl),
+            donate_argnums=(0,) if donate else ()
         )
         self._insert_paged_fn = jax.jit(
-            self._insert_paged_impl, donate_argnums=(0,) if donate else ()
+            self._traced(self._insert_paged_impl),
+            donate_argnums=(0,) if donate else ()
         )
         self._reset_fn = jax.jit(
-            self._reset_impl, donate_argnums=(0,) if donate else ()
+            self._traced(self._reset_impl),
+            donate_argnums=(0,) if donate else ()
         )
         # chunked prefill: one jitted chunk dispatch (specializes per
         # (chunk_len, prompt_len) shape pair -- same compilation economy
         # as _prefill_fn), plus the paged-reuse seed/backfill helpers
         self._chunk_prefill_fn = jax.jit(
-            lambda p, t, row, rk, rv: self.model.prefill_chunk(
+            self._traced(lambda p, t, row, rk, rv: self.model.prefill_chunk(
                 p, t, row, rk, rv
-            ),
+            )),
             donate_argnums=(2, 3, 4) if donate else (),
         )
         self._seed_fn = jax.jit(
-            self._seed_impl, donate_argnums=(0,) if donate else ()
+            self._traced(self._seed_impl),
+            donate_argnums=(0,) if donate else ()
         )
         self._import_fn = jax.jit(
-            self._import_impl, donate_argnums=(0,) if donate else ()
+            self._traced(self._import_impl),
+            donate_argnums=(0,) if donate else ()
         )
-        self._raw_view_fn = jax.jit(self._raw_view_impl,
+        self._raw_view_fn = jax.jit(self._traced(self._raw_view_impl),
                                     static_argnums=(1, 2))
         # packed admission (DESIGN.md §12): slice one row out of a
         # batch-k staging cache (the staging cache is reused for every
         # row, so it is NOT donated here)
         self._slice_axes: Optional[tuple] = None
-        self._slice_row_fn = jax.jit(self._slice_row_impl)
+        self._slice_row_fn = jax.jit(self._traced(self._slice_row_impl))
 
     @property
     def trace(self):
@@ -469,6 +490,42 @@ class BatchEngine:
     def _rots_copy(self):
         return None if self._rots is None \
             else jax.tree.map(jnp.copy, self._rots)
+
+    # ---------------------------------------------------------- mesh layout
+    def _traced(self, fn):
+        """Wrap a to-be-jitted callable so tracing runs under the
+        serve_exact activation policy when the engine has a mesh
+        (launch/act_sharding, DESIGN.md §16); identity otherwise."""
+        if self.mesh is None:
+            return fn
+
+        def inner(*args, **kwargs):
+            with _serve_policy_ctx(self.mesh):
+                return fn(*args, **kwargs)
+
+        return inner
+
+    def _shard_cache_tree(self, cache):
+        """Lay a cache pytree (the slot cache or a staging row) out
+        across the mesh: KV heads over 'model' where divisible, else
+        replication (partitioning.serve_cache_specs).  Staging rows get
+        the same layout as the slot cache, so ``insert_row``'s scatters
+        stay shard-local.  Identity without a mesh."""
+        if self.mesh is None:
+            return cache
+        from repro.launch import partitioning as pt
+
+        specs = pt.serve_cache_specs(cache, self.mesh)
+        return jax.device_put(cache, pt.make_shardings(specs, self.mesh))
+
+    def _replicate_tree(self, tree):
+        """Replicate every leaf across the mesh; identity without one."""
+        if self.mesh is None:
+            return tree
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        rep = NamedSharding(self.mesh, PartitionSpec())
+        return jax.device_put(tree, jax.tree.map(lambda _: rep, tree))
 
     # ------------------------------------------------------------ jit bodies
     def _insert_impl(self, batched, row, slot, tok_buf, tok0):
@@ -914,7 +971,8 @@ class BatchEngine:
                         jnp.moveaxis(toks, 0, 1),  # (capacity, n_steps)
                         jnp.moveaxis(valid, 0, 1))
 
-            fn = jax.jit(run, donate_argnums=(2,) if self.donate else ())
+            fn = jax.jit(self._traced(run),
+                         donate_argnums=(2,) if self.donate else ())
             self._chunk_fns[n_steps] = fn
         return fn
 
@@ -998,7 +1056,8 @@ class BatchEngine:
                         valid, nd, na)
 
             fn = jax.jit(
-                run, donate_argnums=(2, 5, 6) if self.donate else ()
+                self._traced(run),
+                donate_argnums=(2, 5, 6) if self.donate else ()
             )
             self._spec_chunk_fns[n_steps] = fn
         return fn
@@ -1077,10 +1136,10 @@ class BatchEngine:
         plen = int(np.asarray(req.prompt).shape[-1])
         t0p = time.perf_counter()
         prompt = jnp.asarray(np.asarray(req.prompt)[None, :], jnp.int32)
-        row = self.model.init_cache(
+        row = self._shard_cache_tree(self.model.init_cache(
             1, self.s_max, policy=self.policy, rots=self._rots_copy(),
             key=self._init_key, ragged=True,
-        )
+        ))
         logits, row = self._prefill_fn(self.params, prompt, row)
         tok0 = self._draw_tok0(req, logits)
         self._insert_row(req, slot, row, tok0, plen, plan)
@@ -1250,10 +1309,10 @@ class BatchEngine:
         tr.req_mark(req.rid, "admit")
         prompt = np.asarray(req.prompt, np.int32)
         n_total = int(prompt.shape[-1])
-        row = self.model.init_cache(
+        row = self._shard_cache_tree(self.model.init_cache(
             1, self.s_max, policy=self.policy, rots=self._rots_copy(),
             key=self._init_key, ragged=True,
-        )
+        ))
         # Preemption-resume continuations NEVER reuse (resume_tok
         # guard): recompute must rebuild the cache bytes the original
         # admission produced, and a quantized-policy reuse hit would
@@ -1532,10 +1591,10 @@ class BatchEngine:
         )
         L = int(prompts.shape[-1])
         t0p = time.perf_counter()
-        staged = self.model.init_cache(
+        staged = self._shard_cache_tree(self.model.init_cache(
             k, self.s_max, policy=self.policy, rots=self._rots_copy(),
             key=self._init_key, ragged=True,
-        )
+        ))
         logits, staged = self._prefill_fn(self.params, prompts, staged)
         tr.span_at("prefill.packed", t0p, cat="prefill", rows=k, tokens=L,
                    rids=[r.rid for r in reqs])

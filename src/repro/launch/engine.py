@@ -52,8 +52,10 @@ semantics for debugging.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
+import warnings
 from typing import Any, Optional
 
 import jax
@@ -62,6 +64,34 @@ import jax.numpy as jnp
 from repro.core.cache_api import AttendBackend
 
 __all__ = ["Sampler", "GREEDY", "Engine", "generate", "draft_tokens"]
+
+
+def resolve_mesh_backend(backend, mesh):
+    """KERNEL -> BLOCKWISE under a mesh (warn once per call site).
+
+    The Pallas decode kernel addresses one device's buffers; under GSPMD
+    auto-partitioning there is no shard_map wrapper for it yet, so
+    mesh-sharded engines serve the blockwise jnp path instead (same
+    masked-read semantics, proven bit-identical in tests/test_kernels).
+    """
+    if mesh is None or backend != AttendBackend.KERNEL:
+        return backend
+    warnings.warn(
+        "AttendBackend.KERNEL is single-device (Pallas); falling back to "
+        "BLOCKWISE for the mesh-sharded engine",
+        stacklevel=3,
+    )
+    return AttendBackend.BLOCKWISE
+
+
+def _serve_policy_ctx(mesh):
+    """Trace-time activation-sharding context: serve_exact under a mesh
+    (DESIGN.md §16), identity otherwise."""
+    if mesh is None:
+        return contextlib.nullcontext()
+    from repro.launch.act_sharding import use_policy
+
+    return use_policy(mesh, "serve_exact")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -151,22 +181,63 @@ class Engine:
 
     def __init__(self, model, *, backend: "AttendBackend | str | None" = None,
                  sampler: Optional[Sampler] = None, kv_block: int = 512,
-                 donate: bool = True):
+                 donate: bool = True, mesh=None):
         self.model = model
-        self.backend = (
-            None if backend is None else AttendBackend.parse(backend)
+        self.backend = resolve_mesh_backend(
+            None if backend is None else AttendBackend.parse(backend), mesh
         )
         self.sampler = sampler if sampler is not None else GREEDY
         self.kv_block = kv_block
         self.donate = donate
+        self.mesh = mesh
         self._prefill = jax.jit(
-            self._prefill_impl, donate_argnums=(2,) if donate else ()
+            self._traced(self._prefill_impl),
+            donate_argnums=(2,) if donate else (),
         )
         self._decode_fns: dict[int, Any] = {}
         self._generate_fns: dict[int, Any] = {}
         self._spec_fns: dict[tuple, Any] = {}
 
     # ------------------------------------------------------------- internals
+    def _traced(self, fn):
+        """Wrap a to-be-jitted callable so tracing runs under the
+        serve_exact activation policy when the engine has a mesh
+        (identity otherwise; compiled calls are unaffected)."""
+        if self.mesh is None:
+            return fn
+
+        def inner(*args):
+            with _serve_policy_ctx(self.mesh):
+                return fn(*args)
+
+        return inner
+
+    def shard_params(self, params):
+        """Replicate params across the mesh (DESIGN.md §16: decode is
+        KV-bandwidth-bound; replicated weights keep every projection a
+        full-width, bit-exact matmul).  Identity without a mesh."""
+        if self.mesh is None:
+            return params
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        rep = NamedSharding(self.mesh, PartitionSpec())
+        return jax.device_put(params, jax.tree.map(lambda _: rep, params))
+
+    def shard_cache(self, cache, *, allow_split_k: bool = False):
+        """Lay a cache pytree out across the mesh: KV heads over
+        'model' where divisible, replication otherwise (the serving
+        ladder -- partitioning.serve_cache_specs).  Donation preserves
+        the layout through every subsequent dispatch.  Identity without
+        a mesh."""
+        if self.mesh is None:
+            return cache
+        from repro.launch import partitioning as pt
+
+        specs = pt.serve_cache_specs(
+            cache, self.mesh, allow_split_k=allow_split_k
+        )
+        return jax.device_put(cache, pt.make_shardings(specs, self.mesh))
+
     def _prefill_impl(self, params, prompt, cache):
         if isinstance(prompt, tuple):
             return self.model.prefill(params, *prompt, cache)
@@ -216,7 +287,8 @@ class Engine:
                 )
                 return toks, cache
 
-            fn = jax.jit(run, donate_argnums=(2,) if self.donate else ())
+            fn = jax.jit(self._traced(run),
+                         donate_argnums=(2,) if self.donate else ())
             self._decode_fns[n_tokens] = fn
         if key is None:
             key = jax.random.PRNGKey(0)
@@ -242,7 +314,8 @@ class Engine:
                 )
                 return jnp.concatenate([tok0, toks], axis=1), cache
 
-            fn = jax.jit(run, donate_argnums=(2,) if self.donate else ())
+            fn = jax.jit(self._traced(run),
+                         donate_argnums=(2,) if self.donate else ())
             self._generate_fns[n_tokens] = fn
         if key is None:
             key = jax.random.PRNGKey(0)
@@ -358,7 +431,8 @@ class Engine:
                 return out_buf[:, :n_tokens], cache, {"drafted": nd,
                                                       "accepted": na}
 
-            fn = jax.jit(run, donate_argnums=(2,) if self.donate else ())
+            fn = jax.jit(self._traced(run),
+                         donate_argnums=(2,) if self.donate else ())
             self._spec_fns[sig] = fn
         if key is None:
             key = jax.random.PRNGKey(0)

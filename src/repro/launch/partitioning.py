@@ -29,9 +29,26 @@ __all__ = [
     "param_specs",
     "batch_specs",
     "cache_specs",
+    "serve_cache_specs",
     "make_shardings",
     "STACKED_PREFIXES",
 ]
+
+# cache pytree fields that carry K/V content.  Layouts all place the KV
+# head axis third from last:
+#   dense seq-major   (L, B, Hkv, S, c)      -- head -3, seq -2
+#   residual rings    (L, B, Hkv, W, d)      -- head -3 (W is a ring, not seq)
+#   paged pools       (L, NP, Hkv, ps, c)    -- head -3 (ps is within-page)
+_SEQ_MAJOR_FIELDS = frozenset(
+    ("k_packed", "k_scales", "v_packed", "v_scales", "k", "v",
+     "k_codes", "v_codes")
+)
+_RESIDUAL_FIELDS = frozenset(("k_residual", "v_residual"))
+# paging / scheduler metadata: every shard needs the same copy (the page
+# table routes positions to physical pages identically on all devices)
+_REPLICATED_FIELDS = frozenset(
+    ("page_table", "refcount", "length", "pos")
+)
 
 # param-tree keys whose leaves carry leading layer-stack axes
 STACKED_PREFIXES = {
@@ -140,6 +157,19 @@ def cache_specs(cache_shapes, mesh):
         # per-layer d x d constants -- always replicated
         if "rot_k" in names or "rot_v" in names:
             return P()
+        # paging/scheduler metadata is identical on every shard
+        if any(n in _REPLICATED_FIELDS for n in names if n):
+            return P()
+        # paged-pool leaves (core/paged.py): (L, NP, Hkv, ps, c) pools and
+        # (L, B, Hkv, W, d) residual rings -- shard the KV head axis (-3)
+        # over 'model' when divisible, else replicate.  Never the page,
+        # within-page, window or packed-channel axes: those are the
+        # storage layout the write/read scatters address shard-locally.
+        if any(n == "pools" or n == "residual" for n in names):
+            assign = [None] * len(shape)
+            if len(shape) >= 3 and shape[-3] % msize == 0:
+                assign[len(shape) - 3] = "model"
+            return P(*assign)
         # find the batch dim: first dim after stack dims; stack depth from
         # the cache dict key (attn caches are vmapped once; hybrid ssm_super
         # twice).  Heuristic: cache arrays are (L, B, ...) or (L, P, B, ...)
@@ -151,12 +181,13 @@ def cache_specs(cache_shapes, mesh):
         b_dim = skip
         seq_dim = None
         head_dim_idx = None
-        if field in ("k_packed", "k_scales", "v_packed", "v_scales", "k", "v",
-                     "k_codes", "v_codes"):
-            head_dim_idx = skip + 1
-            seq_dim = skip + 2
-        elif field in ("k_residual", "v_residual"):
-            head_dim_idx = skip + 1
+        # rank guards: a KV field name on an unexpectedly low-rank leaf
+        # degrades to the generic rule rather than indexing off the end
+        if field in _SEQ_MAJOR_FIELDS:
+            head_dim_idx = skip + 1 if len(shape) > skip + 1 else None
+            seq_dim = skip + 2 if len(shape) > skip + 2 else None
+        elif field in _RESIDUAL_FIELDS:
+            head_dim_idx = skip + 1 if len(shape) > skip + 1 else None
         if shape[b_dim] % dsize == 0:
             assign[b_dim] = daxes if len(daxes) > 1 else daxes[0]
         model_placed = False
@@ -181,6 +212,62 @@ def cache_specs(cache_shapes, mesh):
             ]
             if cands:
                 assign[max(cands, key=lambda i: shape[i])] = "model"
+        return P(*assign)
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_shapes)
+
+
+def serve_cache_specs(cache_shapes, mesh, *, allow_split_k: bool = False):
+    """Serving-grade cache shardings (DESIGN.md §16): bit-exact by
+    construction.
+
+    The batch engine's scheduler state is replicated -- any device must
+    be able to own any slot, since admission/retirement/preemption remap
+    rows dynamically -- so the ladder here never touches the batch axis:
+
+      1. KV head axis -> 'model' when divisible.  Attention is
+         embarrassingly parallel over KV heads (no cross-shard
+         reduction), so per-row token streams and cache bytes are
+         bit-identical to a single-device run.
+      2. ``allow_split_k=True`` only: the sequence axis of dense
+         seq-major leaves takes 'model' (flash-decode split-K).  This
+         COMPILES everywhere but re-associates the softmax reduction,
+         so it is numerically correct yet NOT bit-exact -- long-context
+         throughput mode, excluded from the bit-identity claim.
+      3. Replication (always bit-exact).
+
+    Residual rings (the int4 O(W) fp32 window), page tables, allocator
+    refcounts, lengths and rotations are never sharded: they are either
+    O(W)/O(B) small or must be identical on every shard for the
+    host-side mirrors (``np.asarray`` readbacks) to see the same
+    allocator state the device scatters assumed.
+    """
+    msize = _axis_size(mesh, "model") if "model" in mesh.axis_names else 1
+
+    def spec_for(path, leaf):
+        shape = leaf.shape
+        names = [getattr(p, "name", getattr(p, "key", "")) for p in path]
+        field = names[-1] if names else ""
+        if not shape or len(shape) < 3 or msize <= 1:
+            return P()
+        if "rot_k" in names or "rot_v" in names:
+            return P()
+        if any(n in _REPLICATED_FIELDS for n in names if n):
+            return P()
+        kv_bearing = (
+            field in _SEQ_MAJOR_FIELDS or field in _RESIDUAL_FIELDS
+            or any(n == "pools" or n == "residual" for n in names)
+        )
+        if not kv_bearing:
+            return P()
+        assign: list = [None] * len(shape)
+        if shape[-3] % msize == 0:
+            assign[len(shape) - 3] = "model"  # KV heads: exact
+        elif allow_split_k and field in _SEQ_MAJOR_FIELDS \
+                and shape[-2] % msize == 0:
+            assign[len(shape) - 2] = "model"  # split-K: not bit-exact
+        if not any(a is not None for a in assign):
+            return P()  # normalized: replication is ALWAYS spelled P()
         return P(*assign)
 
     return jax.tree_util.tree_map_with_path(spec_for, cache_shapes)

@@ -164,6 +164,14 @@ def main():
                          "keeps the exact-match prefix -- greedy only, "
                          "output bit-identical to plain decode (int4: "
                          "K must be <= the flush window W)")
+    ap.add_argument("--mesh", default=None,
+                    help="shard serving over N devices ('auto' = all "
+                         "visible): KV pools/slot caches split by KV "
+                         "head over a 'model' mesh axis, params and "
+                         "scheduler state replicated -- token streams "
+                         "stay bit-identical to single-device "
+                         "(DESIGN.md §16).  Heads not divisible by N "
+                         "degrade to replication, never an error")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature (0 = greedy)")
     ap.add_argument("--top-k", type=int, default=0,
@@ -247,6 +255,7 @@ def main():
 
     sampler = Sampler(temperature=args.temperature, top_k=args.top_k)
     key = jax.random.PRNGKey(args.seed + 2)
+    mesh = _build_mesh(args.mesh)
     ragged_ok = cfg.kv_applicable and cfg.family in ("dense", "moe", "vlm")
     if not ragged_ok:
         it = DataIterator(SyntheticCorpus(args.seed + 1),
@@ -254,7 +263,8 @@ def main():
                           seq_len=args.prompt_len)
         prompt = jnp.asarray(it.next()["tokens"])
         return _serve_single_stream(cfg, model, params, prompt, policy,
-                                    backend, sampler, args, key, rots)
+                                    backend, sampler, args, key, rots,
+                                    mesh=mesh)
 
     window = getattr(policy, "window", 1) if policy is not None else 1
     s_max = args.s_max
@@ -275,7 +285,7 @@ def main():
         prefill_chunk=args.prefill_chunk,
         prefill_budget=args.prefill_budget,
         offload_bytes=args.offload_bytes, offload_dir=args.offload_dir,
-        spec_k=args.spec_k, trace=trace,
+        spec_k=args.spec_k, trace=trace, mesh=mesh,
     )
     _install_flight_recorder(trace, args)
     pname = policy.name if policy is not None else "-"
@@ -291,8 +301,11 @@ def main():
     mode = "http/sse pipeline" if args.http else "closed-loop queue"
     spec = (f" spec-k={args.spec_k} (self-speculative, bit-identical)"
             if args.spec_k else "")
+    if mesh is not None:
+        mode += (f"; mesh-sharded x{mesh.shape['model']} "
+                 f"(KV by head, bit-identical)")
     print(f"[serve] arch={cfg.name} policy={pname} "
-          f"backend={backend.value} max-batch={args.max_batch} "
+          f"backend={engine.backend.value} max-batch={args.max_batch} "
           f"new={args.new_tokens} chunk={args.chunk}{spec} "
           f"({mode}; continuous batching: {layout}, {admission}, "
           f"donated scan chunks)")
@@ -300,6 +313,32 @@ def main():
     if args.http:
         return _serve_http(cfg, engine, policy, args)
     return _serve_queue(engine, policy, args)
+
+
+def _build_mesh(arg):
+    """--mesh N | auto -> a (1, N) ('data','model') device mesh.
+
+    The serving mesh only ever shards over 'model' (KV heads); 'data'
+    exists so the same partitioning rules the training tools use apply
+    unchanged.  N=1 (or a single-device host) means no mesh at all --
+    the engines take the exact single-device code path.
+    """
+    if arg is None:
+        return None
+    devs = jax.devices()
+    n = len(devs) if arg == "auto" else int(arg)
+    if n <= 1:
+        return None
+    if n > len(devs):
+        raise SystemExit(
+            f"error: --mesh {n} asks for more devices than the "
+            f"{len(devs)} visible (set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n} "
+            f"to simulate a mesh on CPU)"
+        )
+    from jax.sharding import Mesh
+
+    return Mesh(np.array(devs[:n]).reshape(1, n), ("data", "model"))
 
 
 def _install_flight_recorder(trace: TraceRecorder, args) -> None:
@@ -510,7 +549,7 @@ def _cache_report(policy, state, *, engine=None, indent="  ") -> dict:
 
 
 def _serve_single_stream(cfg, model, params, prompt, policy, backend,
-                         sampler, args, key, rots=None):
+                         sampler, args, key, rots=None, mesh=None):
     """Recurrent-state families: fused single-stream engine (no ragged
     slot semantics for ssm/hybrid caches yet)."""
     if getattr(args, "spec_k", None):
@@ -538,7 +577,10 @@ def _serve_single_stream(cfg, model, params, prompt, policy, backend,
     prompt = prompt[:batch]
     cache = model.init_cache(batch, s_max, policy=policy, rots=rots,
                              key=jax.random.PRNGKey(7))
-    engine = Engine(model, backend=backend, sampler=sampler)
+    engine = Engine(model, backend=backend, sampler=sampler, mesh=mesh)
+    if mesh is not None:
+        params = engine.shard_params(params)
+        cache = engine.shard_cache(cache)
 
     t0 = time.time()
     logits, cache = engine.prefill(params, prompt, cache)

@@ -209,6 +209,15 @@ def cache_report_data(policy, state, engine=None) -> dict:
         "total_bytes": int(state.nbytes(persistent_only=False)),
         "compression_ratio": float(policy.compression_ratio(state)),
     }
+    per_shard = int(state.nbytes(persistent_only=False, per_shard=True))
+    if per_shard != out["total_bytes"]:
+        # mesh-sharded cache (DESIGN.md §16): also report one device's
+        # resident footprint (KV shrinks by the shard count, replicated
+        # paging metadata does not)
+        out["per_shard_bytes"] = per_shard
+        out["per_shard_persistent_bytes"] = int(
+            policy.nbytes(state, per_shard=True)
+        )
     stats = engine.pool_stats() if engine is not None else None
     if stats:
         out["pool"] = stats

@@ -53,6 +53,13 @@ def _project_qkv(p, x, cfg, positions):
     if cfg.rope_theta:
         q = common.apply_rope(q, positions, cfg.rope_theta)
         k = common.apply_rope(k, positions, cfg.rope_theta)
+    # under the serve_exact mesh policy (launch/act_sharding, DESIGN.md
+    # §16) these pin the projections replicated -- full-width matmuls,
+    # bit-identical to a single device -- so only the attend against the
+    # head-sharded cache is computed per shard.  Identity otherwise.
+    q = common.shard_hint(q, "qkv_proj")
+    k = common.shard_hint(k, "qkv_proj")
+    v = common.shard_hint(v, "qkv_proj")
     return q, k, v
 
 
@@ -60,6 +67,10 @@ def _merge_heads(p, o):
     """(B,H,S,hd) -> (B,S,d) via output projection."""
     B, H, S, hd = o.shape
     o = o.transpose(0, 2, 1, 3).reshape(B, S, H * hd)
+    # serve_exact: all-gather the per-shard head outputs (exact data
+    # movement) so ``wo`` contracts at full width instead of summing
+    # partial products across shards; identity without an active policy
+    o = common.shard_hint(o, "attn_out")
     return common.dense(p["wo"], o)
 
 

@@ -1,8 +1,48 @@
 import os
 import sys
 
+import pytest
+
 # src/ layout import without install
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 # Smoke tests and benches must see exactly ONE device; the dry-run sets its
 # own XLA_FLAGS (512 host devices) in its own process.  Never set that here.
+# The sharded-serving lane (tests/test_sharded_serving.py) runs in its own
+# pytest invocation with XLA_FLAGS=--xla_force_host_platform_device_count=8
+# exported by the caller (CI: the mesh-smoke job) BEFORE jax is imported --
+# the needs_devices marker below makes it skip cleanly everywhere else.
+
+
+@pytest.fixture(scope="session")
+def device_count() -> int:
+    """Visible jax device count (imports jax lazily so collecting the
+    fast lane does not initialize a backend earlier than the tests
+    themselves would)."""
+    import jax
+
+    return jax.device_count()
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "needs_devices(n): skip unless at least n jax devices are "
+        "visible (the sharded lane exports "
+        "XLA_FLAGS=--xla_force_host_platform_device_count=8 before "
+        "running pytest; the fast lane stays single-device and skips)",
+    )
+
+
+def pytest_runtest_setup(item):
+    marker = item.get_closest_marker("needs_devices")
+    if marker is None:
+        return
+    need = marker.args[0] if marker.args else 2
+    import jax
+
+    have = jax.device_count()
+    if have < need:
+        pytest.skip(f"needs {need} jax devices, have {have} (export "
+                    f"XLA_FLAGS=--xla_force_host_platform_device_count="
+                    f"{need} before pytest)")

@@ -232,3 +232,204 @@ def test_property_rotation_roundtrip_random_shapes(d_exp, n, lam_exp, seed):
 def test_grid_rotation_orthonormal(d_exp, kind):
     _check_rotation_orthonormal(d_exp, kind, seed=11)
     _check_rotation_roundtrip(d_exp, n=4, lam_exp=1, seed=11)
+
+
+# ---------------------------------------------------------------------------
+# partitioning rules (DESIGN.md §4/§16): total, degradable, exact
+# ---------------------------------------------------------------------------
+#
+# The spec functions are pure shape logic, so these properties run on a
+# single device against a stub mesh (axis_names + shape is all they
+# read); the device round-trip at the end needs a real simulated mesh
+# and rides the mesh-smoke lane via needs_devices.
+
+from types import SimpleNamespace  # noqa: E402
+
+from jax.sharding import PartitionSpec  # noqa: E402
+
+_KV_FIELDS = ("k_packed", "k_scales", "v_packed", "v_scales", "k", "v",
+              "k_codes", "v_codes")
+
+
+def _stub_mesh(data=4, model=2):
+    return SimpleNamespace(axis_names=("data", "model"),
+                           shape={"data": data, "model": model})
+
+
+def _spec_is_valid(spec, shape, mesh) -> bool:
+    """What NamedSharding construction + GSPMD would demand: one mesh
+    axis used at most once, every assigned dim divisible by its axis."""
+    if len(spec) > len(shape):
+        return False
+    used = []
+    for i, ax in enumerate(spec):
+        if ax is None:
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        for a in axes:
+            if a in used:
+                return False
+            used.append(a)
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        if shape[i] % size != 0:
+            return False
+    return True
+
+
+def _check_serve_specs_total_and_degradable(L, hkv, s, extra, model, seed):
+    """serve_cache_specs: EVERY leaf gets a spec (total); non-divisible
+    head counts degrade (replication or -- never -- a bad axis); head
+    divisibility puts 'model' exactly on axis -3; batch/metadata never
+    sharded."""
+    from repro.launch import partitioning as pt
+
+    mesh = _stub_mesh(model=model)
+    rng = np.random.default_rng(seed)
+    field = _KV_FIELDS[rng.integers(len(_KV_FIELDS))]
+    tree = {
+        "attn": {
+            field: jax.ShapeDtypeStruct((L, 2, hkv, s, extra), jnp.uint8),
+            "k_residual": jax.ShapeDtypeStruct((L, 2, hkv, 16, extra),
+                                               jnp.float32),
+            "length": jax.ShapeDtypeStruct((2,), jnp.int32),
+            "page_table": jax.ShapeDtypeStruct((2, 8), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+            "other_state": jax.ShapeDtypeStruct((L, 2, 8), jnp.float32),
+        }
+    }
+    specs = pt.serve_cache_specs(tree, mesh)
+    flat = jax.tree_util.tree_leaves_with_path(
+        specs, is_leaf=lambda x: isinstance(x, PartitionSpec))
+    assert len(flat) == len(jax.tree_util.tree_leaves(tree))
+    for pth, spec in flat:
+        name = pth[-1].key
+        shape = tree["attn"][name].shape
+        assert isinstance(spec, PartitionSpec)
+        assert _spec_is_valid(spec, shape, mesh), (name, spec)
+        if name in ("length", "page_table", "pos", "other_state"):
+            assert spec == PartitionSpec(), f"{name} must replicate"
+        elif hkv % model == 0 and model > 1:
+            assert len(spec) == 5 and spec[2] == "model", (name, spec)
+            assert spec[0] is None and spec[1] is None  # stack/batch
+        else:
+            assert spec == PartitionSpec(), \
+                f"non-divisible {name} must DEGRADE to replication"
+
+
+def _check_split_k_opt_in(model, s, seed):
+    """allow_split_k: only dense seq-major leaves take the seq axis, and
+    only when heads failed; residual rings never shard their window."""
+    from repro.launch import partitioning as pt
+
+    mesh = _stub_mesh(model=model)
+    hkv = model + 1 if model > 1 else 3  # force the head rung to fail
+    tree = {
+        "k_packed": jax.ShapeDtypeStruct((2, 1, hkv, s, 8), jnp.uint8),
+        "k_residual": jax.ShapeDtypeStruct((2, 1, hkv, s, 8), jnp.float32),
+    }
+    specs = pt.serve_cache_specs(tree, mesh, allow_split_k=True)
+    if s % model == 0 and model > 1:
+        assert specs["k_packed"][3] == "model"
+    else:
+        assert specs["k_packed"] == PartitionSpec()
+    assert specs["k_residual"] == PartitionSpec(), \
+        "residual rings must never split their window axis"
+
+
+def _check_auto_cache_specs_never_invalid(shape, model, data, seed):
+    """auto_spec/cache_specs on arbitrary shapes: always a valid spec
+    (divisibility respected, axes unique) -- compile success is never
+    hostage to a rule."""
+    from repro.launch import partitioning as pt
+
+    shape = tuple(shape)
+    mesh = _stub_mesh(data=data, model=model)
+    spec = pt.auto_spec(shape, mesh)
+    assert _spec_is_valid(spec, shape, mesh), (shape, spec)
+    rng = np.random.default_rng(seed)
+    field = _KV_FIELDS[rng.integers(len(_KV_FIELDS))]
+    if len(shape) >= 2:
+        tree = {"attn": {field: jax.ShapeDtypeStruct(shape, jnp.uint8)}}
+        for _, s2 in jax.tree_util.tree_leaves_with_path(
+            pt.cache_specs(tree, mesh),
+            is_leaf=lambda x: isinstance(x, PartitionSpec),
+        ):
+            assert _spec_is_valid(s2, shape, mesh), (shape, s2)
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(
+    L=st.integers(1, 4),
+    hkv=st.integers(1, 9),
+    s=st.integers(1, 65),
+    extra=st.sampled_from([1, 8, 32]),
+    model=st.sampled_from([1, 2, 3, 4, 8]),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_property_serve_specs_total_and_degradable(L, hkv, s, extra,
+                                                   model, seed):
+    _check_serve_specs_total_and_degradable(L, hkv, s, extra, model, seed)
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(
+    model=st.sampled_from([2, 3, 4, 8]),
+    s=st.integers(1, 65),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_property_split_k_is_opt_in(model, s, seed):
+    _check_split_k_opt_in(model, s, seed)
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(
+    shape=st.lists(st.integers(1, 24), min_size=0, max_size=5),
+    model=st.sampled_from([1, 2, 4]),
+    data=st.sampled_from([1, 2, 4]),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_property_auto_and_cache_specs_always_valid(shape, model, data,
+                                                    seed):
+    _check_auto_cache_specs_never_invalid(shape, model, data, seed)
+
+
+@pytest.mark.parametrize("hkv,model", [(1, 2), (2, 2), (3, 2), (4, 2),
+                                       (2, 8), (8, 8)])
+def test_grid_serve_specs(hkv, model):
+    _check_serve_specs_total_and_degradable(2, hkv, 32, 8, model, seed=3)
+    _check_split_k_opt_in(model, 32, seed=3)
+    _check_auto_cache_specs_never_invalid((2, 1, hkv, 32, 8), model, 2,
+                                          seed=3)
+
+
+@pytest.mark.needs_devices(8)
+def test_sharded_cache_bytes_round_trip_exactly():
+    """device_put under serve_cache_specs then gather == identity, byte
+    for byte, for a REAL int4 paged cache on a real simulated mesh --
+    sharding is data movement, never a rewrite."""
+    from jax.sharding import Mesh
+
+    from repro.core.cache_api import get_policy
+    from repro.launch import partitioning as pt
+
+    mesh = Mesh(np.array(jax.devices()).reshape(4, 2), ("data", "model"))
+    pol = get_policy("int4-srft", group=32, window=16)
+    # fill a paged state with real (non-zero) bytes before the round
+    # trip: prefill a dense batch-1 ragged row, admit it into the pool
+    row = pol.init_state(1, 2, 64, 64, key=jax.random.PRNGKey(0),
+                         ragged=True)
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 2, 33, 64))
+    row = pol.prefill(row, k, -k)
+    state = pol.init_paged(2, 2, 64, 64, key=jax.random.PRNGKey(0),
+                           n_pages=9, page_size=16)
+    state = pol.insert_row_paged(
+        state, row, 0, jnp.zeros((4,), jnp.int32), jnp.asarray(0),
+        jnp.asarray(3),
+    )
+    before = [(jax.tree_util.keystr(p), np.asarray(x).copy())
+              for p, x in jax.tree_util.tree_leaves_with_path(state)]
+    sharded = jax.device_put(state, pt.make_shardings(
+        pt.serve_cache_specs(state, mesh), mesh))
+    after = jax.tree_util.tree_leaves_with_path(sharded)
+    for (name, b), (_, a) in zip(before, after):
+        np.testing.assert_array_equal(b, np.asarray(a), err_msg=name)
